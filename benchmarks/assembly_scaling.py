@@ -1,0 +1,17 @@
+"""Paper Fig. 5: weak-scaled assembly speedup — A baseline vs B
+overdecomposed vs C overdecomposed + CCM-LB, at 3 rank counts."""
+from __future__ import annotations
+
+
+from repro.assembly import run_assembly_comparison
+
+
+def run(report):
+    for n_unknowns, ranks in ((2048, 8), (4096, 16), (8192, 32)):
+        r = run_assembly_comparison(n_unknowns=n_unknowns, num_ranks=ranks,
+                                    durations="analytic", seed=0)
+        report(f"fig5_ranks_{ranks}", r.makespan_ccmlb * 1e6,
+               f"unknowns={n_unknowns} tasks={r.problem.num_tasks} "
+               f"speedup_B={r.speedup_overdecomposed:.2f}x "
+               f"speedup_C={r.speedup_ccmlb:.2f}x "
+               f"imb {r.imbalance_before:.2f}->{r.imbalance_after:.3f}")

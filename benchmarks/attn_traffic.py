@@ -1,0 +1,83 @@
+"""§Perf evidence: measure how much of a cell's HLO byte traffic is
+attention-score-shaped — i.e. tensors with an (S, S) trailing pair — and
+project the memory term with the Pallas flash kernel substituted (the kernel
+keeps score tiles in VMEM; its HBM traffic is Q+K+V+O only).
+
+  PYTHONPATH=src python -m benchmarks.attn_traffic --arch smollm-360m
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import re  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import lower_cell  # noqa: E402
+from repro.roofline import _DTYPE_BYTES, HBM_BW  # noqa: E402
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]+)\]")
+
+
+def score_shaped_bytes(hlo_text: str, seq: int) -> tuple:
+    """(total op-output bytes, score-shaped op-output bytes)."""
+    total = 0
+    score = 0
+    for line in hlo_text.splitlines():
+        m = re.match(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
+                     r"\(?([a-z0-9]+)\[([\d,]+)\]", line)
+        if not m:
+            continue
+        dtype, dims = m.groups()
+        if dtype not in _DTYPE_BYTES:
+            continue
+        sizes = [int(x) for x in dims.split(",")]
+        n = 1
+        for s in sizes:
+            n *= s
+        nbytes = n * _DTYPE_BYTES[dtype]
+        total += nbytes
+        # score-shaped: the last two dims are both >= seq/64 fractions of the
+        # sequence (covers sharded (S, S/16) layouts too)
+        if len(sizes) >= 2 and sizes[-1] * sizes[-2] >= (seq * seq) // 32:
+            score += nbytes
+    return total, score
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--shape", default="train_4k")
+    args = ap.parse_args()
+    cfg = dataclasses.replace(configs.get_config(args.arch),
+                              unroll_stack=True)
+    shape = configs.get_shape(args.shape)
+    mesh = make_production_mesh()
+    lowered = lower_cell(cfg, shape, mesh)
+    compiled = lowered.compile()
+    text = compiled.as_text()
+    ca = compiled.cost_analysis()
+    bytes_accessed = float(ca.get("bytes accessed", 0.0))
+    total, score = score_shaped_bytes(text, shape.seq_len)
+    frac = score / max(total, 1)
+    # flash substitution: per (layer, direction) q/k/v/o streams only
+    b_loc = shape.global_batch // int(mesh.shape["data"])
+    flash_bytes = (4 * b_loc * shape.seq_len * cfg.num_heads * cfg.head_dim
+                   * 2 * cfg.num_layers * 3)  # fwd+bwd+remat
+    projected = bytes_accessed * (1 - frac) + flash_bytes
+    print(f"arch={args.arch} shape={args.shape}")
+    print(f"bytes_accessed/dev           : {bytes_accessed:.3e}")
+    print(f"score-shaped fraction of HLO : {frac:.2%}")
+    print(f"flash-kernel attn bytes/dev  : {flash_bytes:.3e}")
+    print(f"projected bytes w/ kernel    : {projected:.3e}")
+    print(f"memory term: {bytes_accessed / HBM_BW:.2f}s -> "
+          f"{projected / HBM_BW:.2f}s "
+          f"({bytes_accessed / projected:.1f}x)")
+
+
+if __name__ == "__main__":
+    main()

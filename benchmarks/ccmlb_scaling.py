@@ -1,0 +1,40 @@
+"""§IV scalability: CCM-LB solve time + quality vs rank count / fanout /
+rounds (the paper reports <0.7 s at 14 ranks; we sweep up to 256)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import CCMParams, CCMState, ccm_lb, random_phase
+from repro.core.problem import initial_assignment
+
+
+def run(report):
+    params = CCMParams(delta=1e-9)
+    for ranks in (16, 64, 256):
+        phase = random_phase(1, num_ranks=ranks, num_tasks=25 * ranks,
+                             num_blocks=3 * ranks, num_comms=50 * ranks,
+                             mem_cap=1e12)
+        a0 = initial_assignment(phase)
+        st0 = CCMState.build(phase, a0, params)
+        t0 = time.perf_counter()
+        res = ccm_lb(phase, a0, params, n_iter=4, k_rounds=2, fanout=4,
+                     seed=0)
+        dt = time.perf_counter() - t0
+        mean = phase.task_load.sum() / ranks
+        report(f"ccmlb_ranks_{ranks}", dt * 1e6,
+               f"imb {st0.imbalance():.2f}->{res.imbalance[-1]:.4f} "
+               f"Wmax/mean={res.max_work[-1]/mean:.4f} "
+               f"transfers={res.transfers}")
+    # fanout/round sweep at 64 ranks
+    phase = random_phase(2, num_ranks=64, num_tasks=1600, num_blocks=192,
+                         num_comms=3200, mem_cap=1e12)
+    a0 = initial_assignment(phase)
+    for fanout, rounds in ((2, 1), (4, 2), (8, 3)):
+        t0 = time.perf_counter()
+        res = ccm_lb(phase, a0, params, n_iter=3, k_rounds=rounds,
+                     fanout=fanout, seed=0)
+        dt = time.perf_counter() - t0
+        report(f"ccmlb_f{fanout}_k{rounds}", dt * 1e6,
+               f"imb_after={res.imbalance[-1]:.4f} transfers={res.transfers}")

@@ -1,0 +1,35 @@
+"""Paper §VI-D: cost-model prediction quality, with/without Algorithm 1
+data reduction and the under-penalized loss."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.assembly import build_problem
+from repro.assembly.execute import analytic_durations
+from repro.costmodel import train_cost_model
+from repro.costmodel.train import evaluate_cost_model
+
+
+def run(report):
+    rng = np.random.default_rng(0)
+    train_p = build_problem(2048, 8, seed=1, task_limit_u=32)
+    test_p = build_problem(2048, 8, seed=2, task_limit_u=32)
+    x, y = train_p.features(), analytic_durations(train_p)
+    y = y * rng.lognormal(0, 0.08, y.shape)   # machine noise
+    xt, yt = test_p.features(), analytic_durations(test_p)
+    for name, kwargs in (
+        ("underpen_reduced", dict(alpha=0.3, reduce_to=int(0.6 * len(y)))),
+        ("underpen_full", dict(alpha=0.3)),
+        ("plain_rmse", dict(alpha=1.0)),
+    ):
+        t0 = time.perf_counter()
+        model, _ = train_cost_model(x, y, epochs=80, batch_size=128, seed=0,
+                                    **kwargs)
+        dt = time.perf_counter() - t0
+        m = evaluate_cost_model(model, xt, yt)
+        report(f"costmodel_{name}", dt * 1e6,
+               f"rel_err_med={m['rel_err_median']:.3f} "
+               f"over_frac={m['over_predict_frac']:.2f} "
+               f"rmse={m['rmse']:.2e}")

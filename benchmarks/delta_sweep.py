@@ -1,0 +1,23 @@
+"""Paper Fig. 4b: effect of delta on blocks computed off-home, homing
+transfer time, and compute time, on the assembly application."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.assembly import run_assembly_comparison
+from repro.core import CCMParams
+
+
+def run(report):
+    prev_off = None
+    for delta in (1e-8, 1e-9, 1e-10, 0.0):
+        params = CCMParams(alpha=1.0, beta=2e-10, gamma=1e-12, delta=delta)
+        r = run_assembly_comparison(n_unknowns=2048, num_ranks=16,
+                                    durations="analytic", ccm_params=params,
+                                    seed=0)
+        homing_t = r.homing.est_time_s if r.homing else 0.0
+        waves = len(r.homing.waves) if r.homing else 0
+        report(f"fig4b_delta_{delta:g}", r.makespan_ccmlb * 1e6,
+               f"n_off_home={r.n_off_home_ranks} homing_s={homing_t:.2e} "
+               f"waves={waves} imb={r.imbalance_after:.3f}")
+        prev_off = r.n_off_home_ranks

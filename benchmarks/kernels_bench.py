@@ -1,0 +1,60 @@
+"""Beyond paper: Pallas kernels vs jnp reference — interpret-mode correctness
+timing is meaningless on CPU, so we report HLO cost-model FLOPs/bytes of the
+kernel lowering vs the reference lowering plus wall time of the jnp oracle
+(the portable path the dry-run uses)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    best = np.inf
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(report):
+    key = jax.random.key(0)
+    # flash attention oracle cost at a train_4k-like per-device shape
+    from repro.kernels.flash.ref import reference_attention
+    b, s, h, hd = 4, 1024, 8, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b * h, s, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b * h, s, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b * h, s, hd), jnp.float32)
+    ref = jax.jit(lambda q, k, v: reference_attention(q, k, v, causal=True))
+    dt = _time(ref, q, k, v)
+    lowered = jax.jit(ref).lower(q, k, v).compile()
+    ca = lowered.cost_analysis()
+    report("flash_ref_b4s1024", dt * 1e6,
+           f"hlo_flops={ca.get('flops', 0):.3e} "
+           f"bytes={ca.get('bytes accessed', 0):.3e}")
+
+    from repro.kernels.rwkv6.ref import reference_wkv6
+    bh, s2, hd2 = 8, 512, 64
+    ks = jax.random.split(key, 4)
+    r_ = jax.random.normal(ks[0], (bh, s2, hd2)) * 0.5
+    k_ = jax.random.normal(ks[1], (bh, s2, hd2)) * 0.5
+    v_ = jax.random.normal(ks[2], (bh, s2, hd2))
+    lw = -jnp.exp(jax.random.normal(ks[3], (bh, s2, hd2)))
+    u = jnp.zeros((bh, hd2))
+    ref2 = jax.jit(reference_wkv6)
+    dt = _time(ref2, r_, k_, v_, lw, u)
+    report("wkv6_ref_seqscan", dt * 1e6, f"bh={bh} s={s2} hd={hd2}")
+
+    from repro.assembly.execute import tile_kernel
+    pr = jax.random.uniform(ks[0], (96, 3))
+    pc = jax.random.uniform(ks[1], (96, 3))
+    couple = jnp.ones((96, 96), bool)
+    for qo in (4, 64, 192):
+        dt = _time(lambda a, b, c: tile_kernel(a, b, c, qo), pr, pc, couple)
+        report(f"assembly_tile_q{qo}", dt * 1e6,
+               f"flops~{96*96*qo*8:.2e}")

@@ -1,0 +1,33 @@
+"""§Roofline: summarize the dry-run results (benchmarks/results/dryrun.json)
+into the per-(arch x shape x mesh) roofline table.  The dry-run itself runs
+as a separate process (512 placeholder devices); this module only reads its
+artifact so `python -m benchmarks.run` stays a 1-device program."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun.json"
+
+
+def run(report):
+    if not RESULTS.exists():
+        report("roofline_missing", 0.0,
+               "run: PYTHONPATH=src python -m repro.launch.dryrun --all "
+               "--mesh both")
+        return
+    data = json.loads(RESULTS.read_text())
+    ok = {k: v for k, v in data.items() if v.get("ok")}
+    for key in sorted(ok):
+        rec = ok[key]
+        r = rec["roofline"]
+        name = f"roofline_{rec['arch']}_{rec['shape']}_{rec['mesh']}"
+        bound_us = r["bound_step_s"] * 1e6
+        report(name, bound_us,
+               f"dom={r['dominant']} comp={r['compute_s']:.2e} "
+               f"mem={r['memory_s']:.2e} coll={r['collective_s']:.2e} "
+               f"useful={r['useful_flops_ratio']:.2f} "
+               f"roofline_frac={r['roofline_fraction']:.3f}")
+    n_fail = len(data) - len(ok)
+    report("roofline_summary", 0.0,
+           f"cells_ok={len(ok)} cells_failed={n_fail}")

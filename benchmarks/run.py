@@ -1,0 +1,47 @@
+"""Benchmark harness: one module per paper table/figure (+ beyond-paper).
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig4a      # filter by substring
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (assembly_scaling, ccmlb_scaling, costmodel_eval,
+                        delta_sweep, expert_placement, kernels_bench,
+                        milp_vs_ccmlb, roofline)
+
+MODULES = [
+    ("fig4a_milp_vs_ccmlb", milp_vs_ccmlb),
+    ("fig4b_delta_sweep", delta_sweep),
+    ("fig5_assembly_scaling", assembly_scaling),
+    ("costmodel", costmodel_eval),
+    ("ccmlb_scaling", ccmlb_scaling),
+    ("kernels", kernels_bench),
+    ("expert_placement", expert_placement),
+    ("roofline", roofline),
+]
+
+
+def main() -> None:
+    filt = sys.argv[1] if len(sys.argv) > 1 else ""
+    print("name,us_per_call,derived")
+
+    def report(name: str, us: float, derived: str = ""):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    for name, mod in MODULES:
+        if filt and filt not in name:
+            continue
+        try:
+            mod.run(report)
+        except Exception:
+            traceback.print_exc()
+            report(f"{name}_FAILED", 0.0, "see stderr")
+
+
+if __name__ == "__main__":
+    main()

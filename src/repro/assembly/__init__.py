@@ -1,0 +1,2 @@
+from repro.assembly.driver import AssemblyRun, run_assembly_comparison  # noqa: F401
+from repro.assembly.problem import AssemblyProblem, build_problem  # noqa: F401

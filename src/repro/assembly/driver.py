@@ -1,0 +1,152 @@
+"""End-to-end assembly comparison (paper Fig. 5): A baseline / B
+overdecomposed / C overdecomposed + CCM-LB.
+
+A — the solver's native layout: every rank computes its full dense row-block,
+    including non-coupling (zero) entries, as one unsplittable unit;
+B — overdecomposed tasks co-located at their slab's home (zero tiles are
+    skipped — the paper's ~1.3x);
+C — CCM-LB redistributes the tasks using *predicted* durations from the cost
+    model; reported makespan uses the TRUE durations plus the wave-based
+    homing transfer time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.assembly.execute import analytic_durations, measure_durations
+from repro.assembly.homing import HomingPlan, plan_homing
+from repro.assembly.problem import AssemblyProblem, build_problem
+from repro.core import CCMParams, CCMState, ccm_lb
+from repro.core.problem import initial_assignment
+
+
+@dataclasses.dataclass
+class AssemblyRun:
+    problem: AssemblyProblem
+    durations_true: np.ndarray
+    durations_pred: np.ndarray
+    makespan_baseline: float          # A
+    makespan_overdecomposed: float    # B
+    makespan_ccmlb: float             # C (compute only)
+    homing: Optional[HomingPlan]      # C transfer phase
+    imbalance_before: float
+    imbalance_after: float
+    n_off_home_ranks: int
+    lb_result: object
+
+    @property
+    def speedup_overdecomposed(self) -> float:
+        return self.makespan_baseline / self.makespan_overdecomposed
+
+    @property
+    def speedup_ccmlb(self) -> float:
+        total_c = self.makespan_ccmlb + (self.homing.est_time_s
+                                         if self.homing else 0.0)
+        return self.makespan_baseline / total_c
+
+
+def baseline_makespan(problem: AssemblyProblem,
+                      flops_per_s: float = 2e9) -> float:
+    """Mode A: dense row-block per rank, zero entries computed too."""
+    geom = problem.geom
+    n = geom.n
+    worst = 0.0
+    for rows in problem.rank_rows:
+        # dense: every (row, col) pair at the tile's quadrature depth.
+        # approximate cost per row set: sum over column tiles of nr*nc*q.
+        cost = 0.0
+        for c0 in range(0, n, 512):
+            csel = np.arange(c0, min(c0 + 512, n))
+            pr = geom.points[rows]
+            pc = geom.points[csel]
+            d = np.sqrt(((pr[:, None] - pc[None]) ** 2).sum(-1))
+            dmin = d.min() if d.size else np.inf
+            q = (192 if dmin < 0.005 else 64 if dmin < 0.05
+                 else 16 if dmin < 0.2 else 4)
+            cost += len(rows) * len(csel) * q * 8.0 / flops_per_s
+        worst = max(worst, cost)
+    return worst
+
+
+def run_assembly_comparison(
+        n_unknowns: int = 4096, num_ranks: int = 16, *,
+        durations: str = "analytic", cost_model=None,
+        ccm_params: Optional[CCMParams] = None, mem_cap_frac: float = 0.6,
+        seed: int = 0, n_iter: int = 4, fanout: int = 4,
+        task_limit_u: int = 96) -> AssemblyRun:
+    problem = build_problem(n_unknowns, num_ranks, seed=seed,
+                            task_limit_u=task_limit_u)
+    if durations == "measured":
+        durations_true = measure_durations(problem)
+    else:
+        durations_true = analytic_durations(problem)
+
+    # cost model predictions (perfect predictions if no model given)
+    if cost_model is not None:
+        durations_pred = cost_model.predict(problem.features())
+    else:
+        durations_pred = durations_true.copy()
+
+    # memory cap: fraction of what a rank would need to hold ALL slabs
+    total_block_bytes = problem.slab_bytes.sum()
+    per_rank_all = total_block_bytes / num_ranks
+    mem_cap = max(per_rank_all * 4.0 * mem_cap_frac, problem.slab_bytes.max() * 3)
+
+    params = ccm_params or CCMParams(alpha=1.0, beta=2e-10, gamma=1e-12,
+                                     delta=2e-10)
+    phase_pred = problem.to_phase(durations_pred, mem_cap_bytes=mem_cap)
+    a0 = initial_assignment(phase_pred, "home")
+
+    # B: overdecomposed, tasks at home
+    loads_b = np.bincount(a0, weights=durations_true, minlength=num_ranks)
+    makespan_b = float(loads_b.max())
+
+    # C: CCM-LB on predictions, evaluated with true durations
+    res = ccm_lb(phase_pred, a0, params, n_iter=n_iter, fanout=fanout,
+                 seed=seed)
+    loads_c = np.bincount(res.assignment, weights=durations_true,
+                          minlength=num_ranks)
+    makespan_c = float(loads_c.max())
+
+    # homing: every off-home rank holding a slab copy ships it home in waves
+    st = res.state
+    items_bytes, items_home, items_loc = [], [], []
+    for b in range(phase_pred.num_blocks):
+        holders = np.nonzero(st.block_count[:, b] > 0)[0]
+        for r in holders:
+            if r != phase_pred.block_home[b]:
+                items_bytes.append(phase_pred.block_size[b])
+                items_home.append(phase_pred.block_home[b])
+                items_loc.append(r)
+    homing = None
+    if items_bytes:
+        ranks_per_node = 2
+        n_nodes = (num_ranks + ranks_per_node - 1) // ranks_per_node
+        node_used = np.zeros(n_nodes)
+        for b in range(phase_pred.num_blocks):
+            holders = np.nonzero(st.block_count[:, b] > 0)[0]
+            for r in holders:
+                node_used[r // ranks_per_node] += phase_pred.block_size[b]
+        homing = plan_homing(
+            np.array(items_bytes), np.array(items_home, np.int64),
+            np.array(items_loc, np.int64), ranks_per_node=ranks_per_node,
+            node_mem_cap=float(node_used.max() + phase_pred.block_size.max() * 2),
+            node_mem_used=node_used)
+
+    st0 = CCMState.build(phase_pred, a0, params)
+    return AssemblyRun(
+        problem=problem,
+        durations_true=durations_true,
+        durations_pred=durations_pred,
+        makespan_baseline=baseline_makespan(problem),
+        makespan_overdecomposed=makespan_b,
+        makespan_ccmlb=makespan_c,
+        homing=homing,
+        imbalance_before=float(loads_b.max() / max(loads_b.mean(), 1e-12) - 1),
+        imbalance_after=float(loads_c.max() / max(loads_c.mean(), 1e-12) - 1),
+        n_off_home_ranks=len(items_bytes),
+        lb_result=res,
+    )

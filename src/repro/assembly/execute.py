@@ -1,0 +1,88 @@
+"""Task execution: the MoM-analogue tile kernel, in JAX, with measured
+durations (the ground truth the cost model learns — paper §VI-D collects
+task data the same way).
+
+Each task computes its tile of the interaction matrix with a regularized
+Green's-function quadrature whose depth (``quad_order``) was set by the
+near-singularity of the DOF pair — the source of the heavy-tailed costs.
+The Pallas TPU kernel (repro.kernels.assembly) implements the same tile
+computation with VMEM block tiling; this module is the portable path and the
+oracle the kernel is tested against.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.assembly.problem import AssemblyProblem, AssemblyTask
+
+WAVENUMBER = 3.0
+
+
+@functools.partial(jax.jit, static_argnames=("quad_order",))
+def tile_kernel(pr, pc, couple, quad_order: int):
+    """pr: (nr,3), pc: (nc,3), couple: (nr,nc) bool -> (nr,nc) f32 tile.
+
+    Z_ij = sum_q w_q * cos(k d r_q) / (d + eps_q) over a quadrature ladder —
+    a real-valued stand-in for the singular Green's function integral whose
+    cost scales with quad_order like the true near-interaction refinement.
+    """
+    d = jnp.sqrt(((pr[:, None] - pc[None]) ** 2).sum(-1) + 1e-12)
+    acc = jnp.zeros_like(d)
+    for q in range(quad_order):
+        r_q = (q + 0.5) / quad_order
+        w_q = 1.0 / quad_order
+        acc = acc + w_q * jnp.cos(WAVENUMBER * d * r_q) / (d + 0.05 * r_q + 1e-3)
+    return jnp.where(couple, acc, 0.0)
+
+
+def _task_inputs(problem: AssemblyProblem, t: AssemblyTask):
+    g = problem.geom
+    pr = jnp.asarray(g.points[t.rows], jnp.float32)
+    pc = jnp.asarray(g.points[t.cols], jnp.float32)
+    reg_r = g.region[t.rows][:, None]
+    reg_c = g.region[t.cols][None, :]
+    couple = jnp.asarray((reg_r == reg_c) | (reg_r == 2) | (reg_c == 2))
+    return pr, pc, couple
+
+
+def execute_task(problem: AssemblyProblem, t: AssemblyTask) -> np.ndarray:
+    pr, pc, couple = _task_inputs(problem, t)
+    return np.asarray(tile_kernel(pr, pc, couple, t.quad_order))
+
+
+def measure_durations(problem: AssemblyProblem, *, repeats: int = 2,
+                      warmup: bool = True) -> np.ndarray:
+    """Wall-clock seconds per task (min over repeats)."""
+    # warm the jit cache per (shape, quad_order) signature
+    if warmup:
+        seen = set()
+        for t in problem.tasks:
+            sig = (len(t.rows), len(t.cols), t.quad_order)
+            if sig not in seen:
+                seen.add(sig)
+                execute_task(problem, t)
+    out = np.zeros(problem.num_tasks)
+    for i, t in enumerate(problem.tasks):
+        pr, pc, couple = _task_inputs(problem, t)
+        best = np.inf
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            tile_kernel(pr, pc, couple, t.quad_order).block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        out[i] = best
+    return out
+
+
+def analytic_durations(problem: AssemblyProblem,
+                       flops_per_s: float = 2e9) -> np.ndarray:
+    """Deterministic cost model used by fast tests: FLOPs / rate."""
+    out = np.zeros(problem.num_tasks)
+    for i, t in enumerate(problem.tasks):
+        out[i] = (len(t.rows) * len(t.cols) * t.quad_order * 8.0) / flops_per_s
+    return out

@@ -1,0 +1,5 @@
+from repro.balance.expert_placement import (apply_expert_permutation,  # noqa: F401
+                                            phase_from_router_stats,
+                                            plan_expert_placement)
+from repro.balance.pipeline_stages import plan_pipeline_stages  # noqa: F401
+from repro.balance.seqpack import rebalance_sequences  # noqa: F401

@@ -1,0 +1,179 @@
+"""CCM-driven MoE expert placement — the paper's technique as a first-class
+framework feature.
+
+Mapping (DESIGN.md §2): a (layer, expert) work item is a CCM *task* whose
+load is the router's token count x per-token expert FLOPs; the expert's
+weights are its *shared block* (replicable at HBM cost), homed where the
+optimizer state lives; consecutive-layer co-activation gives the *comm*
+edges (tokens flowing e_l -> e'_{l+1} cross the network iff the two experts
+sit on different devices); the HBM budget is the hard eps constraint.
+
+CCM-LB then plans a placement.  Applying an arbitrary plan = per-layer
+permutations of the expert axis (slots): permuting expert weights AND the
+router's output columns identically is a function-preserving transformation
+(verified in tests), after which slot s lives on device s // (E / n_devices)
+— i.e. the plan becomes real data placement under the existing shard_map
+layout.  Plans that replicate an expert across ranks are reported (bytes,
+expected gain) for the serving engine; the training path applies the
+permutation-only projection of the plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import CCMParams, CCMState, ccm_lb
+from repro.core.problem import Phase
+
+
+def phase_from_router_stats(counts: np.ndarray, cfg: ModelConfig,
+                            n_devices: int, *, hbm_budget_bytes: float,
+                            bytes_per_token: Optional[float] = None,
+                            coactivation: Optional[np.ndarray] = None,
+                            rank_speed: Optional[np.ndarray] = None) -> Phase:
+    """counts: (L, E) tokens routed per (layer, expert).
+
+    Returns a Phase with K = L*E tasks and N = L*E blocks (expert weights).
+    """
+    l_n, e_n = counts.shape
+    d, f = cfg.d_model, cfg.moe_d_ff
+    flops_per_token = 6.0 * d * f  # 3 GLU matmuls, fwd
+    peak = 197e12
+    task_load = (counts.reshape(-1) * flops_per_token / peak)
+    expert_bytes = 3.0 * d * f * 2.0  # bf16 gate/up/down
+    bytes_per_token = bytes_per_token or (d * 2.0)
+
+    k = l_n * e_n
+    task_block = np.arange(k, dtype=np.int64)     # task (l,e) <-> block (l,e)
+    block_home = (np.arange(k) % e_n) * n_devices // e_n  # initial layout
+    # comm edges: consecutive-layer co-activation volume
+    comm_src, comm_dst, comm_vol = [], [], []
+    total = counts.sum(axis=1, keepdims=True) + 1e-9
+    for l in range(l_n - 1):
+        p_l = counts[l] / total[l]
+        p_n = counts[l + 1] / total[l + 1]
+        if coactivation is not None:
+            flow = coactivation[l]
+        else:  # independence approximation
+            flow = np.outer(p_l, p_n) * total[l]
+        top = np.argsort(flow.reshape(-1))[::-1][: 4 * e_n]  # sparsify
+        for idx in top:
+            e_a, e_b = divmod(int(idx), e_n)
+            v = flow[e_a, e_b] * bytes_per_token
+            if v <= 0:
+                continue
+            comm_src.append(l * e_n + e_a)
+            comm_dst.append((l + 1) * e_n + e_b)
+            comm_vol.append(float(v))
+
+    return Phase(
+        task_load=task_load,
+        task_mem=np.full(k, 1e4),
+        task_overhead=np.zeros(k),
+        task_block=task_block,
+        block_size=np.full(k, expert_bytes),
+        block_home=block_home,
+        comm_src=np.array(comm_src, np.int64) if comm_src else np.zeros(0, np.int64),
+        comm_dst=np.array(comm_dst, np.int64) if comm_dst else np.zeros(0, np.int64),
+        comm_vol=np.array(comm_vol) if comm_vol else np.zeros(0),
+        rank_mem_base=np.zeros(n_devices),
+        rank_mem_cap=np.full(n_devices, hbm_budget_bytes),
+        rank_speed=rank_speed,
+    )
+
+
+@dataclasses.dataclass
+class PlacementPlan:
+    assignment: np.ndarray              # (L*E,) task -> device
+    permutations: np.ndarray            # (L, E) slot s on layer l holds
+                                        #        original expert perm[l, s]
+    imbalance_before: float
+    imbalance_after: float
+    replicated_blocks: int              # plan wanted replication (serving)
+    max_work_before: float
+    max_work_after: float
+    lb_result: object
+
+
+def plan_expert_placement(counts: np.ndarray, cfg: ModelConfig,
+                          n_devices: int, *, hbm_budget_bytes: float,
+                          params: Optional[CCMParams] = None,
+                          rank_speed: Optional[np.ndarray] = None,
+                          n_iter: int = 4, fanout: int = 4,
+                          seed: int = 0) -> PlacementPlan:
+    l_n, e_n = counts.shape
+    assert e_n % n_devices == 0
+    e_loc = e_n // n_devices
+    phase = phase_from_router_stats(counts, cfg, n_devices,
+                                    hbm_budget_bytes=hbm_budget_bytes,
+                                    rank_speed=rank_speed)
+    ccm = params or CCMParams(alpha=1.0, beta=2e-11, gamma=1e-13, delta=1e-12)
+    a0 = phase.block_home.copy()  # tasks start at their expert's device
+    st0 = CCMState.build(phase, a0, ccm)
+    res = ccm_lb(phase, a0, ccm, n_iter=n_iter, fanout=fanout, seed=seed)
+
+    # project the plan onto per-layer slot permutations: on each layer,
+    # device dev gets the experts assigned to it (top e_loc by load if the
+    # plan overflows a device; spill handling keeps it a permutation).
+    perms = np.zeros((l_n, e_n), np.int64)
+    replicated = 0
+    assign = res.assignment.reshape(l_n, e_n)
+    for l in range(l_n):
+        buckets: List[List[int]] = [[] for _ in range(n_devices)]
+        for e in range(e_n):
+            buckets[int(assign[l, e])].append(e)
+        # spill: move lightest experts out of overfull buckets
+        loads = counts[l]
+        overflow: List[int] = []
+        for devb in buckets:
+            devb.sort(key=lambda e: -loads[e])
+            while len(devb) > e_loc:
+                overflow.append(devb.pop())
+        for devb in buckets:
+            while len(devb) < e_loc and overflow:
+                devb.append(overflow.pop(0))
+        perm = [e for devb in buckets for e in devb]
+        perms[l] = np.array(perm, np.int64)
+    # replication desired by the plan: blocks present on >1 rank
+    replicated = int((res.state.block_count > 0).sum(axis=0).max(initial=0) > 1)
+    replicated = int(((res.state.block_count > 0).sum(axis=0) > 1).sum())
+
+    return PlacementPlan(
+        assignment=res.assignment,
+        permutations=perms,
+        imbalance_before=st0.imbalance(),
+        imbalance_after=res.state.imbalance(),
+        replicated_blocks=replicated,
+        max_work_before=st0.max_work(),
+        max_work_after=res.state.max_work(),
+        lb_result=res,
+    )
+
+
+def apply_expert_permutation(moe_params: Dict, perm: np.ndarray) -> Dict:
+    """Function-preserving slot permutation of one MoE layer's params.
+
+    perm[s] = original expert now living in slot s.  Router output columns
+    are permuted identically, so routing decisions follow the weights.
+    """
+    out = dict(moe_params)
+    out["w_gate"] = moe_params["w_gate"][perm]
+    out["w_up"] = moe_params["w_up"][perm]
+    out["w_down"] = moe_params["w_down"][perm]
+    out["router"] = moe_params["router"][:, perm]
+    return out
+
+
+def all_to_all_bytes(counts: np.ndarray, assignment: np.ndarray,
+                     n_devices: int, d_model: int,
+                     bytes_per_el: float = 2.0) -> float:
+    """Dispatch volume crossing the network under a placement: tokens
+    originate uniformly across devices; a token reaching expert (l, e) on
+    device dev crosses iff its source != dev (fraction 1 - 1/n)."""
+    k = counts.size
+    loads = counts.reshape(-1)
+    cross = loads * (1.0 - 1.0 / n_devices)
+    return float(cross.sum() * d_model * bytes_per_el)

@@ -1,0 +1,2 @@
+from repro.checkpoint.checkpoint import (CheckpointManager,  # noqa: F401
+                                         latest_step, restore, save)

@@ -1,0 +1,6 @@
+"""The paper's primary contribution: the CCM work model and the CCM-LB
+distributed load balancer, plus the MILP certification path (core/milp)."""
+from repro.core.ccm import CCMState, ExchangeEval, exchange_eval  # noqa: F401
+from repro.core.ccmlb import CCMLBResult, ccm_lb  # noqa: F401
+from repro.core.problem import (CCMParams, Phase, initial_assignment,  # noqa: F401
+                                random_phase)

@@ -1,0 +1,164 @@
+"""CCM-LB: the distributed, heuristic load-balancing algorithm (paper §IV,
+Fig. 1), as a deterministic multi-rank discrete-event simulation.
+
+Per iteration:
+  1. cluster tasks on every rank (shared blocks + heavy comm edges);
+  2. augmented inform stage — gossip rank+cluster summaries with ``fanout``
+     over ``k_rounds`` (core/gossip.py);
+  3. every rank scores its known peers with the stale-info approximation and
+     builds a sorted work_list;
+  4. lock/transfer stage — ranks try to lock their best peers (deadlock-free
+     priority rule), then evaluate exactly (update formulae) with fresh info
+     and execute the best cluster give/swap.
+
+Returns the improved assignment plus a trace (max work, imbalance, transfers
+per iteration) used by tests and benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.ccm import CCMState
+from repro.core.clusters import (build_clusters, summarize_clusters,
+                                 summarize_rank)
+from repro.core.gossip import build_peer_networks
+from repro.core.locks import LockManager
+from repro.core.problem import CCMParams, Phase
+from repro.core.transfer import approx_best_diff, try_transfer
+
+
+@dataclasses.dataclass
+class CCMLBResult:
+    assignment: np.ndarray
+    state: CCMState
+    max_work: List[float]          # per iteration (incl. initial)
+    total_work: List[float]
+    imbalance: List[float]
+    transfers: int
+    lock_conflicts: int
+
+
+def ccm_lb(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
+           n_iter: int = 4, k_rounds: int = 2, fanout: int = 4,
+           seed: int = 0, max_candidates: int = 12,
+           max_clusters_per_rank: Optional[int] = None) -> CCMLBResult:
+    state = CCMState.build(phase, assignment, params)
+    trace_max = [state.max_work()]
+    trace_tot = [state.total_work()]
+    trace_imb = [state.imbalance()]
+    transfers = 0
+    conflicts = 0
+
+    for it in range(n_iter):
+        clusters = build_clusters(state,
+                                  max_clusters_per_rank=max_clusters_per_rank)
+        csum = summarize_clusters(state, clusters)
+        summaries = {r: summarize_rank(state, r, csum[r])
+                     for r in range(phase.num_ranks)}
+        info = build_peer_networks(summaries, k_rounds=k_rounds,
+                                   fanout=fanout, seed=seed * 1000 + it)
+
+        # stage 1: score peers from (stale) gossip info
+        work_lists: Dict[int, deque] = {}
+        for r in range(phase.num_ranks):
+            scored: List[Tuple[float, int]] = []
+            for p, psum in info[r].items():
+                if p == r:
+                    continue
+                diff = approx_best_diff(summaries[r], psum, params)
+                if diff > 0:
+                    scored.append((diff, p))
+            scored.sort(key=lambda t: (-t[0], t[1]))
+            work_lists[r] = deque(scored)
+
+        # stage 2: lock/transfer event loop
+        locks = LockManager(phase.num_ranks)
+        # round-robin over ranks for fairness; each "turn" a rank either
+        # requests its best remaining peer or is idle/waiting.
+        active = deque(r for r in range(phase.num_ranks) if work_lists[r])
+        waiting_grant: Dict[int, int] = {}  # requester -> target queued on
+        spins = 0
+        max_spins = 50 * phase.num_ranks + 1000
+        while (active or waiting_grant) and spins < max_spins:
+            spins += 1
+            if not active:
+                # everyone is queued on busy targets; queues drain on release
+                # — if nothing holds a lock, drop all waits (no progress).
+                if not any(locks.is_locked(r) for r in range(phase.num_ranks)):
+                    break
+                # force-release: cannot happen (every grant transfers then
+                # releases synchronously below); guard anyway.
+                break
+            r = active.popleft()
+            if not work_lists[r]:
+                continue
+            diff, p = work_lists[r].popleft()
+            granted = locks.request(r, p)
+            if not granted:
+                conflicts += 1
+                # re-queue the attempt at the back (retry later)
+                work_lists[r].append((diff * 0.5, p))
+                if work_lists[r]:
+                    active.append(r)
+                continue
+            # granted: deadlock-avoidance check (Fig.1 line 45)
+            if locks.must_yield(r, p):
+                conflicts += 1
+                nxt = locks.release(r, p)
+                work_lists[r].append((diff, p))
+                active.append(r)
+                if nxt is not None:
+                    _handle_grant(nxt, p, state, clusters, locks, work_lists,
+                                  active, max_candidates)
+                continue
+            # fresh info exchange + exact transfer (recvUpdate/TryTransfer)
+            best = try_transfer(state, clusters[r], clusters[p], r, p,
+                                max_candidates)
+            if best is not None:
+                transfers += 1
+                # cluster membership changed on r and p: rebuild locally
+                local = build_clusters(
+                    state, max_clusters_per_rank=max_clusters_per_rank,
+                    only_ranks=[r, p])
+                clusters[r] = local[r]
+                clusters[p] = local[p]
+            nxt = locks.release(r, p)
+            if nxt is not None:
+                _handle_grant(nxt, p, state, clusters, locks, work_lists,
+                              active, max_candidates)
+            if work_lists[r]:
+                active.append(r)
+
+        trace_max.append(state.max_work())
+        trace_tot.append(state.total_work())
+        trace_imb.append(state.imbalance())
+
+    return CCMLBResult(state.assignment.copy(), state, trace_max, trace_tot,
+                       trace_imb, transfers, conflicts)
+
+
+def _handle_grant(r: int, p: int, state, clusters, locks, work_lists, active,
+                  max_candidates):
+    """A queued requester r just got the lock on p (release handoff)."""
+    if locks.must_yield(r, p):
+        nxt = locks.release(r, p)
+        active.append(r)
+        if nxt is not None:
+            _handle_grant(nxt, p, state, clusters, locks, work_lists, active,
+                          max_candidates)
+        return
+    best = try_transfer(state, clusters[r], clusters[p], r, p, max_candidates)
+    if best is not None:
+        local = build_clusters(state, only_ranks=[r, p])
+        clusters[r] = local[r]
+        clusters[p] = local[p]
+    nxt = locks.release(r, p)
+    if nxt is not None:
+        _handle_grant(nxt, p, state, clusters, locks, work_lists, active,
+                      max_candidates)
+    if work_lists[r]:
+        active.append(r)

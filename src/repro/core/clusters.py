@@ -1,0 +1,198 @@
+"""Cluster generation (paper §IV, before the inform stage).
+
+On each rank, tasks that access the same shared block or that communicate
+heavily are clustered so they migrate together — splitting them would
+replicate the block on more ranks (more memory + homing cost) or turn
+intra-rank edges into off-rank ones (more work).
+
+Implementation: union-find per rank over (a) same-shared-block relations and
+(b) comm edges whose volume is above ``heavy_quantile`` of local edge volumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.ccm import CCMState
+
+
+class _UF:
+    def __init__(self, ids):
+        self.parent = {int(i): int(i) for i in ids}
+
+    def find(self, x):
+        p = self.parent
+        while p[x] != x:
+            p[x] = p[p[x]]
+            x = p[x]
+        return x
+
+    def union(self, a, b):
+        ra, rb = self.find(a), self.find(b)
+        if ra != rb:
+            self.parent[rb] = ra
+
+
+@dataclasses.dataclass
+class ClusterSummary:
+    """What the inform stage sends per cluster (§IV-A)."""
+
+    rank: int
+    local_id: int
+    load: float            # L(c)
+    mem: float             # M-(c) task baseline footprint
+    overhead: float        # max task overhead in the cluster
+    block_ids: np.ndarray  # shared blocks accessed
+    block_bytes: float     # total size of those blocks
+    vol_intra: float       # V(c): volume among the cluster's tasks
+    vol_ext: float         # V∉(c): volume between cluster and anything else
+    size: int
+
+
+def build_clusters(state: CCMState, heavy_quantile: float = 0.75,
+                   max_clusters_per_rank: Optional[int] = None,
+                   split_frac: float = 0.25,
+                   only_ranks: Optional[List[int]] = None
+                   ) -> Dict[int, List[np.ndarray]]:
+    """rank -> list of task-id arrays (clusters).  Singletons included.
+
+    ``split_frac``: clusters whose load exceeds ``split_frac * mean rank
+    load`` are split into load-bounded sub-clusters.  This is what enables the
+    paper's replication trade-off (§III-A4): a shared block's tasks may then
+    land on several ranks, replicating the block at a memory + homing cost
+    that the delta term charges.
+
+    ``only_ranks``: restrict to these ranks (incremental rebuild after a
+    transfer touches two ranks).
+    """
+    ph = state.phase
+    a = state.assignment
+    mean_load = ph.task_load.sum() / max(ph.num_ranks, 1)
+    load_cap = max(split_frac * mean_load, ph.task_load.max(initial=0.0))
+    out: Dict[int, List[np.ndarray]] = {}
+    # heavy threshold from the global edge-volume distribution
+    thresh = (np.quantile(ph.comm_vol, heavy_quantile)
+              if ph.num_comms else np.inf)
+    same_rank = a[ph.comm_src] == a[ph.comm_dst]
+    heavy = same_rank & (ph.comm_vol >= thresh)
+    ranks = range(ph.num_ranks) if only_ranks is None else only_ranks
+    for r in ranks:
+        tasks = np.nonzero(a == r)[0]
+        if tasks.size == 0:
+            out[r] = []
+            continue
+        uf = _UF(tasks)
+        # same shared block
+        blocks: Dict[int, int] = {}
+        for t in tasks:
+            b = ph.task_block[t]
+            if b >= 0:
+                if b in blocks:
+                    uf.union(blocks[b], int(t))
+                else:
+                    blocks[b] = int(t)
+        # heavy same-rank comm edges
+        for e in np.nonzero(heavy & (a[ph.comm_src] == r))[0]:
+            uf.union(int(ph.comm_src[e]), int(ph.comm_dst[e]))
+        groups: Dict[int, List[int]] = {}
+        for t in tasks:
+            groups.setdefault(uf.find(int(t)), []).append(int(t))
+        clusters: List[np.ndarray] = []
+        for g in groups.values():
+            clusters.extend(_split_by_load(np.array(g, np.int64),
+                                           ph.task_load, load_cap))
+        clusters.sort(key=lambda c: -ph.task_load[c].sum())
+        if max_clusters_per_rank is not None:
+            clusters = clusters[:max_clusters_per_rank]
+        out[r] = clusters
+    return out
+
+
+def _split_by_load(tasks: np.ndarray, loads: np.ndarray,
+                   cap: float) -> List[np.ndarray]:
+    """Greedy first-fit split of a cluster into sub-clusters of load <= cap."""
+    total = loads[tasks].sum()
+    if total <= cap or tasks.size <= 1:
+        return [tasks]
+    order = tasks[np.argsort(-loads[tasks])]
+    bins: List[List[int]] = []
+    bin_loads: List[float] = []
+    for t in order:
+        lt = loads[t]
+        placed = False
+        for i in range(len(bins)):
+            if bin_loads[i] + lt <= cap:
+                bins[i].append(int(t))
+                bin_loads[i] += lt
+                placed = True
+                break
+        if not placed:
+            bins.append([int(t)])
+            bin_loads.append(float(lt))
+    return [np.array(b, np.int64) for b in bins]
+
+
+def summarize_clusters(state: CCMState,
+                       clusters: Dict[int, List[np.ndarray]]
+                       ) -> Dict[int, List[ClusterSummary]]:
+    ph = state.phase
+    a = state.assignment
+    out: Dict[int, List[ClusterSummary]] = {}
+    for r, cls in clusters.items():
+        summaries = []
+        for ci, tasks in enumerate(cls):
+            in_c = np.zeros(ph.num_tasks, bool)
+            in_c[tasks] = True
+            src_in = in_c[ph.comm_src]
+            dst_in = in_c[ph.comm_dst]
+            vol_intra = ph.comm_vol[src_in & dst_in].sum()
+            vol_ext = ph.comm_vol[src_in ^ dst_in].sum()
+            blk = np.unique(ph.task_block[tasks])
+            blk = blk[blk >= 0]
+            summaries.append(ClusterSummary(
+                rank=r,
+                local_id=ci,
+                load=float(ph.task_load[tasks].sum()),
+                mem=float(ph.task_mem[tasks].sum()),
+                overhead=float(ph.task_overhead[tasks].max()) if tasks.size else 0.0,
+                block_ids=blk,
+                block_bytes=float(ph.block_size[blk].sum()),
+                vol_intra=float(vol_intra),
+                vol_ext=float(vol_ext),
+                size=int(tasks.size),
+            ))
+        out[r] = summaries
+    return out
+
+
+@dataclasses.dataclass
+class RankSummary:
+    """Rank-level inform payload (§IV-A): loads + comm volumes + homing +
+    baseline memory + cluster summaries."""
+
+    rank: int
+    load: float
+    vol_on: float
+    vol_off: float
+    homing: float
+    mem_used: float        # M_max(r)
+    mem_cap: float
+    speed: float
+    clusters: List[ClusterSummary]
+
+
+def summarize_rank(state: CCMState, r: int,
+                   cluster_summaries: List[ClusterSummary]) -> RankSummary:
+    return RankSummary(
+        rank=r,
+        load=float(state.load[r]),
+        vol_on=state.on_rank_volume(r),
+        vol_off=state.off_rank_volume(r),
+        homing=state.homing_cost(r),
+        mem_used=state.max_memory(r),
+        mem_cap=float(state.phase.rank_mem_cap[r]),
+        speed=float(state.phase.rank_speed[r]),
+        clusters=cluster_summaries,
+    )

@@ -1,0 +1,62 @@
+"""Augmented inform stage (paper §IV-A, Fig. 1 BuildPeerNetwork).
+
+Epidemic propagation: over ``k_rounds`` asynchronous rounds each rank sends
+its accumulated ``info_known`` to ``fanout`` randomly selected peers; a
+recipient merges the payload and, if the message's round is below k_rounds,
+forwards to ``fanout`` peers the message has not visited.
+
+This is a deterministic discrete-event simulation of R ranks: messages sent
+in round k are delivered at round k+1; randomness is seeded per
+(iteration, rank, message) so runs are reproducible.  Payload entries are
+``RankSummary`` objects (rank info + cluster summaries) — the augmentation
+over load-only gossip [22] that CCM requires.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Set
+
+import numpy as np
+
+from repro.core.clusters import RankSummary
+
+
+def build_peer_networks(summaries: Dict[int, RankSummary], *, k_rounds: int,
+                        fanout: int, seed: int,
+                        ) -> Dict[int, Dict[int, RankSummary]]:
+    """Returns per-rank ``info_known``: rank -> {peer -> RankSummary}."""
+    ranks = sorted(summaries)
+    n = len(ranks)
+    rng = np.random.default_rng(seed)
+    info_known: Dict[int, Dict[int, RankSummary]] = {
+        r: {r: summaries[r]} for r in ranks}
+
+    # message = (round, visited set, payload snapshot keys)
+    # round k messages, delivered synchronously at round boundary (async in
+    # the real runtime; the simulation just needs *an* admissible ordering).
+    msgs: List[tuple] = []
+    for r in ranks:
+        peers = _pick_peers(rng, n, r, fanout, visited={r})
+        for p in peers:
+            msgs.append((1, p, frozenset([r]) | {p}, dict(info_known[r])))
+
+    for _ in range(k_rounds):
+        nxt: List[tuple] = []
+        for rnd, dst, visited, payload in msgs:
+            known = info_known[dst]
+            for k, v in payload.items():
+                known.setdefault(k, v)
+            if rnd < k_rounds:
+                peers = _pick_peers(rng, n, dst, fanout, visited=set(visited))
+                for p in peers:
+                    nxt.append((rnd + 1, p, frozenset(visited) | {p},
+                                dict(known)))
+        msgs = nxt
+    return info_known
+
+
+def _pick_peers(rng, n: int, me: int, fanout: int, visited: Set[int]):
+    candidates = [r for r in range(n) if r != me and r not in visited]
+    if not candidates:
+        return []
+    k = min(fanout, len(candidates))
+    return list(rng.choice(candidates, size=k, replace=False))

@@ -1,0 +1,5 @@
+from repro.core.milp.bnb import MILPResult, solve_milp  # noqa: F401
+from repro.core.milp.comcp import build_comcp  # noqa: F401
+from repro.core.milp.fwmp import build_fwmp  # noqa: F401
+from repro.core.milp.fwmp_reduced import build_fwmp_reduced  # noqa: F401
+from repro.core.milp.lp import LPResult, simplex_solve  # noqa: F401

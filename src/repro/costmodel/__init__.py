@@ -1,0 +1,6 @@
+from repro.costmodel.network import FNNConfig, fnn_apply, fnn_init  # noqa: F401
+from repro.costmodel.losses import (mae, rmse,  # noqa: F401
+                                    under_penalized_rmse)
+from repro.costmodel.reduction import dynamic_data_reduce  # noqa: F401
+from repro.costmodel.scaler import StandardScaler  # noqa: F401
+from repro.costmodel.train import CostModel, train_cost_model  # noqa: F401

@@ -1,0 +1,26 @@
+"""Loss functions for the cost model (paper §VI-D.3).
+
+The under-penalized RMSE (eq. 32) discounts under-predictions by ``alpha``:
+over-predicted compute times hurt load balance more (an over-predicted task
+makes CCM-LB leave real work behind), so the trained model "barely
+over-predicts".
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmse(pred, truth):
+    return jnp.sqrt(jnp.mean(jnp.square(pred - truth)))
+
+
+def mae(pred, truth):
+    return jnp.mean(jnp.abs(pred - truth))
+
+
+def under_penalized_rmse(pred, truth, alpha: float = 0.3):
+    """sqrt(mean e_i) with e_i = (g-p)^2 if g>=p else alpha*(g-p)^2 (eq. 32)."""
+    err = pred - truth
+    sq = jnp.square(err)
+    weighted = jnp.where(err >= 0, sq, alpha * sq)
+    return jnp.sqrt(jnp.mean(weighted))

@@ -1,0 +1,82 @@
+"""Task-duration prediction FNN (paper §VI-D.2) in pure JAX.
+
+Architecture per the paper: feed-forward, 4 hidden layers x 200 neurons,
+batch normalization on hidden layers, dropout, LeakyReLU (eq. 31) activation.
+Trained with AdamW (repro.optim) on mini-batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FNNConfig:
+    in_dim: int
+    hidden: Tuple[int, ...] = (200, 200, 200, 200)
+    dropout: float = 0.1
+    leaky_slope: float = 0.01
+    bn_momentum: float = 0.9
+    bn_eps: float = 1e-5
+
+
+def leaky_relu(x, slope: float = 0.01):
+    """Eq. (31): f(x) = x * 1_{R+}(x) + 0.01 x * 1_{R-*}(x)."""
+    return jnp.where(x >= 0, x, slope * x)
+
+
+def fnn_init(key, cfg: FNNConfig) -> Dict:
+    params = {"layers": []}
+    bn_state = {"layers": []}
+    dims = (cfg.in_dim,) + cfg.hidden
+    keys = jax.random.split(key, len(cfg.hidden) + 1)
+    for li, (d_in, d_out) in enumerate(zip(dims[:-1], dims[1:])):
+        w = jax.random.normal(keys[li], (d_in, d_out)) * jnp.sqrt(2.0 / d_in)
+        params["layers"].append({
+            "w": w.astype(jnp.float32),
+            "b": jnp.zeros((d_out,), jnp.float32),
+            "bn_scale": jnp.ones((d_out,), jnp.float32),
+            "bn_bias": jnp.zeros((d_out,), jnp.float32),
+        })
+        bn_state["layers"].append({
+            "mean": jnp.zeros((d_out,), jnp.float32),
+            "var": jnp.ones((d_out,), jnp.float32),
+        })
+    params["out_w"] = (jax.random.normal(keys[-1], (dims[-1], 1))
+                       * jnp.sqrt(1.0 / dims[-1])).astype(jnp.float32)
+    params["out_b"] = jnp.zeros((1,), jnp.float32)
+    return params, bn_state
+
+
+def fnn_apply(params, bn_state, x, cfg: FNNConfig, *, train: bool,
+              rng=None):
+    """Returns (predictions (B,), new_bn_state)."""
+    new_bn = {"layers": []}
+    h = x
+    for li, layer in enumerate(params["layers"]):
+        h = h @ layer["w"] + layer["b"]
+        if train:
+            mu = h.mean(0)
+            var = h.var(0)
+            st = bn_state["layers"][li]
+            new_bn["layers"].append({
+                "mean": cfg.bn_momentum * st["mean"] + (1 - cfg.bn_momentum) * mu,
+                "var": cfg.bn_momentum * st["var"] + (1 - cfg.bn_momentum) * var,
+            })
+        else:
+            st = bn_state["layers"][li]
+            mu, var = st["mean"], st["var"]
+            new_bn["layers"].append(dict(st))
+        h = (h - mu) * jax.lax.rsqrt(var + cfg.bn_eps)
+        h = h * layer["bn_scale"] + layer["bn_bias"]
+        h = leaky_relu(h, cfg.leaky_slope)
+        if train and cfg.dropout > 0:
+            assert rng is not None
+            rng, sub = jax.random.split(rng)
+            keep = jax.random.bernoulli(sub, 1 - cfg.dropout, h.shape)
+            h = jnp.where(keep, h / (1 - cfg.dropout), 0.0)
+    out = h @ params["out_w"] + params["out_b"]
+    return out[:, 0], new_bn

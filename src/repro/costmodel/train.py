@@ -1,0 +1,115 @@
+"""Cost-model training loop (paper §VI-D): mini-batch AdamW on the
+under-penalized RMSE, with standard scaling and Algorithm-1 data reduction.
+Targets are log-transformed (durations span orders of magnitude).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.costmodel.losses import mae, rmse, under_penalized_rmse
+from repro.costmodel.network import FNNConfig, fnn_apply, fnn_init
+from repro.costmodel.reduction import dynamic_data_reduce
+from repro.costmodel.scaler import StandardScaler
+from repro.optim import adamw_init, adamw_update
+
+
+def _augment(features: np.ndarray) -> np.ndarray:
+    """Append log1p features: task durations are ~log-linear in the raw
+    counts (rows x cols x quad), so this makes the FNN's job easy."""
+    return np.concatenate([features, np.log1p(np.abs(features))], axis=1)
+
+
+@dataclasses.dataclass
+class CostModel:
+    cfg: FNNConfig
+    params: Dict
+    bn_state: Dict
+    scaler: StandardScaler
+    log_target: bool = True
+
+    def predict(self, features: np.ndarray) -> np.ndarray:
+        x = jnp.asarray(self.scaler.transform(_augment(features)), jnp.float32)
+        pred, _ = fnn_apply(self.params, self.bn_state, x, self.cfg,
+                            train=False)
+        pred = np.asarray(pred)
+        return np.exp(pred) if self.log_target else pred
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "alpha"))
+def _train_step(params, bn_state, opt_state, xb, yb, rng, cfg: FNNConfig,
+                alpha: float):
+    def loss_fn(p):
+        pred, new_bn = fnn_apply(p, bn_state, xb, cfg, train=True, rng=rng)
+        return under_penalized_rmse(pred, yb, alpha), new_bn
+
+    (loss, new_bn), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    params, opt_state = adamw_update(grads, opt_state, params, 1e-3,
+                                     weight_decay=1e-4)
+    return params, new_bn, opt_state, loss
+
+
+def train_cost_model(features: np.ndarray, durations: np.ndarray, *,
+                     epochs: int = 60, batch_size: int = 256,
+                     alpha: float = 0.3, reduce_to: Optional[int] = None,
+                     seed: int = 0, log_target: bool = True,
+                     hidden=(200, 200, 200, 200), dropout: float = 0.1,
+                     ) -> Tuple[CostModel, Dict]:
+    """Returns (model, history).  ``reduce_to`` applies Algorithm 1 first."""
+    features = np.asarray(features, np.float64)
+    durations = np.asarray(durations, np.float64)
+    if reduce_to is not None and reduce_to < features.shape[0]:
+        keep = dynamic_data_reduce(durations, reduce_to, seed=seed)
+        features, durations = features[keep], durations[keep]
+
+    features = _augment(features)
+    scaler = StandardScaler().fit(features)
+    x = jnp.asarray(scaler.transform(features), jnp.float32)
+    y = np.log(np.maximum(durations, 1e-12)) if log_target else durations
+    y = jnp.asarray(y, jnp.float32)
+
+    cfg = FNNConfig(in_dim=features.shape[1], hidden=tuple(hidden),
+                    dropout=dropout)
+    key = jax.random.key(seed)
+    key, sub = jax.random.split(key)
+    params, bn_state = fnn_init(sub, cfg)
+    opt_state = adamw_init(params)
+
+    n = x.shape[0]
+    bs = min(batch_size, n)
+    steps = max(n // bs, 1)
+    history = {"loss": []}
+    rng_np = np.random.default_rng(seed)
+    for ep in range(epochs):
+        perm = rng_np.permutation(n)
+        ep_loss = 0.0
+        for s in range(steps):
+            idx = perm[s * bs:(s + 1) * bs]
+            key, sub = jax.random.split(key)
+            params, bn_state, opt_state, loss = _train_step(
+                params, bn_state, opt_state, x[idx], y[idx], sub, cfg, alpha)
+            ep_loss += float(loss)
+        history["loss"].append(ep_loss / steps)
+    model = CostModel(cfg, params, bn_state, scaler, log_target)
+    return model, history
+
+
+def evaluate_cost_model(model: CostModel, features: np.ndarray,
+                        durations: np.ndarray) -> Dict[str, float]:
+    pred = model.predict(features)
+    p = jnp.asarray(pred)
+    t = jnp.asarray(durations)
+    over = np.mean(pred >= durations)
+    return {
+        "rmse": float(rmse(p, t)),
+        "mae": float(mae(p, t)),
+        "under_rmse": float(under_penalized_rmse(p, t, 0.3)),
+        "over_predict_frac": float(over),
+        "rel_err_median": float(np.median(np.abs(pred - durations) /
+                                          np.maximum(durations, 1e-12))),
+    }

@@ -1,0 +1,4 @@
+# Pallas TPU kernels for the compute hot-spots.  Each subpackage has
+# kernel.py (pl.pallas_call + BlockSpec VMEM tiling), ops.py (jit'd wrapper)
+# and ref.py (pure-jnp oracle).  Validated with interpret=True on CPU; the
+# TPU is the TARGET (see DESIGN.md hardware-adaptation notes).

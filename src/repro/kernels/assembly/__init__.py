@@ -1,0 +1,2 @@
+from repro.kernels.assembly.ops import assembly_tile  # noqa: F401
+from repro.kernels.assembly.ref import reference_tile  # noqa: F401

@@ -1,0 +1,24 @@
+"""Jit'd wrapper: pads (n, 3) coords to the (n, 8) lane layout the kernel
+expects and dispatches on the (static) quadrature depth."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.assembly.kernel import assembly_tile_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("quad_order", "block_r",
+                                             "block_c", "mxu_distance",
+                                             "interpret"))
+def assembly_tile(pr, pc, couple, *, quad_order: int, block_r: int = 128,
+                  block_c: int = 128, mxu_distance: bool = False,
+                  interpret: bool = False):
+    """pr: (nr, 3), pc: (nc, 3), couple: bool (nr, nc) -> (nr, nc) f32."""
+    pad = lambda p: jnp.pad(p.astype(jnp.float32), ((0, 0), (0, 8 - p.shape[1])))
+    return assembly_tile_fwd(pad(pr), pad(pc), couple.astype(jnp.int8),
+                             quad_order=quad_order, block_r=block_r,
+                             block_c=block_c, mxu_distance=mxu_distance,
+                             interpret=interpret)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the assembly tile kernel — must match
+repro.assembly.execute.tile_kernel (the application path)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+WAVENUMBER = 3.0
+
+
+def reference_tile(pr, pc, couple, quad_order: int):
+    """pr: (nr, 3|8), pc: (nc, 3|8), couple: bool (nr, nc)."""
+    pr = pr[:, :3].astype(jnp.float32)
+    pc = pc[:, :3].astype(jnp.float32)
+    d = jnp.sqrt(((pr[:, None] - pc[None]) ** 2).sum(-1) + 1e-12)
+    acc = jnp.zeros_like(d)
+    for q in range(quad_order):
+        r_q = (q + 0.5) / quad_order
+        w_q = 1.0 / quad_order
+        acc = acc + w_q * jnp.cos(WAVENUMBER * d * r_q) / (d + 0.05 * r_q + 1e-3)
+    return jnp.where(couple, acc, 0.0)

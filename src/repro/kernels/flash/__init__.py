@@ -1,0 +1,2 @@
+from repro.kernels.flash.ops import flash_attention  # noqa: F401
+from repro.kernels.flash.ref import reference_attention  # noqa: F401

@@ -1,0 +1,130 @@
+"""Flash-attention forward Pallas TPU kernel.
+
+Online-softmax tiling (FlashAttention [arXiv:2205.14135] re-thought for the
+TPU memory hierarchy): Q/K/V tiles stream HBM -> VMEM via BlockSpecs, the
+(block_q x block_k) score tile lives only in VMEM/VREGs, the MXU does the two
+GEMMs, and running (m, l, acc) scratch persists across the sequential
+kv-block grid dimension.  Supports causal + sliding-window masks, gemma2
+logit soft-cap, and GQA (q-head groups share a kv head via the k/v index
+maps).
+
+Block sizes default to MXU/VREG-aligned (128, 128); masks are applied
+in-tile.  (On real TPUs fully-masked tiles should additionally be pruned
+from the grid; the dry-run path uses the XLA lowering, so tile pruning is a
+documented on-hardware follow-up.)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  block_q: int, block_k: int, sm_scale: float, causal: bool,
+                  window: int, softcap: float, kv_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)              # (block_q, hd)
+    k = k_ref[0].astype(jnp.float32)              # (block_k, hd)
+    v = v_ref[0].astype(jnp.float32)
+    # zero padded K/V rows of the ragged last block (padding memory is
+    # undefined; 0 * NaN would poison the PV matmul)
+    row_valid = (ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_k, 1), 0)) < kv_len
+    k = jnp.where(row_valid, k, 0.0)
+    v = jnp.where(row_valid, v, 0.0)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * sm_scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+    mask = k_pos < kv_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # (block_q, 1)
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    correction = jnp.exp(m_prev - m_new)           # 1 when both still -inf
+    l_new = correction * l_prev + jnp.sum(p, axis=1, keepdims=True)
+    acc = acc_ref[...] * correction + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        o_ref[0] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)).astype(
+            o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0, block_q: int = 128,
+                        block_k: int = 128, interpret: bool = False):
+    """q: (BHq, Sq, hd); k, v: (BHkv, Skv, hd) with BHq = BHkv * group.
+
+    Heads are folded into the leading grid dim; the k/v index maps divide by
+    the GQA group so q-head groups share their kv head's tiles.
+    """
+    bhq, sq, hd = q.shape
+    bhkv, skv, _ = k.shape
+    assert bhq % bhkv == 0
+    group = bhq // bhkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    nq = pl.cdiv(sq, block_q)
+    nk = pl.cdiv(skv, block_k)
+    sm_scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, sm_scale=sm_scale,
+        causal=causal, window=window, softcap=softcap, kv_len=skv)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bhq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, hd),
+                         lambda bh, qi, ki: (bh // group, ki, 0)),
+            pl.BlockSpec((1, block_k, hd),
+                         lambda bh, qi, ki: (bh // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd),
+                               lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bhq, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

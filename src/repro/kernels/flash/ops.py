@@ -1,0 +1,36 @@
+"""Jit'd wrapper: model-layout (B, S, H, hd) -> kernel layout and back."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash.kernel import flash_attention_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q: (B, Sq, Hq, hd); k, v: (B, Skv, Hkv, hd) -> (B, Sq, Hq, hd).
+
+    GQA layout contract: q heads are grouped so that head h uses kv head
+    h // (Hq // Hkv) — matching repro.models.attention's reshape grouping.
+    """
+    b, sq, hq, hd = q.shape
+    _, skv, hkv, _ = k.shape
+    group = hq // hkv
+    # fold to (B * Hkv * group, S, hd) with kv-major order so kernel's
+    # bh // group lands on the right kv head
+    qt = q.transpose(0, 2, 1, 3).reshape(b, hkv, group, sq, hd)
+    qt = qt.reshape(b * hkv * group, sq, hd)
+    kt = k.transpose(0, 2, 1, 3).reshape(b * hkv, skv, hd)
+    vt = v.transpose(0, 2, 1, 3).reshape(b * hkv, skv, hd)
+    out = flash_attention_fwd(qt, kt, vt, causal=causal, window=window,
+                              softcap=softcap, block_q=block_q,
+                              block_k=block_k, interpret=interpret)
+    out = out.reshape(b, hkv, group, sq, hd).reshape(b, hq, sq, hd)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0):
+    """q: (BHq, Sq, hd); k, v: (BHkv, Skv, hd).  Returns (BHq, Sq, hd)."""
+    bhq, sq, hd = q.shape
+    bhkv, skv, _ = k.shape
+    group = bhq // bhkv
+    k = jnp.repeat(k, group, axis=0)
+    v = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(hd))
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows: softmax of all -1e30 is uniform; zero them like the
+    # kernel does (l == 0 guard)
+    any_valid = mask.any(axis=-1)[None, :, None]
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return jnp.where(any_valid, out, 0.0).astype(q.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.moe_gemm.ops import expert_gemm  # noqa: F401
+from repro.kernels.moe_gemm.ref import reference_expert_gemm  # noqa: F401

@@ -1,0 +1,64 @@
+"""Capacity-batched expert GEMM Pallas TPU kernel.
+
+The MoE layer (repro.models.moe) gathers each expert's top-capacity tokens
+into a dense (E_local, C, d) buffer; this kernel runs the per-expert GEMM
+(E, C, d) x (E, d, f) -> (E, C, f) with the K (d) dimension tiled and
+accumulated in VMEM scratch — a grouped matmul whose expert dim rides the
+grid, MegaBlocks-style but with static capacity (the TPU-friendly variant:
+no dynamic group offsets, dropped tokens are zero rows).
+
+Grid: (E, C_blocks, F_blocks, K_blocks); K minor => sequential accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemm_kernel(x_ref, w_ref, o_ref, acc_ref):
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]                       # (block_c, block_k)
+    w = w_ref[0]                       # (block_k, block_f)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def expert_gemm_fwd(x, w, *, block_c: int = 128, block_f: int = 128,
+                    block_k: int = 256, interpret: bool = False):
+    """x: (E, C, d), w: (E, d, f) -> (E, C, f)."""
+    e, c, d = x.shape
+    _, _, f = w.shape
+    block_c = min(block_c, c)
+    block_f = min(block_f, f)
+    block_k = min(block_k, d)
+    assert d % block_k == 0, (d, block_k)
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=(e, pl.cdiv(c, block_c), pl.cdiv(f, block_f),
+              d // block_k),
+        in_specs=[
+            pl.BlockSpec((1, block_c, block_k),
+                         lambda ei, ci, fi, ki: (ei, ci, ki)),
+            pl.BlockSpec((1, block_k, block_f),
+                         lambda ei, ci, fi, ki: (ei, ki, fi)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_f),
+                               lambda ei, ci, fi, ki: (ei, ci, fi)),
+        out_shape=jax.ShapeDtypeStruct((e, c, f), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,16 @@
+"""Jit'd wrapper for the expert GEMM kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.moe_gemm.kernel import expert_gemm_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_k",
+                                             "interpret"))
+def expert_gemm(x, w, *, block_c: int = 128, block_f: int = 128,
+                block_k: int = 256, interpret: bool = False):
+    return expert_gemm_fwd(x, w, block_c=block_c, block_f=block_f,
+                           block_k=block_k, interpret=interpret)

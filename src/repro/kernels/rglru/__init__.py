@@ -1,0 +1,2 @@
+from repro.kernels.rglru.ops import rglru_scan_op  # noqa: F401
+from repro.kernels.rglru.ref import reference_rglru  # noqa: F401

@@ -1,0 +1,15 @@
+"""Jit'd wrapper for the RG-LRU kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rglru.kernel import rglru_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_w", "interpret"))
+def rglru_scan_op(log_a, b, *, chunk: int = 64, block_w: int = 256,
+                  interpret: bool = False):
+    return rglru_fwd(log_a, b, chunk=chunk, block_w=block_w,
+                     interpret=interpret)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle: sequential RG-LRU recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_rglru(log_a, b):
+    """log_a, b: (B, S, W) -> h with h_t = exp(log_a_t) h_{t-1} + b_t."""
+    a = jnp.exp(log_a.astype(jnp.float32))
+    bf = b.astype(jnp.float32)
+
+    def step(h, xs):
+        at, bt = xs
+        h = at * h + bt
+        return h, h
+
+    h0 = jnp.zeros((a.shape[0], a.shape[2]), jnp.float32)
+    xs = (jnp.moveaxis(a, 1, 0), jnp.moveaxis(bf, 1, 0))
+    _, hs = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(hs, 0, 1).astype(b.dtype)

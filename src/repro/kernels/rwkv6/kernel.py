@@ -1,0 +1,90 @@
+"""WKV6 chunked-recurrence Pallas TPU kernel.
+
+State-passing chunked linear attention with per-channel data-dependent decay
+(RWKV6 "Finch", arXiv:2404.05892), adapted to TPU: the grid's minor
+dimension walks chunks SEQUENTIALLY (TPU grids are sequential per core), so
+the (hd x hd) state lives in VMEM scratch across chunk steps while r/k/v/w
+tiles stream in via BlockSpecs.  All decay factors appear as
+exp(non-positive) ratios — stable in f32 without log-space matmuls.
+
+Grid: (B*H, n_chunks); blocks: (chunk, hd).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, state_ref, *,
+                 chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0].astype(jnp.float32)      # (chunk, hd)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lw = lw_ref[0].astype(jnp.float32)    # log decay, < 0
+    u = u_ref[0].astype(jnp.float32)      # (1, hd) bonus
+
+    cs = jnp.cumsum(lw, axis=0)           # inclusive
+    cse = cs - lw                         # exclusive
+    state = state_ref[...]                # (hd, hd)
+
+    # inter-chunk: y1[t] = (r_t * exp(cse_t)) @ state
+    q1 = r * jnp.exp(cse)
+    y1 = jax.lax.dot_general(q1, state, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+
+    # intra-chunk: scores[t,s] = sum_i r_t[i] k_s[i] exp(cse_t - cs_s), s<t
+    ratio = cse[:, None, :] - cs[None, :, :]          # (t, s, hd)
+    pair = r[:, None, :] * k[None, :, :] * jnp.exp(jnp.minimum(ratio, 0.0))
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >
+           jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+    scores = pair.sum(-1) * tri.astype(jnp.float32)
+    y2 = jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+
+    # diagonal bonus u
+    diag = (r * u * k).sum(-1, keepdims=True) * v
+
+    o_ref[0] = (y1 + y2 + diag).astype(o_ref.dtype)
+
+    # state update: S' = diag(exp(cs_last)) S + sum_s exp(cs_last - cs_s) k_s v_s^T
+    decay_to_end = jnp.exp(cs[-1:] - cs)              # (chunk, hd)
+    kd = k * decay_to_end
+    state_ref[...] = state * jnp.exp(cs[-1])[:, None] + jax.lax.dot_general(
+        kd, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+def wkv6_fwd(r, k, v, log_w, u, *, chunk: int = 64, interpret: bool = False):
+    """r,k,v,log_w: (BH, S, hd); u: (BH_heads? -> (BH, hd)).  Returns (BH,S,hd).
+
+    ``u`` must already be broadcast to (BH, hd) (ops.py handles head tiling).
+    """
+    bh, s, hd = r.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    kernel = functools.partial(_wkv6_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, hd), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), r.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, log_w, u.reshape(bh, 1, hd))

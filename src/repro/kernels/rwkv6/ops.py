@@ -1,0 +1,20 @@
+"""Jit'd wrapper for the WKV6 kernel: (B, S, H, hd) model layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6.kernel import wkv6_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, log_w, u, *, chunk: int = 64, interpret: bool = False):
+    """r,k,v,log_w: (B, S, H, hd); u: (H, hd) -> (B, S, H, hd)."""
+    b, s, h, hd = r.shape
+    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    u_full = jnp.tile(u[None], (b, 1, 1)).reshape(b * h, hd)
+    out = wkv6_fwd(fold(r), fold(k), fold(v), fold(log_w), u_full,
+                   chunk=chunk, interpret=interpret)
+    return out.reshape(b, h, s, hd).transpose(0, 2, 1, 3)

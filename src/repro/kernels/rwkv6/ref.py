@@ -1,0 +1,29 @@
+"""Pure-jnp sequential-recurrence oracle for WKV6."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_wkv6(r, k, v, log_w, u):
+    """r,k,v,log_w: (BH, S, hd); u: (BH, hd).  Exact sequential recurrence:
+
+        y_t = S_{t-1}^T r_t + (sum_i r_i u_i k_i) v_t
+        S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    bh, s, hd = r.shape
+    rf, kf, vf = (x.astype(jnp.float32) for x in (r, k, v))
+    wf = jnp.exp(log_w.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    def step(state, xs):
+        rt, kt, vt, wt = xs
+        y = jnp.einsum("bi,bij->bj", rt, state) + (
+            (rt * uf * kt).sum(-1, keepdims=True) * vt)
+        new_state = state * wt[..., None] + kt[..., :, None] * vt[..., None, :]
+        return new_state, y
+
+    state0 = jnp.zeros((bh, hd, hd), jnp.float32)
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (rf, kf, vf, wf))
+    _, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype)

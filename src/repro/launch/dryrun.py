@@ -1,0 +1,176 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract roofline terms from the compiled artifact.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and only the dry-run wants 512 placeholder devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+Results accumulate incrementally in benchmarks/results/dryrun.json.
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import lower_cell  # noqa: E402
+from repro.roofline import analyze_compiled, roofline_terms  # noqa: E402
+
+RESULTS = Path(__file__).resolve().parents[3] / "benchmarks" / "results"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             unroll: bool = False, overrides: dict = None,
+             variant: str = "") -> dict:
+    cfg = configs.get_config(arch)
+    if unroll:
+        # exact flop/byte/collective accounting: XLA cost analysis counts a
+        # while-loop body once, so the roofline pass unrolls the layer stack.
+        cfg = dataclasses.replace(cfg, unroll_stack=True)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = configs.get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    lowered = lower_cell(cfg, shape, mesh)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    stats = analyze_compiled(compiled)
+    try:
+        mem = compiled.memory_analysis()
+        stats["memory"] = {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(
+                getattr(mem, "generated_code_size_in_bytes", 0)),
+        }
+    except Exception as e:  # pragma: no cover - backend dependent
+        stats["memory"] = {"error": str(e)}
+    terms = roofline_terms(stats, cfg, shape, n_chips)
+    mesh_label = ("2x16x16" if multi_pod else "16x16") \
+        + ("-unrolled" if unroll else "") \
+        + (f"-{variant}" if variant else "")
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_label,
+        "kind": shape.kind,
+        "overrides": overrides or {},
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "stats": stats,
+        "roofline": terms,
+        "ok": True,
+    }
+    return rec
+
+
+def save(record: dict, out: Path):
+    out.parent.mkdir(parents=True, exist_ok=True)
+    existing = {}
+    if out.exists():
+        existing = json.loads(out.read_text())
+    key = f"{record['arch']}|{record['shape']}|{record['mesh']}"
+    existing[key] = record
+    out.write_text(json.dumps(existing, indent=1))
+
+
+def already_done(arch, shape_name, mesh_name, out: Path) -> bool:
+    if not out.exists():
+        return False
+    data = json.loads(out.read_text())
+    rec = data.get(f"{arch}|{shape_name}|{mesh_name}")
+    return bool(rec and rec.get("ok"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll layer stacks for exact cost accounting "
+                         "(roofline pass)")
+    ap.add_argument("--variant", default="",
+                    help="label for a §Perf variant (stored in the key)")
+    ap.add_argument("--ce-chunk", type=int, default=None)
+    ap.add_argument("--attn-chunk", type=int, default=None)
+    ap.add_argument("--remat-policy", default=None)
+    ap.add_argument("--window-cache", action="store_true", default=None)
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--no-shard-rnn", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=str(RESULTS / "dryrun.json"))
+    args = ap.parse_args()
+    out = Path(args.out)
+
+    if args.all:
+        cells = list(configs.cells())
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    failures = 0
+    overrides = {}
+    if args.ce_chunk is not None:
+        overrides["ce_chunk"] = args.ce_chunk
+    if args.attn_chunk is not None:
+        overrides["attn_kv_chunk"] = args.attn_chunk
+    if args.remat_policy is not None:
+        overrides["remat_policy"] = args.remat_policy
+    if args.window_cache:
+        overrides["window_kv_cache"] = True
+    if args.capacity_factor is not None:
+        overrides["capacity_factor"] = args.capacity_factor
+    if args.no_shard_rnn:
+        overrides["shard_rnn"] = False
+
+    for arch, shape_name in cells:
+        for multi_pod in meshes:
+            mesh_name = ("2x16x16" if multi_pod else "16x16") + \
+                ("-unrolled" if args.unroll else "") + \
+                (f"-{args.variant}" if args.variant else "")
+            if not args.force and already_done(arch, shape_name, mesh_name, out):
+                print(f"[skip] {arch} {shape_name} {mesh_name} (cached)")
+                continue
+            label = f"{arch} {shape_name} {mesh_name}"
+            print(f"[run ] {label}", flush=True)
+            try:
+                rec = run_cell(arch, shape_name, multi_pod,
+                               unroll=args.unroll, overrides=overrides,
+                               variant=args.variant)
+                save(rec, out)
+                r = rec["roofline"]
+                print(f"[ ok ] {label}: compile={rec['compile_s']}s "
+                      f"dominant={r['dominant']} "
+                      f"t_comp={r['compute_s']:.2e}s t_mem={r['memory_s']:.2e}s "
+                      f"t_coll={r['collective_s']:.2e}s", flush=True)
+            except Exception:
+                failures += 1
+                err = traceback.format_exc()
+                save({"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                      "ok": False, "error": err[-4000:]}, out)
+                print(f"[FAIL] {label}\n{err[-2000:]}", flush=True)
+    print(f"done; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

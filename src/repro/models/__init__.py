@@ -1,0 +1,3 @@
+# Intentionally empty: import submodules directly (repro.models.model, ...).
+# Keeping this module side-effect-free avoids circular imports between
+# repro.sharding (needs models.layers.LP) and model assembly code.

@@ -1,0 +1,194 @@
+"""GQA attention: full/sliding-window masks, logit softcap, cross-attention,
+and decode with an updatable KV cache.
+
+The jnp path here is the lowering used by the dry-run and CPU smoke tests; the
+Pallas flash kernel (repro.kernels.flash) implements the same math for TPU and
+is validated against it in tests.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import LP, apply_rope, dense_init, softcap
+
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "w_q": dense_init(kq, (d, h, hd), ("embed", "heads", "head_dim"), dtype=dtype),
+        "w_k": dense_init(kk, (d, hkv, hd), ("embed", "kv_heads", "head_dim"), dtype=dtype),
+        "w_v": dense_init(kv, (d, hkv, hd), ("embed", "kv_heads", "head_dim"), dtype=dtype),
+        "w_o": dense_init(ko, (h, hd, d), ("heads", "head_dim", "embed"),
+                          in_axis=(0, 1), dtype=dtype),
+    }
+
+
+def _mask_bias(q_pos, k_pos, kind: str, window: int):
+    """(q, k) additive mask bias in f32.  q_pos: (...,Sq), k_pos: (...,Sk)."""
+    q = q_pos[..., :, None]
+    k = k_pos[..., None, :]
+    if kind == "causal":
+        ok = k <= q
+    elif kind == "local":
+        ok = (k <= q) & (k > q - window)
+    elif kind == "none":
+        ok = jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), bool)
+    else:
+        raise ValueError(kind)
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+def _sdpa(q, k, v, bias, logit_cap: float):
+    """q: (B,Sq,H,hd)  k,v: (B,Sk,Hkv,hd)  bias: broadcastable (B,1,Sq,Sk)."""
+    b, sq, h, hd = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    q = q.reshape(b, sq, hkv, g, hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    scores = softcap(scores, logit_cap)
+    scores = scores + bias[:, :, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def _sdpa_chunked(q, k, v, bias, logit_cap: float, kv_chunk: int):
+    """Flash-style online-softmax over KV chunks in the XLA path (§Perf:
+    the (Sq, Sk) score tile never exceeds (Sq, kv_chunk)).  Python loop so
+    the dry-run cost accounting stays exact (see ModelConfig.unroll_stack).
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    hkv = k.shape[2]
+    g = h // hkv
+    qf = q.reshape(b, sq, hkv, g, hd)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    m = jnp.full((b, hkv, g, sq, 1), -1e30, jnp.float32)
+    l = jnp.zeros((b, hkv, g, sq, 1), jnp.float32)
+    acc = jnp.zeros((b, hkv, g, sq, hd), jnp.float32)
+    n_chunks = (sk + kv_chunk - 1) // kv_chunk
+    for ci in range(n_chunks):
+        lo = ci * kv_chunk
+        hi = min(lo + kv_chunk, sk)
+        kc = k[:, lo:hi]
+        vc = v[:, lo:hi]
+        bias_c = bias[:, :, :, lo:hi]
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kc).astype(jnp.float32)
+        s = softcap(s * scale, logit_cap) + bias_c[:, :, None, :, :]
+        m_cur = s.max(-1, keepdims=True)
+        m_new = jnp.maximum(m, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(s <= -1e29, 0.0, p)
+        corr = jnp.exp(m - m_new)
+        l = corr * l + p.sum(-1, keepdims=True)
+        acc = acc * corr + jnp.einsum("bhgqk,bkhd->bhgqd", p,
+                                      vc.astype(jnp.float32))
+        m = m_new
+    out = acc / jnp.where(l == 0.0, 1.0, l)
+    out = jnp.moveaxis(out, 3, 1)  # (b, sq, hkv, g, hd)
+    return out.reshape(b, sq, h, hd).astype(v.dtype)
+
+
+def attention_forward_kv(params, x, cfg: ModelConfig, *, mask_kind: str,
+                         positions, kv_x=None, kv_positions=None):
+    """Training/prefill attention.  ``kv_x`` set => cross-attention.
+
+    Returns (out, k, v) so prefill can populate the KV cache for free.
+    """
+    kv_in = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhe->bshe", x, params["w_q"])
+    k = jnp.einsum("bsd,dhe->bshe", kv_in, params["w_k"])
+    v = jnp.einsum("bsd,dhe->bshe", kv_in, params["w_v"])
+    if kv_x is None:  # self-attention -> RoPE
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        kv_pos = positions
+    else:
+        kv_pos = kv_positions
+    bias = _mask_bias(positions, kv_pos, mask_kind, cfg.window_size)[:, None]
+    if cfg.attn_kv_chunk and k.shape[1] > cfg.attn_kv_chunk:
+        out = _sdpa_chunked(q, k, v, bias, cfg.logit_softcap,
+                            cfg.attn_kv_chunk)
+    else:
+        out = _sdpa(q, k, v, bias, cfg.logit_softcap)
+    return jnp.einsum("bshe,hed->bsd", out, params["w_o"]), k, v
+
+
+def attention_forward(params, x, cfg: ModelConfig, *, mask_kind: str,
+                      positions, kv_x=None, kv_positions=None):
+    out, _, _ = attention_forward_kv(params, x, cfg, mask_kind=mask_kind,
+                                     positions=positions, kv_x=kv_x,
+                                     kv_positions=kv_positions)
+    return out
+
+
+# ------------------------------------------------------------------- decode
+def init_kv_cache(cfg: ModelConfig, num_layers: int, batch: int, max_len: int,
+                  dtype=jnp.bfloat16):
+    shape = (num_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+def kv_cache_spec(cfg: ModelConfig, num_layers: int, batch: int, max_len: int,
+                  dtype=jnp.bfloat16):
+    shape = (num_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, dtype),
+        "v": jax.ShapeDtypeStruct(shape, dtype),
+    }
+
+
+def attention_decode(params, x, cache_k, cache_v, pos, cfg: ModelConfig, *,
+                     mask_kind: str, cross: bool = False, ring: bool = False):
+    """One-token decode.  x: (B,1,d); cache_{k,v}: (B,S,Hkv,hd); pos: scalar.
+
+    For ``cross=True`` the caches hold precomputed encoder K/V and are not
+    updated; ``pos`` masks nothing (full visibility).
+
+    ``ring=True`` (local_attn + cfg.window_kv_cache, §Perf): the cache holds
+    only ``window`` slots; position p lives in slot p % window.  K is stored
+    with RoPE already applied at its true position, so ring indexing only
+    changes the masking: slot s currently holds position
+    pos - ((pos - s) mod window), masked out while still negative.
+
+    Returns (out, new_cache_k, new_cache_v).
+    """
+    b = x.shape[0]
+    s_max = cache_k.shape[1]
+    q = jnp.einsum("bsd,dhe->bshe", x, params["w_q"])
+    if not cross:
+        k_new = jnp.einsum("bsd,dhe->bshe", x, params["w_k"])
+        v_new = jnp.einsum("bsd,dhe->bshe", x, params["w_v"])
+        q = apply_rope(q, jnp.full((b, 1), pos), cfg.rope_theta)
+        k_new = apply_rope(k_new, jnp.full((b, 1), pos), cfg.rope_theta)
+        write_at = jnp.mod(pos, s_max) if ring else pos
+        cache_k = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, k_new.astype(cache_k.dtype), write_at, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, v_new.astype(cache_v.dtype), write_at, axis=1)
+    if cross:
+        bias = jnp.zeros((b, 1, 1, s_max), jnp.float32)
+    elif ring:
+        slots = jnp.arange(s_max)[None, :]
+        k_pos = pos - jnp.mod(pos - slots, s_max)   # true position per slot
+        ok = k_pos >= 0
+        bias = jnp.where(ok, 0.0, -1e30).astype(jnp.float32)[:, None, None, :]
+        bias = jnp.broadcast_to(bias, (b, 1, 1, s_max))
+    else:
+        q_pos = jnp.full((b, 1), pos)
+        k_pos = jnp.arange(s_max)[None, :]
+        bias = _mask_bias(q_pos, k_pos,
+                          "local" if mask_kind == "local" else "causal",
+                          cfg.window_size)[:, None]
+    out = _sdpa(q, cache_k, cache_v, bias, cfg.logit_softcap)
+    out = jnp.einsum("bshe,hed->bsd", out, params["w_o"])
+    return out, cache_k, cache_v

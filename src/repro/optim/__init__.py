@@ -1,0 +1,2 @@
+from repro.optim.adamw import adamw_init, adamw_update, global_norm  # noqa: F401
+from repro.optim.schedule import warmup_cosine  # noqa: F401

@@ -1,0 +1,164 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e constants):
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs            (197 TFLOP/s bf16)
+  memory     = HLO_bytes_per_device / HBM_bw                (819 GB/s)
+  collective = collective_operand_bytes_per_device / link_bw (~50 GB/s/link)
+
+``cost_analysis()`` provides per-device FLOPs / bytes-accessed for the
+SPMD-partitioned module.  Collective bytes are NOT in cost_analysis: we parse
+the post-optimization HLO (``compiled.as_text()``), resolve each collective's
+operand shapes, and sum their sizes.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link (~)
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+# "%name = bf16[1,2,3]{...} opcode(" — defining instruction
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*\(?([a-z0-9]+)\[([\d,]*)\]")
+# typed operand inside an op call: "bf16[8,128]{1,0} %name"
+_TYPED_OPERAND_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\][^\s]*\s+%?([\w.\-]+)")
+
+
+def _nbytes(dtype: str, dims: str) -> Optional[int]:
+    if dtype not in _DTYPE_BYTES:
+        return None
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes per collective kind from post-SPMD HLO text."""
+    shapes: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            name, dtype, dims = m.groups()
+            nb = _nbytes(dtype, dims)
+            if nb is not None:
+                shapes[name] = nb
+    totals = {k: 0 for k in COLLECTIVE_OPS}
+    counts = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        for op in COLLECTIVE_OPS:
+            # match "= <type> op(" or "= (<tuple>) op(" — avoid -start/-done
+            if f" {op}(" not in line:
+                continue
+            if f"{op}-start" in line or f"{op}-done" in line:
+                # async start carries the operands; -done carries none
+                if f"{op}-done" in line:
+                    continue
+            # operand section is inside the op's parens
+            call = line.split(f" {op}(", 1)[1]
+            depth, end = 1, 0
+            for i, ch in enumerate(call):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            args = call[:end]
+            got = 0
+            for am in _TYPED_OPERAND_RE.finditer(args):
+                dtype, dims, _ = am.groups()
+                nb = _nbytes(dtype, dims)
+                if nb is not None:
+                    got += nb
+            if got == 0:
+                # untyped operand list: resolve via defining instructions
+                for name in re.findall(r"%?([\w.\-]+)", args):
+                    got += shapes.get(name, 0)
+            totals[op] += got
+            counts[op] += 1
+            break
+    totals["_counts"] = counts
+    return totals
+
+
+def analyze_compiled(compiled) -> dict:
+    """FLOPs/bytes from cost_analysis + collective bytes from HLO text."""
+    stats: dict = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        stats["flops"] = float(ca.get("flops", 0.0))
+        stats["bytes_accessed"] = float(ca.get("bytes accessed", 0.0))
+        stats["transcendentals"] = float(ca.get("transcendentals", 0.0))
+    except Exception as e:  # pragma: no cover
+        stats["cost_analysis_error"] = str(e)
+        stats["flops"] = 0.0
+        stats["bytes_accessed"] = 0.0
+    text = compiled.as_text()
+    coll = collective_bytes_from_hlo(text)
+    counts = coll.pop("_counts")
+    stats["collective_bytes"] = coll
+    stats["collective_counts"] = counts
+    stats["collective_bytes_total"] = int(sum(coll.values()))
+    stats["hlo_lines"] = text.count("\n")
+    return stats
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); decode: D=new tokens."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.arch_type == "encdec":
+            # encoder fwd+bwd over frames (no 2x lm head) + decoder over labels
+            from repro.models.encdec import decoder_len
+            tokens = shape.global_batch * (shape.seq_len + decoder_len(cfg, shape.seq_len))
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def roofline_terms(stats: dict, cfg, shape, n_chips: int) -> dict:
+    flops = stats.get("flops", 0.0)
+    byts = stats.get("bytes_accessed", 0.0)
+    coll = stats.get("collective_bytes_total", 0)
+    t_comp = flops / PEAK_FLOPS
+    t_mem = byts / HBM_BW
+    t_coll = coll / LINK_BW
+    dominant = max((("compute", t_comp), ("memory", t_mem),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, shape)
+    hlo_total = flops * n_chips
+    return {
+        "compute_s": t_comp,
+        "memory_s": t_mem,
+        "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_flops_ratio": (mf / hlo_total) if hlo_total else 0.0,
+        "bound_step_s": max(t_comp, t_mem, t_coll),
+        "roofline_fraction": (mf / n_chips / PEAK_FLOPS) /
+                             max(t_comp, t_mem, t_coll, 1e-30),
+    }

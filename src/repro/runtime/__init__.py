@@ -1,0 +1,2 @@
+from repro.runtime.fault import FaultInjector, run_with_restarts  # noqa: F401
+from repro.runtime.straggler import StragglerTracker  # noqa: F401

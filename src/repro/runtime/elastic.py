@@ -1,0 +1,36 @@
+"""Elastic scaling: restore a checkpoint onto a DIFFERENT mesh.
+
+Because parameters are saved as full logical arrays with their logical axes
+derivable from the model config (repro.sharding rules), growing or shrinking
+the mesh is just: build the model on the new mesh -> derive new
+NamedShardings -> restore() with them.  Divisibility-aware rules fall back
+to replication, so any mesh whose axes divide the big dims works — e.g. a
+16x16 run resumes on 8x16 after losing a slice, or on 2x16x16 when a second
+pod joins.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.launch.steps import abstract_opt, abstract_params
+from repro.models.model import build_model
+
+
+def resume_on_mesh(cfg: ModelConfig, mesh: Mesh, ckpt_dir: str,
+                   with_opt: bool = True) -> Tuple:
+    """Returns (model, params, opt_state_or_None, step) placed on ``mesh``."""
+    model = build_model(cfg, mesh)
+    params_sds, p_sh = abstract_params(model)
+    mgr = CheckpointManager(ckpt_dir)
+    if with_opt:
+        opt_sds, o_sh = abstract_opt(params_sds, p_sh)
+        (params, opt_state), step = mgr.restore((params_sds, opt_sds),
+                                                (p_sh, o_sh))
+        return model, params, opt_state, step
+    params, step = mgr.restore(params_sds, p_sh)
+    return model, params, None, step

@@ -1,0 +1,120 @@
+"""CCM work-model invariants (paper §III): update formulae == recomputation,
+memory barrier, homing costs.  Property-based via hypothesis."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CCMParams, CCMState, exchange_eval, random_phase
+from repro.core.problem import initial_assignment
+
+PARAMS = CCMParams(alpha=1.0, beta=1e-9, gamma=1e-11, delta=1e-9,
+                   memory_constraint=False)
+
+
+def _phase(seed, ranks=4, tasks=24, blocks=6, comms=40):
+    return random_phase(seed, num_ranks=ranks, num_tasks=tasks,
+                        num_blocks=blocks, num_comms=comms, mem_cap=1e12)
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 1000), data=st.data())
+def test_exchange_eval_matches_recompute(seed, data):
+    """Thm III.1 + eq (2) + comm updates: O(1) update formulae must equal a
+    full rebuild after the exchange is applied."""
+    phase = _phase(seed)
+    a0 = initial_assignment(phase, "round_robin")
+    state = CCMState.build(phase, a0, PARAMS)
+    r_a, r_b = 0, data.draw(st.integers(1, phase.num_ranks - 1))
+    on_a = np.nonzero(a0 == r_a)[0]
+    on_b = np.nonzero(a0 == r_b)[0]
+    n_ab = data.draw(st.integers(0, min(4, len(on_a))))
+    n_ba = data.draw(st.integers(0, min(4, len(on_b))))
+    tasks_ab = list(on_a[:n_ab])
+    tasks_ba = list(on_b[:n_ba])
+
+    ev = exchange_eval(state, tasks_ab, tasks_ba, r_a, r_b)
+
+    a1 = a0.copy()
+    a1[tasks_ab] = r_b
+    a1[tasks_ba] = r_a
+    truth = CCMState.build(phase, a1, PARAMS)
+    assert ev.work_a_after == pytest.approx(truth.work(r_a), rel=1e-9, abs=1e-12)
+    assert ev.work_b_after == pytest.approx(truth.work(r_b), rel=1e-9, abs=1e-12)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 1000), data=st.data())
+def test_apply_transfer_incremental_consistency(seed, data):
+    """Repeated apply_transfer must keep every derived quantity equal to a
+    from-scratch rebuild."""
+    phase = _phase(seed)
+    a0 = initial_assignment(phase, "home")
+    state = CCMState.build(phase, a0, PARAMS)
+    for _ in range(5):
+        r_from = data.draw(st.integers(0, phase.num_ranks - 1))
+        on = np.nonzero(state.assignment == r_from)[0]
+        if len(on) == 0:
+            continue
+        n = data.draw(st.integers(1, min(3, len(on))))
+        r_to = (r_from + 1 + data.draw(st.integers(0, phase.num_ranks - 2))) \
+            % phase.num_ranks
+        state.apply_transfer(on[:n], r_from, r_to)
+    truth = CCMState.build(phase, state.assignment, PARAMS)
+    np.testing.assert_allclose(state.load, truth.load, rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(state.vol, truth.vol, rtol=1e-9, atol=1e-6)
+    np.testing.assert_array_equal(state.block_count, truth.block_count)
+    np.testing.assert_allclose(state.mem_task, truth.mem_task, rtol=1e-9,
+                               atol=1e-6)
+    for r in range(phase.num_ranks):
+        assert state.work(r) == pytest.approx(truth.work(r), rel=1e-9,
+                                              abs=1e-9)
+
+
+def test_memory_barrier_epsilon():
+    """(9): infeasible rank -> W = +inf; feasible -> finite."""
+    phase = _phase(0)
+    phase.rank_mem_cap[:] = 1.0  # impossible
+    params = CCMParams(memory_constraint=True)
+    st_ = CCMState.build(phase, initial_assignment(phase, "home"), params)
+    assert np.isinf(st_.max_work())
+    phase.rank_mem_cap[:] = 1e15
+    st2 = CCMState.build(phase, initial_assignment(phase, "home"), params)
+    assert np.isfinite(st2.max_work())
+
+
+def test_homing_cost_definition():
+    """(10): M_H counts only off-home blocks present on the rank."""
+    phase = _phase(3)
+    a = initial_assignment(phase, "home")
+    state = CCMState.build(phase, a, CCMParams())
+    for r in range(phase.num_ranks):
+        manual = 0.0
+        for b in range(phase.num_blocks):
+            present = np.any((a == r) & (phase.task_block == b))
+            if present and phase.block_home[b] != r:
+                manual += phase.block_size[b]
+        assert state.homing_cost(r) == pytest.approx(manual)
+
+
+def test_off_rank_volume_is_max_of_send_recv():
+    """(5): V_notin = max(sent, received), excluding self-edges."""
+    phase = _phase(4)
+    a = initial_assignment(phase, "round_robin")
+    state = CCMState.build(phase, a, PARAMS)
+    for r in range(phase.num_ranks):
+        sent = sum(v for s, d, v in zip(a[phase.comm_src], a[phase.comm_dst],
+                                        phase.comm_vol) if s == r and d != r)
+        recv = sum(v for s, d, v in zip(a[phase.comm_src], a[phase.comm_dst],
+                                        phase.comm_vol) if d == r and s != r)
+        assert state.off_rank_volume(r) == pytest.approx(max(sent, recv))
+
+
+def test_speed_factors_scale_load():
+    phase = _phase(5)
+    phase.rank_speed[:] = 1.0
+    phase.rank_speed[0] = 0.5
+    a = initial_assignment(phase, "round_robin")
+    state = CCMState.build(phase, a, CCMParams(alpha=1.0, beta=0, gamma=0,
+                                               delta=0,
+                                               memory_constraint=False))
+    assert state.work(0) == pytest.approx(state.load[0] / 0.5)

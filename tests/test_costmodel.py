@@ -1,0 +1,90 @@
+"""Cost-model FNN (paper §VI-D) + Algorithm 1 data reduction tests."""
+import numpy as np
+import pytest
+
+from repro.costmodel import (StandardScaler, dynamic_data_reduce,
+                             train_cost_model)
+from repro.costmodel.losses import under_penalized_rmse
+from repro.costmodel.network import leaky_relu
+from repro.costmodel.train import evaluate_cost_model
+
+
+def _synthetic_tasks(n, seed=0):
+    """Features resembling the assembly tasks; duration = nonlinear fn."""
+    rng = np.random.default_rng(seed)
+    n_rows = rng.integers(16, 97, n)
+    n_cols = rng.integers(16, 97, n)
+    quad = rng.choice([4, 16, 64, 192], n, p=[0.6, 0.25, 0.1, 0.05])
+    inter = (n_rows * n_cols * rng.uniform(0.3, 1.0, n)).astype(int)
+    x = np.stack([n_rows, n_cols, inter, quad], 1).astype(np.float64)
+    y = n_rows * n_cols * quad * 4e-9 + inter * 1e-9
+    y = y * rng.lognormal(0, 0.05, n)  # machine noise
+    return x, y
+
+
+def test_fnn_learns_task_times():
+    x, y = _synthetic_tasks(3000)
+    xt, yt = _synthetic_tasks(500, seed=1)
+    model, hist = train_cost_model(x, y, epochs=40, seed=0)
+    metrics = evaluate_cost_model(model, xt, yt)
+    assert hist["loss"][-1] < hist["loss"][0]
+    assert metrics["rel_err_median"] < 0.3, metrics
+
+
+def test_under_penalized_loss_barely_over_predicts():
+    """Eq. 32 discounts under-prediction errors (over-predicted task times
+    hurt load balance more), so the trained model should 'barely
+    over-predict' — the paper's stated outcome."""
+    x, y = _synthetic_tasks(2000)
+    xt, yt = _synthetic_tasks(400, seed=2)
+    m_plain, _ = train_cost_model(x, y, epochs=30, alpha=1.0, seed=0)
+    m_under, _ = train_cost_model(x, y, epochs=30, alpha=0.15, seed=0)
+    over_plain = evaluate_cost_model(m_plain, xt, yt)["over_predict_frac"]
+    over_under = evaluate_cost_model(m_under, xt, yt)["over_predict_frac"]
+    assert over_under < over_plain
+    assert over_under < 0.2
+
+
+def test_under_penalized_rmse_math():
+    import jax.numpy as jnp
+    pred = jnp.array([2.0, 0.0])
+    truth = jnp.array([1.0, 1.0])
+    # over by 1 (weight 1) and under by 1 (weight alpha)
+    val = under_penalized_rmse(pred, truth, alpha=0.25)
+    assert float(val) == pytest.approx(np.sqrt((1.0 + 0.25) / 2))
+
+
+def test_leaky_relu_eq31():
+    import jax.numpy as jnp
+    x = jnp.array([-2.0, 0.0, 3.0])
+    np.testing.assert_allclose(leaky_relu(x), [-0.02, 0.0, 3.0])
+
+
+def test_dynamic_data_reduce_targets_overrepresented_bins():
+    """Alg. 1: drops come from the fullest bins; target size respected."""
+    rng = np.random.default_rng(0)
+    short = rng.uniform(0.0, 0.1, 9000)   # over-represented
+    long_ = rng.uniform(0.5, 1.0, 1000)
+    vals = np.concatenate([short, long_])
+    keep = dynamic_data_reduce(vals, 3000, n_bins=16, theta=0.5, seed=0)
+    assert abs(len(keep) - 3000) <= 16
+    kept = vals[keep]
+    # the long tail must survive nearly intact
+    assert (kept > 0.5).sum() >= 950
+    # the short mass must be the one cut
+    assert (kept < 0.1).sum() < 9000 * 0.35
+
+
+def test_dynamic_data_reduce_noop_when_small():
+    vals = np.arange(10.0)
+    keep = dynamic_data_reduce(vals, 100)
+    assert len(keep) == 10
+
+
+def test_standard_scaler():
+    rng = np.random.default_rng(0)
+    x = rng.normal(5.0, 3.0, (1000, 4))
+    s = StandardScaler().fit(x)
+    z = s.transform(x)
+    np.testing.assert_allclose(z.mean(0), 0.0, atol=1e-9)
+    np.testing.assert_allclose(z.std(0), 1.0, atol=1e-9)

@@ -1,0 +1,93 @@
+"""End-to-end behaviour tests: training convergence, data determinism,
+sharding rules, and the serving loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.data.pipeline import SyntheticLMData, make_batch
+from repro.launch.mesh import make_local_mesh
+from repro.launch.serve import serve_batch
+from repro.launch.train import train_loop
+from repro.models.layers import split_lp_tree
+from repro.models.model import build_model
+from repro.sharding import MeshAxes, spec_for
+
+MESH = make_local_mesh(1, 1)
+
+
+def test_training_reduces_loss():
+    cfg = configs.get_smoke_config("tinyllama-1.1b")
+    _, _, losses = train_loop(cfg, MESH, steps=40, seq_len=64,
+                              global_batch=4, lr=3e-3, log_every=100)
+    first = np.mean(losses[:5])
+    last = np.mean(losses[-5:])
+    assert last < first - 0.2, (first, last)
+
+
+def test_moe_training_reduces_loss_and_reports_stats():
+    cfg = configs.get_smoke_config("qwen3-moe-30b-a3b")
+    from repro.launch.steps import make_train_step
+    from repro.optim import adamw_init
+    model = build_model(cfg, MESH)
+    params, _ = split_lp_tree(model.init(jax.random.key(0)))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(model, lr=1e-3))
+    losses = []
+    for i in range(20):
+        batch = make_batch(cfg, 64, 4, i)
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+    counts = np.asarray(m["expert_counts"])
+    assert counts.shape[-1] == cfg.num_experts
+    # every token routed top_k times
+    assert counts.sum() == pytest.approx(2 * 4 * 64 * cfg.top_k, rel=1e-6)
+
+
+def test_data_pipeline_deterministic():
+    d1 = SyntheticLMData(1024, 64, 4, seed=3)
+    d2 = SyntheticLMData(1024, 64, 4, seed=3)
+    b1, b2 = d1.batch(17), d2.batch(17)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = d1.batch(18)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # targets are next-token shifted
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["targets"][:, :-1])
+
+
+def test_sharding_rules_divisibility_and_dedupe():
+    mesh = MESH  # 1x1 — sizes 1, everything divisible
+    axes = MeshAxes.for_mesh(mesh)
+    # square matrix mapping two dims to the same axis -> deduped
+    spec = spec_for(mesh, axes, ("rnn", "rnn"), (64, 64))
+    named = [s for s in spec if s is not None]
+    assert len(named) <= 1
+    # non-divisible dim replicated (simulate with a fake larger mesh need:
+    # on a 1-sized axis everything divides; check rule table instead)
+    spec2 = spec_for(mesh, axes, ("vocab", "embed"), (100, 64))
+    assert len(spec2) == 2
+
+
+def test_serve_batch_all_families():
+    rng = np.random.default_rng(0)
+    for arch in ("smollm-360m", "rwkv6-7b"):
+        cfg = configs.get_smoke_config(arch)
+        model = build_model(cfg, MESH)
+        params, _ = split_lp_tree(model.init(jax.random.key(0)))
+        prompts = rng.integers(0, cfg.vocab_size, (2, 16)).astype(np.int32)
+        out = serve_batch(model, params, prompts, max_new=8)
+        assert out.shape == (2, 8)
+        assert (out >= 0).all() and (out < cfg.vocab_size).all()
+
+
+def test_greedy_decode_is_deterministic():
+    cfg = configs.get_smoke_config("tinyllama-1.1b")
+    model = build_model(cfg, MESH)
+    params, _ = split_lp_tree(model.init(jax.random.key(0)))
+    prompts = np.ones((2, 12), np.int32)
+    o1 = serve_batch(model, params, prompts, max_new=6)
+    o2 = serve_batch(model, params, prompts, max_new=6)
+    np.testing.assert_array_equal(o1, o2)
