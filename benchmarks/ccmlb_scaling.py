@@ -1,7 +1,18 @@
 """§IV scalability: CCM-LB solve time + quality vs rank count / fanout /
-rounds (the paper reports <0.7 s at 14 ranks; we sweep up to 256)."""
+rounds (the paper reports <0.7 s at 14 ranks; we sweep up to 256).
+
+Each rank-count config runs twice — scalar reference path
+(``use_engine=False``) and vectorized engine (``use_engine=True``) — and the
+results land in ``BENCH_ccmlb_scaling.json`` so the perf trajectory (and the
+engine speedup) is tracked from PR to PR.  Each pair of runs is checked for
+assignment identity (recorded as ``identical_assignments`` per config and
+asserted here; see repro/core/engine.py for the contract), so the speedup
+column is apples to apples.
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
@@ -9,25 +20,60 @@ import numpy as np
 from repro.core import CCMParams, CCMState, ccm_lb, random_phase
 from repro.core.problem import initial_assignment
 
+JSON_PATH = os.environ.get("BENCH_CCMLB_JSON", "BENCH_ccmlb_scaling.json")
+N_ITER = 4
+
 
 def run(report):
     params = CCMParams(delta=1e-9)
+    records = []
+    speedup_largest = None
     for ranks in (16, 64, 256):
         phase = random_phase(1, num_ranks=ranks, num_tasks=25 * ranks,
                              num_blocks=3 * ranks, num_comms=50 * ranks,
                              mem_cap=1e12)
         a0 = initial_assignment(phase)
         st0 = CCMState.build(phase, a0, params)
-        t0 = time.perf_counter()
-        res = ccm_lb(phase, a0, params, n_iter=4, k_rounds=2, fanout=4,
-                     seed=0)
-        dt = time.perf_counter() - t0
         mean = phase.task_load.sum() / ranks
-        report(f"ccmlb_ranks_{ranks}", dt * 1e6,
-               f"imb {st0.imbalance():.2f}->{res.imbalance[-1]:.4f} "
-               f"Wmax/mean={res.max_work[-1]/mean:.4f} "
-               f"transfers={res.transfers}")
-    # fanout/round sweep at 64 ranks
+        times = {}
+        assignments = {}
+        for use_engine in (False, True):
+            t0 = time.perf_counter()
+            res = ccm_lb(phase, a0, params, n_iter=N_ITER, k_rounds=2,
+                         fanout=4, seed=0, use_engine=use_engine)
+            dt = time.perf_counter() - t0
+            times[use_engine] = dt
+            assignments[use_engine] = res.assignment
+            tag = "engine" if use_engine else "scalar"
+            report(f"ccmlb_ranks_{ranks}_{tag}", dt * 1e6,
+                   f"imb {st0.imbalance():.2f}->{res.imbalance[-1]:.4f} "
+                   f"Wmax/mean={res.max_work[-1]/mean:.4f} "
+                   f"transfers={res.transfers}")
+            records.append({
+                "ranks": ranks,
+                "tasks": phase.num_tasks,
+                "comms": phase.num_comms,
+                "n_iter": N_ITER,
+                "engine": use_engine,
+                "seconds": dt,
+                "seconds_per_iteration": dt / N_ITER,
+                "imbalance_after": float(res.imbalance[-1]),
+                "max_work_over_mean": float(res.max_work[-1] / mean),
+                "transfers": int(res.transfers),
+            })
+        # ratio goes in the derived column only — the us_per_call column
+        # stays a call time so the CSV is uniformly parseable
+        identical = bool(np.array_equal(assignments[True],
+                                        assignments[False]))
+        assert identical, f"engine/scalar trajectories diverged at {ranks} ranks"
+        speedup = times[False] / times[True]
+        report(f"ccmlb_ranks_{ranks}_speedup", 0.0,
+               f"engine {speedup:.2f}x over scalar, identical assignments")
+        records[-1]["identical_assignments"] = identical
+        records[-2]["identical_assignments"] = identical
+        speedup_largest = speedup
+
+    # fanout/round sweep at 64 ranks (engine path — the default)
     phase = random_phase(2, num_ranks=64, num_tasks=1600, num_blocks=192,
                          num_comms=3200, mem_cap=1e12)
     a0 = initial_assignment(phase)
@@ -38,3 +84,20 @@ def run(report):
         dt = time.perf_counter() - t0
         report(f"ccmlb_f{fanout}_k{rounds}", dt * 1e6,
                f"imb_after={res.imbalance[-1]:.4f} transfers={res.transfers}")
+        records.append({
+            "ranks": 64, "tasks": 1600, "comms": 3200, "n_iter": 3,
+            "fanout": fanout, "k_rounds": rounds, "engine": True,
+            "seconds": dt, "seconds_per_iteration": dt / 3,
+            "imbalance_after": float(res.imbalance[-1]),
+            "transfers": int(res.transfers),
+        })
+
+    payload = {
+        "benchmark": "ccmlb_scaling",
+        "numpy": np.__version__,
+        "results": records,
+        "engine_speedup_largest_config": speedup_largest,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    report("ccmlb_scaling_json", 0.0, f"written to {JSON_PATH}")

@@ -1,5 +1,8 @@
 """Paper §VI-D: cost-model prediction quality, with/without Algorithm 1
-data reduction and the under-penalized loss."""
+data reduction and the under-penalized loss — plus the downstream check the
+model actually exists for: feeding its predicted durations into CCM-LB and
+measuring the balance quality achieved on the TRUE durations (engine and
+scalar evaluation paths timed side by side)."""
 from __future__ import annotations
 
 import time
@@ -7,6 +10,7 @@ import time
 import numpy as np
 
 from repro.assembly import build_problem
+from repro.assembly.driver import run_assembly_comparison
 from repro.assembly.execute import analytic_durations
 from repro.costmodel import train_cost_model
 from repro.costmodel.train import evaluate_cost_model
@@ -14,11 +18,13 @@ from repro.costmodel.train import evaluate_cost_model
 
 def run(report):
     rng = np.random.default_rng(0)
-    train_p = build_problem(2048, 8, seed=1, task_limit_u=32)
-    test_p = build_problem(2048, 8, seed=2, task_limit_u=32)
+    n_ranks = 8
+    train_p = build_problem(2048, n_ranks, seed=1, task_limit_u=32)
+    test_p = build_problem(2048, n_ranks, seed=2, task_limit_u=32)
     x, y = train_p.features(), analytic_durations(train_p)
     y = y * rng.lognormal(0, 0.08, y.shape)   # machine noise
     xt, yt = test_p.features(), analytic_durations(test_p)
+    first_model = None
     for name, kwargs in (
         ("underpen_reduced", dict(alpha=0.3, reduce_to=int(0.6 * len(y)))),
         ("underpen_full", dict(alpha=0.3)),
@@ -28,8 +34,24 @@ def run(report):
         model, _ = train_cost_model(x, y, epochs=80, batch_size=128, seed=0,
                                     **kwargs)
         dt = time.perf_counter() - t0
+        if first_model is None:
+            first_model = model
         m = evaluate_cost_model(model, xt, yt)
         report(f"costmodel_{name}", dt * 1e6,
                f"rel_err_med={m['rel_err_median']:.3f} "
                f"over_frac={m['over_predict_frac']:.2f} "
                f"rmse={m['rmse']:.2e}")
+
+    # downstream consumer: the paper's pipeline (cost model -> CCM-LB ->
+    # makespan on TRUE durations), via the shared assembly driver
+    for use_engine in (False, True):
+        t0 = time.perf_counter()
+        run_c = run_assembly_comparison(
+            2048, n_ranks, cost_model=first_model, seed=2,
+            task_limit_u=32, use_engine=use_engine)
+        dt = time.perf_counter() - t0
+        tag = "engine" if use_engine else "scalar"
+        report(f"costmodel_ccmlb_plan_{tag}", dt * 1e6,
+               f"true_makespan {run_c.makespan_overdecomposed:.3f}->"
+               f"{run_c.makespan_ccmlb:.3f} "
+               f"speedup_vs_baseline={run_c.speedup_ccmlb:.2f}x")

@@ -76,7 +76,7 @@ def run_assembly_comparison(
         durations: str = "analytic", cost_model=None,
         ccm_params: Optional[CCMParams] = None, mem_cap_frac: float = 0.6,
         seed: int = 0, n_iter: int = 4, fanout: int = 4,
-        task_limit_u: int = 96) -> AssemblyRun:
+        task_limit_u: int = 96, use_engine: bool = True) -> AssemblyRun:
     problem = build_problem(n_unknowns, num_ranks, seed=seed,
                             task_limit_u=task_limit_u)
     if durations == "measured":
@@ -106,7 +106,7 @@ def run_assembly_comparison(
 
     # C: CCM-LB on predictions, evaluated with true durations
     res = ccm_lb(phase_pred, a0, params, n_iter=n_iter, fanout=fanout,
-                 seed=seed)
+                 seed=seed, use_engine=use_engine)
     loads_c = np.bincount(res.assignment, weights=durations_true,
                           minlength=num_ranks)
     makespan_c = float(loads_c.max())

@@ -103,7 +103,11 @@ def plan_expert_placement(counts: np.ndarray, cfg: ModelConfig,
                           params: Optional[CCMParams] = None,
                           rank_speed: Optional[np.ndarray] = None,
                           n_iter: int = 4, fanout: int = 4,
-                          seed: int = 0) -> PlacementPlan:
+                          seed: int = 0,
+                          use_engine: bool = True) -> PlacementPlan:
+    """Plan an expert placement with CCM-LB.  ``use_engine`` selects the
+    vectorized evaluation engine (default; the scalar reference path gives
+    identical plans — the knob exists for A/B benchmarking)."""
     l_n, e_n = counts.shape
     assert e_n % n_devices == 0
     e_loc = e_n // n_devices
@@ -113,7 +117,8 @@ def plan_expert_placement(counts: np.ndarray, cfg: ModelConfig,
     ccm = params or CCMParams(alpha=1.0, beta=2e-11, gamma=1e-13, delta=1e-12)
     a0 = phase.block_home.copy()  # tasks start at their expert's device
     st0 = CCMState.build(phase, a0, ccm)
-    res = ccm_lb(phase, a0, ccm, n_iter=n_iter, fanout=fanout, seed=seed)
+    res = ccm_lb(phase, a0, ccm, n_iter=n_iter, fanout=fanout, seed=seed,
+                 use_engine=use_engine)
 
     # project the plan onto per-layer slot permutations: on each layer,
     # device dev gets the experts assigned to it (top e_loc by load if the

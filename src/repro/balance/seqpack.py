@@ -32,7 +32,8 @@ def rebalance_sequences(costs: np.ndarray, n_ranks: int, *,
                         rank_speed: Optional[np.ndarray] = None,
                         act_bytes: Optional[np.ndarray] = None,
                         mem_cap: float = np.inf, seed: int = 0,
-                        n_iter: int = 3) -> SeqPackResult:
+                        n_iter: int = 3,
+                        use_engine: bool = True) -> SeqPackResult:
     """costs: (n_seqs,) predicted step-time contribution per sequence."""
     k = costs.shape[0]
     phase = Phase(
@@ -53,7 +54,8 @@ def rebalance_sequences(costs: np.ndarray, n_ranks: int, *,
     params = CCMParams(alpha=1.0, beta=0.0, gamma=0.0, delta=0.0,
                        memory_constraint=np.isfinite(mem_cap))
     st0 = CCMState.build(phase, a0, params)
-    res = ccm_lb(phase, a0, params, n_iter=n_iter, fanout=4, seed=seed)
+    res = ccm_lb(phase, a0, params, n_iter=n_iter, fanout=4, seed=seed,
+                 use_engine=use_engine)
     return SeqPackResult(
         assignment=res.assignment,
         makespan_before=st0.max_work(),

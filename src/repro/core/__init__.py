@@ -1,6 +1,10 @@
 """The paper's primary contribution: the CCM work model and the CCM-LB
-distributed load balancer, plus the MILP certification path (core/milp)."""
+distributed load balancer, plus the MILP certification path (core/milp) and
+the vectorized evaluation engine (core/csr + core/engine)."""
 from repro.core.ccm import CCMState, ExchangeEval, exchange_eval  # noqa: F401
 from repro.core.ccmlb import CCMLBResult, ccm_lb  # noqa: F401
+from repro.core.csr import CSR, PhaseCSR, rank_segments  # noqa: F401
+from repro.core.engine import (PhaseEngine, SummaryTables,  # noqa: F401
+                               batch_peer_diffs, build_summary_tables)
 from repro.core.problem import (CCMParams, Phase, initial_assignment,  # noqa: F401
                                 random_phase)

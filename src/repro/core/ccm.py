@@ -10,6 +10,13 @@ cluster transfers without recomputation.
 volumes, block presence, memory components — everything needed so that moving
 a set of tasks updates W in time proportional to the tasks' edges and blocks
 (not to phase size).
+
+Scalar-vs-vectorized contract: :func:`exchange_eval` here is the REFERENCE
+evaluator — one candidate exchange per call, per-edge Python accumulation.
+The production path is :class:`repro.core.engine.PhaseEngine`, which scores
+all candidates of a lock event in one vectorized pass over the CSR phase
+view (``self.csr``, built once per state).  tests/test_engine.py asserts the
+two agree; keep them in sync when touching the model.
 """
 from __future__ import annotations
 
@@ -18,6 +25,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.csr import PhaseCSR
 from repro.core.problem import CCMParams, Phase
 
 INF = float("inf")
@@ -66,27 +74,23 @@ class CCMState:
         return st
 
     def _build_caches(self):
-        """Adjacency + per-rank homing/shared caches (exchange_eval hot path:
-        O(all edges + all blocks) per call -> O(touched edges + blocks))."""
+        """CSR phase view + per-rank homing/shared caches (exchange_eval hot
+        path: O(all edges + all blocks) per call -> O(touched edges +
+        blocks)).  The CSR bundle is phase-static and shared with the
+        vectorized engine."""
         ph = self.phase
-        edges_per_task: list = [[] for _ in range(ph.num_tasks)]
-        for e in range(ph.num_comms):
-            edges_per_task[ph.comm_src[e]].append(e)
-            if ph.comm_dst[e] != ph.comm_src[e]:
-                edges_per_task[ph.comm_dst[e]].append(e)
-        self.task_edges = [np.array(es, np.int64) for es in edges_per_task]
+        self.csr = PhaseCSR.from_phase(ph)
         present = self.block_count > 0                     # (I, N)
         off_home = present.copy()
-        for b in range(ph.num_blocks):
-            off_home[ph.block_home[b], b] = False
+        off_home[ph.block_home, np.arange(ph.num_blocks)] = False
         self.hom_cache = (off_home * ph.block_size[None, :]).sum(1)
         self.shared_cache = (present * ph.block_size[None, :]).sum(1)
 
     def _touched_edges(self, tasks: np.ndarray) -> np.ndarray:
+        """Unique ids of comm edges incident to ``tasks`` (CSR gather)."""
         if len(tasks) == 0:
             return np.zeros(0, np.int64)
-        parts = [self.task_edges[t] for t in tasks]
-        return np.unique(np.concatenate(parts)) if parts else np.zeros(0, np.int64)
+        return np.unique(self.csr.task_edges.gather(np.asarray(tasks)))
 
     # ----------------------------------------------------------------- pieces
     def off_rank_volume(self, r: int) -> float:
@@ -152,14 +156,17 @@ class CCMState:
         # communication volumes: edges incident to moved tasks change buckets
         moved = np.zeros(ph.num_tasks, bool)
         moved[tasks] = True
-        for e in self._touched_edges(tasks):
+        eids = self._touched_edges(tasks)
+        if eids.size:
             # assignment already updated; reconstruct old buckets
-            s_new = self.assignment[ph.comm_src[e]]
-            d_new = self.assignment[ph.comm_dst[e]]
-            s_old = r_from if moved[ph.comm_src[e]] else s_new
-            d_old = r_from if moved[ph.comm_dst[e]] else d_new
-            self.vol[s_old, d_old] -= ph.comm_vol[e]
-            self.vol[s_new, d_new] += ph.comm_vol[e]
+            src, dst = ph.comm_src[eids], ph.comm_dst[eids]
+            s_new = self.assignment[src]
+            d_new = self.assignment[dst]
+            s_old = np.where(moved[src], r_from, s_new)
+            d_old = np.where(moved[dst], r_from, d_new)
+            v = ph.comm_vol[eids]
+            np.subtract.at(self.vol, (s_old, d_old), v)
+            np.add.at(self.vol, (s_new, d_new), v)
         # blocks (+ presence caches: homing / shared-memory transitions)
         blk = ph.task_block[tasks]
         for b in blk[blk >= 0]:

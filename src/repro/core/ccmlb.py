@@ -11,6 +11,17 @@ Per iteration:
      priority rule), then evaluate exactly (update formulae) with fresh info
      and execute the best cluster give/swap.
 
+Evaluation engine: with ``use_engine=True`` (default) stages 3 and 4 run on
+the vectorized :class:`~repro.core.engine.PhaseEngine` — stage 3 scores all
+of a rank's known peers with one matrix op, stage 4 scores all shortlisted
+cluster pairs of a lock event in one batched pass.  ``use_engine=False``
+keeps the seed's scalar per-candidate loops (the reference path); both
+produce identical transfer traces on the parity suite
+(tests/test_engine.py; see repro/core/engine.py for the exact strength of
+that guarantee — stage-2 scores may differ by summation-order ulps, so a
+sub-ulp near-tie between two candidate exchanges could in principle
+diverge the paths).
+
 Returns the improved assignment plus a trace (max work, imbalance, transfers
 per iteration) used by tests and benchmarks.
 """
@@ -25,6 +36,8 @@ import numpy as np
 from repro.core.ccm import CCMState
 from repro.core.clusters import (build_clusters, summarize_clusters,
                                  summarize_rank)
+from repro.core.engine import (PhaseEngine, batch_peer_diffs,
+                               build_summary_tables)
 from repro.core.gossip import build_peer_networks
 from repro.core.locks import LockManager
 from repro.core.problem import CCMParams, Phase
@@ -40,13 +53,16 @@ class CCMLBResult:
     imbalance: List[float]
     transfers: int
     lock_conflicts: int
+    engine_used: bool = True
 
 
 def ccm_lb(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
            n_iter: int = 4, k_rounds: int = 2, fanout: int = 4,
            seed: int = 0, max_candidates: int = 12,
-           max_clusters_per_rank: Optional[int] = None) -> CCMLBResult:
+           max_clusters_per_rank: Optional[int] = None,
+           use_engine: bool = True) -> CCMLBResult:
     state = CCMState.build(phase, assignment, params)
+    engine = PhaseEngine(state) if use_engine else None
     trace_max = [state.max_work()]
     trace_tot = [state.total_work()]
     trace_imb = [state.imbalance()]
@@ -62,37 +78,46 @@ def ccm_lb(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
         info = build_peer_networks(summaries, k_rounds=k_rounds,
                                    fanout=fanout, seed=seed * 1000 + it)
 
-        # stage 1: score peers from (stale) gossip info
+        # stage 1: score peers from (stale) gossip info.  The batched path
+        # reads the global summary tables — valid because gossip payloads
+        # are references to this iteration's summary objects, so only the
+        # known-peer SETS are stale, never the values (see batch_peer_diffs)
         work_lists: Dict[int, deque] = {}
+        if engine is not None:
+            tables = build_summary_tables(summaries, params)
         for r in range(phase.num_ranks):
             scored: List[Tuple[float, int]] = []
-            for p, psum in info[r].items():
-                if p == r:
-                    continue
-                diff = approx_best_diff(summaries[r], psum, params)
-                if diff > 0:
-                    scored.append((diff, p))
+            if engine is not None:
+                peers = np.array([p for p in info[r] if p != r], np.int64)
+                # the tables are valid stand-ins for the gossip payloads
+                # only while payloads alias this iteration's summaries
+                assert all(info[r][int(p)] is summaries[int(p)]
+                           for p in peers), \
+                    "gossip payloads must alias current summaries"
+                diffs = batch_peer_diffs(tables, r, peers, params)
+                scored = [(float(d), int(p)) for d, p in zip(diffs, peers)
+                          if d > 0]
+            else:
+                for p, psum in info[r].items():
+                    if p == r:
+                        continue
+                    diff = approx_best_diff(summaries[r], psum, params)
+                    if diff > 0:
+                        scored.append((diff, p))
             scored.sort(key=lambda t: (-t[0], t[1]))
             work_lists[r] = deque(scored)
 
         # stage 2: lock/transfer event loop
         locks = LockManager(phase.num_ranks)
         # round-robin over ranks for fairness; each "turn" a rank either
-        # requests its best remaining peer or is idle/waiting.
+        # requests its best remaining peer or is idle.  Queued lock requests
+        # are drained synchronously on release (_handle_grant), so a
+        # non-empty active deque is the only liveness condition.
         active = deque(r for r in range(phase.num_ranks) if work_lists[r])
-        waiting_grant: Dict[int, int] = {}  # requester -> target queued on
         spins = 0
         max_spins = 50 * phase.num_ranks + 1000
-        while (active or waiting_grant) and spins < max_spins:
+        while active and spins < max_spins:
             spins += 1
-            if not active:
-                # everyone is queued on busy targets; queues drain on release
-                # — if nothing holds a lock, drop all waits (no progress).
-                if not any(locks.is_locked(r) for r in range(phase.num_ranks)):
-                    break
-                # force-release: cannot happen (every grant transfers then
-                # releases synchronously below); guard anyway.
-                break
             r = active.popleft()
             if not work_lists[r]:
                 continue
@@ -112,12 +137,13 @@ def ccm_lb(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
                 work_lists[r].append((diff, p))
                 active.append(r)
                 if nxt is not None:
-                    _handle_grant(nxt, p, state, clusters, locks, work_lists,
-                                  active, max_candidates)
+                    transfers += _handle_grant(
+                        nxt, p, state, clusters, locks, work_lists, active,
+                        max_candidates, max_clusters_per_rank, engine)
                 continue
             # fresh info exchange + exact transfer (recvUpdate/TryTransfer)
             best = try_transfer(state, clusters[r], clusters[p], r, p,
-                                max_candidates)
+                                max_candidates, engine=engine)
             if best is not None:
                 transfers += 1
                 # cluster membership changed on r and p: rebuild locally
@@ -128,8 +154,9 @@ def ccm_lb(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
                 clusters[p] = local[p]
             nxt = locks.release(r, p)
             if nxt is not None:
-                _handle_grant(nxt, p, state, clusters, locks, work_lists,
-                              active, max_candidates)
+                transfers += _handle_grant(
+                    nxt, p, state, clusters, locks, work_lists, active,
+                    max_candidates, max_clusters_per_rank, engine)
             if work_lists[r]:
                 active.append(r)
 
@@ -138,27 +165,42 @@ def ccm_lb(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
         trace_imb.append(state.imbalance())
 
     return CCMLBResult(state.assignment.copy(), state, trace_max, trace_tot,
-                       trace_imb, transfers, conflicts)
+                       trace_imb, transfers, conflicts,
+                       engine_used=engine is not None)
 
 
 def _handle_grant(r: int, p: int, state, clusters, locks, work_lists, active,
-                  max_candidates):
-    """A queued requester r just got the lock on p (release handoff)."""
-    if locks.must_yield(r, p):
-        nxt = locks.release(r, p)
-        active.append(r)
-        if nxt is not None:
-            _handle_grant(nxt, p, state, clusters, locks, work_lists, active,
-                          max_candidates)
-        return
-    best = try_transfer(state, clusters[r], clusters[p], r, p, max_candidates)
-    if best is not None:
-        local = build_clusters(state, only_ranks=[r, p])
-        clusters[r] = local[r]
-        clusters[p] = local[p]
-    nxt = locks.release(r, p)
-    if nxt is not None:
-        _handle_grant(nxt, p, state, clusters, locks, work_lists, active,
-                      max_candidates)
-    if work_lists[r]:
-        active.append(r)
+                  max_candidates, max_clusters_per_rank=None, engine=None
+                  ) -> int:
+    """Drain the lock-release handoff chain on ``p`` starting at requester
+    ``r``.  Iterative (a long chain of queued requesters must not hit the
+    Python recursion limit at large rank counts); the re-activation order
+    matches the original recursive formulation: yielding ranks re-activate
+    immediately, transferring ranks re-activate after everyone deeper in the
+    chain.  Returns the number of executed transfers.
+    """
+    n_transfers = 0
+    post: List[int] = []  # ranks to re-activate after the chain, innermost first
+    cur: Optional[int] = r
+    while cur is not None:
+        if locks.must_yield(cur, p):
+            nxt = locks.release(cur, p)
+            active.append(cur)
+            cur = nxt
+            continue
+        best = try_transfer(state, clusters[cur], clusters[p], cur, p,
+                            max_candidates, engine=engine)
+        if best is not None:
+            n_transfers += 1
+            local = build_clusters(state,
+                                   max_clusters_per_rank=max_clusters_per_rank,
+                                   only_ranks=[cur, p])
+            clusters[cur] = local[cur]
+            clusters[p] = local[p]
+        nxt = locks.release(cur, p)
+        post.append(cur)
+        cur = nxt
+    for rr in reversed(post):
+        if work_lists[rr]:
+            active.append(rr)
+    return n_transfers

@@ -5,17 +5,24 @@ heavily are clustered so they migrate together — splitting them would
 replicate the block on more ranks (more memory + homing cost) or turn
 intra-rank edges into off-rank ones (more work).
 
-Implementation: union-find per rank over (a) same-shared-block relations and
-(b) comm edges whose volume is above ``heavy_quantile`` of local edge volumes.
+Implementation: connected components per rank over (a) same-shared-block
+relations and (b) comm edges whose volume is above ``heavy_quantile`` of
+local edge volumes.  The production :func:`build_clusters` runs one
+vectorized min-label propagation over flat union-edge arrays (rank
+membership read from CSR segments); :func:`build_clusters_reference` is the
+seed's per-rank union-find, kept as the reference implementation the parity
+tests compare against — both produce identical cluster lists (same
+partition, same ordering).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.ccm import CCMState
+from repro.core.csr import rank_segments
 
 
 class _UF:
@@ -66,7 +73,89 @@ def build_clusters(state: CCMState, heavy_quantile: float = 0.75,
 
     ``only_ranks``: restrict to these ranks (incremental rebuild after a
     transfer touches two ranks).
+
+    Vectorized: union relations become flat (u, v) pair arrays — consecutive
+    tasks of each (block, rank) group plus the heavy same-rank edges — and
+    components are found by min-label propagation with pointer jumping, so
+    no per-task Python work is done.  Output is identical (composition AND
+    order) to :func:`build_clusters_reference`.
     """
+    ph = state.phase
+    a = state.assignment
+    mean_load = ph.task_load.sum() / max(ph.num_ranks, 1)
+    load_cap = max(split_frac * mean_load, ph.task_load.max(initial=0.0))
+    out: Dict[int, List[np.ndarray]] = {}
+    # heavy threshold from the global edge-volume distribution (static per
+    # phase -> cached on the state across the many incremental rebuilds)
+    qcache = getattr(state, "_quantile_cache", None)
+    if qcache is None:
+        qcache = {}
+        state._quantile_cache = qcache
+    thresh = qcache.get(heavy_quantile)
+    if thresh is None:
+        thresh = (np.quantile(ph.comm_vol, heavy_quantile)
+                  if ph.num_comms else np.inf)
+        qcache[heavy_quantile] = thresh
+    same_rank = a[ph.comm_src] == a[ph.comm_dst]
+    heavy = same_rank & (ph.comm_vol >= thresh)
+    ranks = list(range(ph.num_ranks)) if only_ranks is None else list(only_ranks)
+    rank_sel = np.zeros(ph.num_ranks, bool)
+    rank_sel[ranks] = True
+
+    # union pairs: consecutive members of each (block, rank) group ...
+    bt = np.nonzero(rank_sel[a] & (ph.task_block >= 0))[0]
+    order = np.lexsort((bt, a[bt], ph.task_block[bt]))
+    bts = bt[order]
+    grp = ((ph.task_block[bts][1:] == ph.task_block[bts][:-1])
+           & (a[bts][1:] == a[bts][:-1])) if bts.size else np.zeros(0, bool)
+    # ... plus heavy same-rank comm edges on the selected ranks
+    he = np.nonzero(heavy & rank_sel[a[ph.comm_src]])[0]
+    u = np.concatenate([bts[:-1][grp], ph.comm_src[he]])
+    v = np.concatenate([bts[1:][grp], ph.comm_dst[he]])
+
+    # components: min-label propagation + pointer jumping (labels only ever
+    # decrease, so the fixpoint labels each task with its component's min id)
+    lab = np.arange(ph.num_tasks, dtype=np.int64)
+    while u.size:
+        m = np.minimum(lab[u], lab[v])
+        np.minimum.at(lab, u, m)
+        np.minimum.at(lab, v, m)
+        while True:
+            nl = lab[lab]
+            if np.array_equal(nl, lab):
+                break
+            lab = nl
+        if np.array_equal(lab[u], lab[v]):
+            break
+
+    # full build: one argsort gives every rank's segment; incremental
+    # rebuild (2 ranks): a direct membership scan per rank is cheaper
+    segs = rank_segments(a, ph.num_ranks) if only_ranks is None else None
+    for r in ranks:
+        tasks = segs.row(r) if segs is not None else np.nonzero(a == r)[0]
+        if tasks.size == 0:
+            out[r] = []
+            continue
+        uniq, inv = np.unique(lab[tasks], return_inverse=True)
+        sorted_tasks = tasks[np.argsort(inv, kind="stable")]
+        bounds = np.cumsum(np.bincount(inv, minlength=uniq.shape[0]))[:-1]
+        clusters: List[np.ndarray] = []
+        for g in np.split(sorted_tasks, bounds):
+            clusters.extend(_split_by_load(g, ph.task_load, load_cap))
+        clusters.sort(key=lambda c: -ph.task_load[c].sum())
+        if max_clusters_per_rank is not None:
+            clusters = clusters[:max_clusters_per_rank]
+        out[r] = clusters
+    return out
+
+
+def build_clusters_reference(state: CCMState, heavy_quantile: float = 0.75,
+                             max_clusters_per_rank: Optional[int] = None,
+                             split_frac: float = 0.25,
+                             only_ranks: Optional[List[int]] = None
+                             ) -> Dict[int, List[np.ndarray]]:
+    """Seed per-rank union-find implementation (reference for parity tests;
+    see :func:`build_clusters` for the production vectorized path)."""
     ph = state.phase
     a = state.assignment
     mean_load = ph.task_load.sum() / max(ph.num_ranks, 1)
@@ -137,33 +226,46 @@ def _split_by_load(tasks: np.ndarray, loads: np.ndarray,
 def summarize_clusters(state: CCMState,
                        clusters: Dict[int, List[np.ndarray]]
                        ) -> Dict[int, List[ClusterSummary]]:
+    """Cluster inform payloads, with the intra/external comm volumes of ALL
+    clusters computed in one labelled pass over the edge list (the seed
+    rebuilt an O(num_tasks) membership mask per cluster)."""
     ph = state.phase
-    a = state.assignment
-    out: Dict[int, List[ClusterSummary]] = {}
-    for r, cls in clusters.items():
-        summaries = []
-        for ci, tasks in enumerate(cls):
-            in_c = np.zeros(ph.num_tasks, bool)
-            in_c[tasks] = True
-            src_in = in_c[ph.comm_src]
-            dst_in = in_c[ph.comm_dst]
-            vol_intra = ph.comm_vol[src_in & dst_in].sum()
-            vol_ext = ph.comm_vol[src_in ^ dst_in].sum()
-            blk = np.unique(ph.task_block[tasks])
-            blk = blk[blk >= 0]
-            summaries.append(ClusterSummary(
-                rank=r,
-                local_id=ci,
-                load=float(ph.task_load[tasks].sum()),
-                mem=float(ph.task_mem[tasks].sum()),
-                overhead=float(ph.task_overhead[tasks].max()) if tasks.size else 0.0,
-                block_ids=blk,
-                block_bytes=float(ph.block_size[blk].sum()),
-                vol_intra=float(vol_intra),
-                vol_ext=float(vol_ext),
-                size=int(tasks.size),
-            ))
-        out[r] = summaries
+    flat: List[Tuple[int, int, np.ndarray]] = [
+        (r, ci, tasks) for r, cls in clusters.items()
+        for ci, tasks in enumerate(cls)]
+    n = len(flat)
+    gids = np.full(ph.num_tasks, -1, np.int64)
+    for gid, (_, _, tasks) in enumerate(flat):
+        gids[tasks] = gid
+    vol_intra = np.zeros(n)
+    vol_ext = np.zeros(n)
+    if n and ph.num_comms:
+        ls, ld = gids[ph.comm_src], gids[ph.comm_dst]
+        intra = (ls == ld) & (ls >= 0)
+        vol_intra = np.bincount(ls[intra], weights=ph.comm_vol[intra],
+                                minlength=n)
+        cut = ls != ld
+        m = cut & (ls >= 0)
+        vol_ext = np.bincount(ls[m], weights=ph.comm_vol[m], minlength=n)
+        m = cut & (ld >= 0)
+        vol_ext = vol_ext + np.bincount(ld[m], weights=ph.comm_vol[m],
+                                        minlength=n)
+    out: Dict[int, List[ClusterSummary]] = {r: [] for r in clusters}
+    for gid, (r, ci, tasks) in enumerate(flat):
+        blk = np.unique(ph.task_block[tasks])
+        blk = blk[blk >= 0]
+        out[r].append(ClusterSummary(
+            rank=r,
+            local_id=ci,
+            load=float(ph.task_load[tasks].sum()),
+            mem=float(ph.task_mem[tasks].sum()),
+            overhead=float(ph.task_overhead[tasks].max()) if tasks.size else 0.0,
+            block_ids=blk,
+            block_bytes=float(ph.block_size[blk].sum()),
+            vol_intra=float(vol_intra[gid]),
+            vol_ext=float(vol_ext[gid]),
+            size=int(tasks.size),
+        ))
     return out
 
 

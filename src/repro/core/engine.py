@@ -1,0 +1,510 @@
+"""Vectorized CCM evaluation engine.
+
+The CCM-LB optimizer's cost at scale is NOT the model — it is the number of
+times the model is evaluated.  The seed evaluated each candidate cluster
+give/swap with one :func:`repro.core.ccm.exchange_eval` call (a Python loop
+over the touched edges and a dict of volume deltas); at 256 ranks that is
+~400k calls and >80 % of wall-clock.  This module evaluates *all* candidate
+moves of a lock event (and all stage-1 peer scores of a rank) in single
+vectorized passes over flat arrays.
+
+Contract with the scalar path
+-----------------------------
+``exchange_eval`` (scalar) stays as the REFERENCE implementation.  The
+batched scorer computes exactly the same model:
+
+  * stage-1 (``batch_peer_diffs``) is arithmetic-identical to
+    ``approx_best_diff`` — same IEEE operations in the same order, so the
+    scores are bitwise-equal and the work lists (hence the whole CCM-LB
+    trajectory) cannot diverge;
+  * stage-2 (``batch_exchange_eval``) aggregates edge volumes through a
+    group-flow matrix instead of a per-edge dict, so individual scores can
+    differ from the scalar path by summation-order rounding (<= a few ulp);
+    both paths start from the same incrementally-maintained ``CCMState``
+    base quantities, and the parity suite (tests/test_engine.py) asserts
+    score agreement to 1e-9 and identical end-to-end assignments.  The
+    identical-trajectory guarantee is therefore empirical, not absolute: a
+    phase where two candidate pairs' exact scores differ by less than the
+    comm/block summation rounding could in principle make the two paths
+    pick different (equally good) exchanges.  Exact ties DO break
+    identically — per-cluster load/mem/overhead reductions are bitwise-
+    shared with the scalar path and candidate pairs are compared in the
+    same order — so the degenerate comm-free instances where ties actually
+    occur (equal integer-ish loads, beta=gamma=delta=0) stay in lockstep;
+    with continuous comm volumes, sub-ulp near-ties have measure zero.
+
+Stage-2 decomposition
+---------------------
+For a lock event on ranks (a, b) with candidate clusters A_1..A_na on a and
+B_1..B_nb on b, label every task with a *group*:
+
+  0 = other rank, 1 = stays on a, 2 = stays on b, 3+i = A_i, 3+na+j = B_j
+
+and accumulate the group-to-group flow matrix F[g, h] = sum of edge volumes
+src-group g -> dst-group h over the edges incident to a or b (one bincount
+over a CSR gather).  Every sent/recv/on-rank volume before AND after any
+exchange pair (A_i, B_j) is a small linear combination of F entries, so all
+(na+1) x (nb+1) candidate pairs are scored with a handful of broadcast
+ops.  Homing/shared-memory transitions (Thm III.1) decompose the same way:
+per-cluster block leave/arrive terms plus a sparse pairwise correction for
+blocks shared between A_i and B_j.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.ccm import CCMState, INF
+from repro.core.csr import CSR, PhaseCSR
+
+__all__ = ["PhaseEngine", "SummaryTables", "build_summary_tables",
+           "batch_peer_diffs"]
+
+
+@dataclasses.dataclass
+class ClusterAggregates:
+    """Per-cluster scalar/block aggregates for one rank's cluster list.
+
+    Everything here depends only on the cluster task sets (NOT on the
+    current assignment or block counters), so it is cached per cluster list
+    and reused across every lock event until the rank's clusters are
+    rebuilt.  ``loads``/``mems``/``overheads`` use the same numpy reductions
+    as the scalar path, so downstream arithmetic stays bitwise-compatible.
+    """
+
+    loads: np.ndarray       # (C,) task_load[c].sum() per cluster
+    mems: np.ndarray        # (C,)
+    overheads: np.ndarray   # (C,) max task overhead (0 for empty)
+    blk_ci: np.ndarray      # (B,) cluster index per (cluster, block) pair
+    blk_ids: np.ndarray     # (B,) block id
+    blk_cnts: np.ndarray    # (B,) member tasks of that block in the cluster
+    blk_sizes: np.ndarray   # (B,)
+    blk_home: np.ndarray    # (B,) home rank of the block
+    blk_map: Dict[int, List[Tuple[int, int]]]  # block -> [(ci, cnt)]
+
+
+class PhaseEngine:
+    """Batched (vectorizable, JAX-friendly) move scoring over a CCMState.
+
+    Holds only *phase-static* structure (the CSR view, a reusable label
+    buffer) plus per-cluster-list aggregate caches validated by list
+    identity; all mutable state stays in the wrapped ``CCMState``, so the
+    engine remains valid across transfers.
+    """
+
+    def __init__(self, state: CCMState):
+        self.state = state
+        self.phase = state.phase
+        self.csr: PhaseCSR = state.csr
+        self._glab = np.zeros(self.phase.num_tasks, np.int64)
+        # rank -> (cluster list reference, aggregates); holding the list
+        # reference both validates the cache (ccm_lb installs a NEW list
+        # when a rank's clusters are rebuilt) and pins its id.
+        self._agg: Dict[int, Tuple[list, ClusterAggregates]] = {}
+
+    def cluster_aggregates(self, r: int,
+                           clusters: List[np.ndarray]) -> ClusterAggregates:
+        cached = self._agg.get(r)
+        if cached is not None and cached[0] is clusters:
+            return cached[1]
+        agg = self._compute_aggregates(clusters)
+        self._agg[r] = (clusters, agg)
+        return agg
+
+    def _compute_aggregates(self, clusters: List[np.ndarray]
+                            ) -> ClusterAggregates:
+        ph = self.phase
+        loads = np.array([ph.task_load[c].sum() for c in clusters])
+        mems = np.array([ph.task_mem[c].sum() for c in clusters])
+        overheads = np.array([ph.task_overhead[c].max() if len(c) else 0.0
+                              for c in clusters])
+        ci_l, ids_l, cnt_l = [], [], []
+        blk_map: Dict[int, List[Tuple[int, int]]] = {}
+        for i, c in enumerate(clusters):
+            tb = ph.task_block[c]
+            tb = tb[tb >= 0]
+            if tb.size == 0:
+                continue
+            bs, cnts = np.unique(tb, return_counts=True)
+            ci_l.append(np.full(bs.shape[0], i, np.int64))
+            ids_l.append(bs)
+            cnt_l.append(cnts)
+            for blk, cnt in zip(bs, cnts):
+                blk_map.setdefault(int(blk), []).append((i, int(cnt)))
+        if ci_l:
+            blk_ci = np.concatenate(ci_l)
+            blk_ids = np.concatenate(ids_l)
+            blk_cnts = np.concatenate(cnt_l)
+        else:
+            blk_ci = blk_ids = blk_cnts = np.zeros(0, np.int64)
+        return ClusterAggregates(
+            loads=loads, mems=mems, overheads=overheads,
+            blk_ci=blk_ci, blk_ids=blk_ids, blk_cnts=blk_cnts,
+            blk_sizes=ph.block_size[blk_ids], blk_home=ph.block_home[blk_ids],
+            blk_map=blk_map)
+
+    # ------------------------------------------------------------- stage 2
+    def batch_exchange_eval(
+            self, r_a: int, r_b: int,
+            cand_a: Sequence[np.ndarray], cand_b: Sequence[np.ndarray],
+            pairs: Sequence[Tuple[int, int]],
+            agg_a: ClusterAggregates = None, agg_b: ClusterAggregates = None,
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Score every candidate pair ``(cand_a[ia] a->b, cand_b[ib] b->a)``.
+
+        ``cand_a[0]``/``cand_b[0]`` must be the empty cluster (one-sided
+        gives).  ``agg_*`` are the cached aggregates of the rank's FULL
+        cluster lists (``cand_*[1:]`` must be a prefix of them); omitted,
+        they are computed on the fly.  Returns ``(work_a_after,
+        work_b_after, feasible)`` arrays aligned with ``pairs``; infeasible
+        pairs get ``inf`` work, matching the scalar ``exchange_eval``.
+        """
+        st, ph, p = self.state, self.phase, self.state.params
+        na, nb = len(cand_a) - 1, len(cand_b) - 1
+        G = 3 + na + nb
+        assignment = st.assignment
+        tasks_a = np.nonzero(assignment == r_a)[0]
+        tasks_b = np.nonzero(assignment == r_b)[0]
+        if agg_a is None:  # direct call: compute without touching the cache
+            agg_a = self._compute_aggregates(list(cand_a[1:]))
+        if agg_b is None:
+            agg_b = self._compute_aggregates(list(cand_b[1:]))
+
+        # --- group labels + group-flow matrix F --------------------------
+        g = self._glab
+        g[tasks_a] = 1
+        g[tasks_b] = 2
+        for i, c in enumerate(cand_a[1:]):
+            g[c] = 3 + i
+        for j, c in enumerate(cand_b[1:]):
+            g[c] = 3 + na + j
+        both = np.concatenate([tasks_a, tasks_b])
+        eids = np.unique(self.csr.task_edges.gather(both))
+        gs = g[ph.comm_src[eids]]
+        gd = g[ph.comm_dst[eids]]
+        F = np.bincount(gs * G + gd, weights=ph.comm_vol[eids],
+                        minlength=G * G).reshape(G, G)
+        # reset the shared buffer — including the candidate arrays, which a
+        # direct caller may pass with tasks no longer assigned to r_a/r_b
+        # (a stale label here would corrupt every later evaluation)
+        g[both] = 0
+        for c in cand_a[1:]:
+            g[c] = 0
+        for c in cand_b[1:]:
+            g[c] = 0
+
+        def col(x):         # per-a-candidate -> column vector (na+1, 1)
+            return x[:, None]
+
+        def row(x):         # per-b-candidate -> row vector (1, nb+1)
+            return x[None, :]
+
+        # group layout is contiguous (1 | 2 | a-clusters | b-clusters), so
+        # every flow aggregate reduces to slice sums of F:
+        # row_to_a[g] = v(g -> Ra), col_from_a[g] = v(Ra -> g), etc.
+        sa, sb = 3, 3 + na
+        row_to_a = F[:, 1] + F[:, sa:sb].sum(1)
+        row_to_b = F[:, 2] + F[:, sb:].sum(1)
+        col_from_a = F[1, :] + F[sa:sb, :].sum(0)
+        col_from_b = F[2, :] + F[sb:, :].sum(0)
+
+        def with_empty(x):
+            out = np.zeros(x.shape[0] + 1)
+            out[1:] = x
+            return out
+
+        ar = np.arange(sa, sb)
+        br = np.arange(sb, G)
+        a_intra = with_empty(F[ar, ar])
+        a_out_own = with_empty(row_to_a[sa:sb])    # v(A -> Ra)
+        a_in_own = with_empty(col_from_a[sa:sb])   # v(Ra -> A)
+        a_out_peer = with_empty(row_to_b[sa:sb])   # v(A -> Rb)
+        a_in_peer = with_empty(col_from_b[sa:sb])  # v(Rb -> A)
+        a_out_o = with_empty(F[sa:sb, 0])
+        a_in_o = with_empty(F[0, sa:sb])
+        b_intra = with_empty(F[br, br])
+        b_out_own = with_empty(row_to_b[sb:])
+        b_in_own = with_empty(col_from_b[sb:])
+        b_out_peer = with_empty(row_to_a[sb:])
+        b_in_peer = with_empty(col_from_a[sb:])
+        b_out_o = with_empty(F[sb:, 0])
+        b_in_o = with_empty(F[0, sb:])
+
+        x_ab = np.zeros((na + 1, nb + 1))    # v(A_i -> B_j)
+        x_ba = np.zeros((na + 1, nb + 1))    # v(B_j -> A_i)
+        if na and nb:
+            x_ab[1:, 1:] = F[sa:sb, sb:]
+            x_ba[1:, 1:] = F[sb:, sa:sb].T
+
+        f_ab = row_to_b[1] + row_to_b[sa:sb].sum()   # v(Ra -> Rb)
+        f_ba = row_to_a[2] + row_to_a[sb:].sum()
+        f_aa = row_to_a[1] + row_to_a[sa:sb].sum()
+        f_bb = row_to_b[2] + row_to_b[sb:].sum()
+        f_ao = F[1, 0] + F[sa:sb, 0].sum()
+        f_oa = F[0, 1] + F[0, sa:sb].sum()
+        f_bo = F[2, 0] + F[sb:, 0].sum()
+        f_ob = F[0, 2] + F[0, sb:].sum()
+
+        # --- flows after the exchange, per pair (broadcast na+1 x nb+1) --
+        # Endpoint classes after moving A a->b and B b->a:
+        #   rank a holds Sa (=Ra\A) and B;  rank b holds Sb (=Rb\B) and A.
+        sent_a = (x_ba + row(b_out_own - b_intra + b_out_o)
+                  + col(a_in_own - a_intra)
+                  + (f_ab - col(a_out_peer) - row(b_in_peer) + x_ab)
+                  + (f_ao - col(a_out_o)))
+        recv_a = (x_ab + row(b_in_own - b_intra + b_in_o)
+                  + col(a_out_own - a_intra)
+                  + (f_ba - row(b_out_peer) - col(a_in_peer) + x_ba)
+                  + (f_oa - col(a_in_o)))
+        on_a = (row(b_intra) + (row(b_out_peer) - x_ba)
+                + (row(b_in_peer) - x_ab)
+                + (f_aa - col(a_out_own + a_in_own - a_intra)))
+        sent_b = (x_ab + col(a_out_own - a_intra + a_out_o)
+                  + row(b_in_own - b_intra)
+                  + (f_ba - row(b_out_peer) - col(a_in_peer) + x_ba)
+                  + (f_bo - row(b_out_o)))
+        recv_b = (x_ba + col(a_in_own - a_intra + a_in_o)
+                  + row(b_out_own - b_intra)
+                  + (f_ab - col(a_out_peer) - row(b_in_peer) + x_ab)
+                  + (f_ob - row(b_in_o)))
+        on_b = (col(a_intra) + (col(a_out_peer) - x_ab)
+                + (col(a_in_peer) - x_ba)
+                + (f_bb - row(b_out_own + b_in_own - b_intra)))
+
+        # deltas vs the same F-derived "before" flows, applied to the
+        # incrementally-maintained bases — mirrors the scalar path's
+        # base-plus-dvol structure so both paths share any drift in vol.
+        base_sent_a = st.vol[r_a].sum() - st.vol[r_a, r_a]
+        base_recv_a = st.vol[:, r_a].sum() - st.vol[r_a, r_a]
+        base_sent_b = st.vol[r_b].sum() - st.vol[r_b, r_b]
+        base_recv_b = st.vol[:, r_b].sum() - st.vol[r_b, r_b]
+        off_a = np.maximum(base_sent_a + (sent_a - (f_ab + f_ao)),
+                           base_recv_a + (recv_a - (f_ba + f_oa)))
+        off_b = np.maximum(base_sent_b + (sent_b - (f_ba + f_bo)),
+                           base_recv_b + (recv_b - (f_ab + f_ob)))
+        on_a = st.vol[r_a, r_a] + (on_a - f_aa)
+        on_b = st.vol[r_b, r_b] + (on_b - f_bb)
+
+        # --- per-candidate scalar aggregates (cached; same numpy reductions
+        # as the scalar path -> bitwise-equal loads/mem/overhead) ----------
+        la = with_empty(agg_a.loads[:na])
+        lb = with_empty(agg_b.loads[:nb])
+        ma = with_empty(agg_a.mems[:na])
+        mb = with_empty(agg_b.mems[:nb])
+        oa = with_empty(agg_a.overheads[:na])
+        ob = with_empty(agg_b.overheads[:nb])
+        load_a = st.load[r_a] - col(la) + row(lb)
+        load_b = st.load[r_b] + col(la) - row(lb)
+
+        # --- homing / shared-memory transitions (Thm III.1) --------------
+        s_rm_a, h_rm_a, s_add_b, h_add_b = \
+            self._block_terms(agg_a, na, r_a, r_b)
+        s_rm_b, h_rm_b, s_add_a, h_add_a = \
+            self._block_terms(agg_b, nb, r_b, r_a)
+        cs_a = np.zeros((na + 1, nb + 1))
+        ch_a = np.zeros((na + 1, nb + 1))
+        cs_b = np.zeros((na + 1, nb + 1))
+        ch_b = np.zeros((na + 1, nb + 1))
+        for blk, lst_a in agg_a.blk_map.items():
+            lst_b = agg_b.blk_map.get(blk)
+            if not lst_b:
+                continue
+            # block in both moving clusters: the independent leave terms
+            # over-fire when the counter-flow keeps the block present.
+            size = ph.block_size[blk]
+            off_home_a = ph.block_home[blk] != r_a
+            off_home_b = ph.block_home[blk] != r_b
+            for i, cnt_a in lst_a:
+                if i >= na:
+                    continue
+                for j, cnt_b in lst_b:
+                    if j >= nb:
+                        continue
+                    if st.block_count[r_a, blk] == cnt_a:
+                        cs_a[i + 1, j + 1] += size
+                        if off_home_a:
+                            ch_a[i + 1, j + 1] += size
+                    if st.block_count[r_b, blk] == cnt_b:
+                        cs_b[i + 1, j + 1] += size
+                        if off_home_b:
+                            ch_b[i + 1, j + 1] += size
+        shared_a = st.shared_cache[r_a] - col(s_rm_a) + row(s_add_a) + cs_a
+        shared_b = st.shared_cache[r_b] - row(s_rm_b) + col(s_add_b) + cs_b
+        hom_a = st.hom_cache[r_a] - col(h_rm_a) + row(h_add_a) + ch_a
+        hom_b = st.hom_cache[r_b] - row(h_rm_b) + col(h_add_b) + ch_b
+
+        # --- memory feasibility (eq. 9) -----------------------------------
+        mem_a = (ph.rank_mem_base[r_a] + st.mem_task[r_a] - col(ma) + row(mb)
+                 + shared_a + np.maximum(st.mem_overhead_max[r_a], row(ob)))
+        mem_b = (ph.rank_mem_base[r_b] + st.mem_task[r_b] + col(ma) - row(mb)
+                 + shared_b + np.maximum(st.mem_overhead_max[r_b], col(oa)))
+        if p.memory_constraint:
+            feas = ((mem_a <= ph.rank_mem_cap[r_a] + 1e-6)
+                    & (mem_b <= ph.rank_mem_cap[r_b] + 1e-6))
+        else:
+            feas = np.ones((na + 1, nb + 1), bool)
+
+        w_a = (p.alpha * load_a / ph.rank_speed[r_a] + p.beta * off_a
+               + p.gamma * on_a + p.delta * hom_a)
+        w_b = (p.alpha * load_b / ph.rank_speed[r_b] + p.beta * off_b
+               + p.gamma * on_b + p.delta * hom_b)
+        w_a = np.where(feas, w_a, INF)
+        w_b = np.where(feas, w_b, INF)
+
+        ia = np.fromiter((q[0] for q in pairs), np.int64, len(pairs))
+        ib = np.fromiter((q[1] for q in pairs), np.int64, len(pairs))
+        return w_a[ia, ib], w_b[ia, ib], feas[ia, ib]
+
+    def _block_terms(self, agg: ClusterAggregates, n: int, r_src: int,
+                     r_dst: int):
+        """Independent (one-sided) block transition terms for the first
+        ``n`` clusters: bytes leaving ``r_src``'s shared/homing caches and
+        arriving at ``r_dst``'s (index 0 = empty candidate).  Uses the
+        CURRENT block counters, so it must run per lock event even though
+        the (block, count) pairs themselves are cached."""
+        st = self.state
+        hi = np.searchsorted(agg.blk_ci, n)  # blk_ci ascending -> prefix
+        ci = agg.blk_ci[:hi] + 1
+        ids = agg.blk_ids[:hi]
+        sizes = agg.blk_sizes[:hi]
+        leaves = st.block_count[r_src, ids] == agg.blk_cnts[:hi]
+        arrives = st.block_count[r_dst, ids] == 0
+        s_rm = np.bincount(ci, weights=sizes * leaves, minlength=n + 1)
+        h_rm = np.bincount(
+            ci, weights=sizes * (leaves & (agg.blk_home[:hi] != r_src)),
+            minlength=n + 1)
+        s_add = np.bincount(ci, weights=sizes * arrives, minlength=n + 1)
+        h_add = np.bincount(
+            ci, weights=sizes * (arrives & (agg.blk_home[:hi] != r_dst)),
+            minlength=n + 1)
+        return s_rm, h_rm, s_add, h_add
+
+
+# ---------------------------------------------------------------- stage 1
+@dataclasses.dataclass
+class SummaryTables:
+    """SoA mirror of one iteration's Rank/ClusterSummary objects.
+
+    Per-rank arrays are indexed by rank id; per-cluster arrays are flat with
+    ``c_indptr`` rank segments (same order as ``RankSummary.clusters``).
+    """
+
+    load: np.ndarray
+    vol_on: np.ndarray
+    vol_off: np.ndarray
+    homing: np.ndarray
+    mem_used: np.ndarray
+    mem_cap: np.ndarray
+    speed: np.ndarray
+    work: np.ndarray          # _w_of(summary) per rank
+    c_ids: CSR                # rank -> flat cluster ids (indptr is (I+1,))
+    c_load: np.ndarray
+    c_mem: np.ndarray
+    c_block_bytes: np.ndarray
+    c_vol_intra: np.ndarray
+    c_vol_ext: np.ndarray
+
+
+def build_summary_tables(summaries: Dict, params) -> SummaryTables:
+    n = len(summaries)
+    ranks = [summaries[r] for r in range(n)]
+    load = np.array([s.load for s in ranks])
+    vol_on = np.array([s.vol_on for s in ranks])
+    vol_off = np.array([s.vol_off for s in ranks])
+    homing = np.array([s.homing for s in ranks])
+    speed = np.array([s.speed for s in ranks])
+    work = (params.alpha * load / speed + params.beta * vol_off
+            + params.gamma * vol_on + params.delta * homing)
+    c_indptr = np.zeros(n + 1, np.int64)
+    np.cumsum([len(s.clusters) for s in ranks], out=c_indptr[1:])
+    flat = [c for s in ranks for c in s.clusters]
+    c_ids = CSR(c_indptr, np.arange(len(flat), dtype=np.int64))
+    return SummaryTables(
+        load=load, vol_on=vol_on, vol_off=vol_off, homing=homing,
+        mem_used=np.array([s.mem_used for s in ranks]),
+        mem_cap=np.array([s.mem_cap for s in ranks]),
+        speed=speed, work=work, c_ids=c_ids,
+        c_load=np.array([c.load for c in flat]),
+        c_mem=np.array([c.mem for c in flat]),
+        c_block_bytes=np.array([c.block_bytes for c in flat]),
+        c_vol_intra=np.array([c.vol_intra for c in flat]),
+        c_vol_ext=np.array([c.vol_ext for c in flat]),
+    )
+
+
+def _seg_gather(t: SummaryTables, ranks: np.ndarray):
+    """(owner index, flat cluster ids) for all clusters of ``ranks``."""
+    idx = t.c_ids.gather(ranks)
+    counts = t.c_ids.indptr[ranks + 1] - t.c_ids.indptr[ranks]
+    owner = np.repeat(np.arange(ranks.shape[0]), counts)
+    return owner, idx
+
+
+def batch_peer_diffs(t: SummaryTables, r: int, peers: np.ndarray,
+                     params) -> np.ndarray:
+    """Stage-1 peer scores for rank ``r`` against ``peers`` in one pass.
+
+    Arithmetic-identical to ``approx_best_diff(summaries[r], summaries[p])``
+    per peer: same expressions, same IEEE evaluation order, with the scalar
+    max-over-candidates rewritten as ``max_before - min(after)`` (exactly
+    equal for finite IEEE values since x -> M - x is antitone).
+
+    ASSUMPTION: the tables hold THIS iteration's summaries and gossip
+    payloads are references to those same objects (``info[r][p] is
+    summaries[p]``, true of ``build_peer_networks`` today) — staleness is
+    only in WHICH peers a rank knows, never in the values.  If gossip ever
+    carries summaries from older iterations, the scalar path would score
+    from what rank ``r`` actually received while this path scores from the
+    global tables, and the identical-trajectory contract breaks; the tables
+    would then need to be built per recipient from ``info[r]``.
+    """
+    peers = np.asarray(peers, np.int64)
+    n_p = peers.shape[0]
+    if n_p == 0:
+        return np.zeros(0)
+    a, b, g, d = params.alpha, params.beta, params.gamma, params.delta
+    max_before = np.maximum(t.work[r], t.work[peers])
+
+    # my clusters -> each peer (give direction)
+    sl = slice(t.c_ids.indptr[r], t.c_ids.indptr[r + 1])
+    cl, cm = t.c_load[sl], t.c_mem[sl]
+    cbb, cvi, cve = t.c_block_bytes[sl], t.c_vol_intra[sl], t.c_vol_ext[sl]
+    after_give = np.full(n_p, np.inf)
+    if cl.shape[0]:
+        feas = ~((t.mem_used[peers][None, :] + cm[:, None] + cbb[:, None])
+                 > t.mem_cap[peers][None, :])
+        w_me = (a * (t.load[r] - cl) / t.speed[r]
+                + b * np.maximum(t.vol_off[r] - cve, 0.0)
+                + g * np.maximum(t.vol_on[r] - cvi, 0.0)
+                + d * t.homing[r])
+        w_peer = (a * (t.load[peers][None, :] + cl[:, None])
+                  / t.speed[peers][None, :]
+                  + b * (t.vol_off[peers][None, :] + cve[:, None])
+                  + g * (t.vol_on[peers][None, :] + cvi[:, None])
+                  + d * (t.homing[peers][None, :] + cbb[:, None]))
+        after = np.where(feas, np.maximum(w_me[:, None], w_peer), np.inf)
+        after_give = after.min(axis=0)
+
+    # each peer's clusters -> me (pull direction)
+    owner, idx = _seg_gather(t, peers)
+    after_pull = np.full(n_p, np.inf)
+    if idx.shape[0]:
+        own = peers[owner]
+        pl, pm = t.c_load[idx], t.c_mem[idx]
+        pbb, pvi, pve = (t.c_block_bytes[idx], t.c_vol_intra[idx],
+                         t.c_vol_ext[idx])
+        feas = ~((t.mem_used[r] + pm + pbb) > t.mem_cap[r])
+        w_src = (a * (t.load[own] - pl) / t.speed[own]
+                 + b * np.maximum(t.vol_off[own] - pve, 0.0)
+                 + g * np.maximum(t.vol_on[own] - pvi, 0.0)
+                 + d * t.homing[own])
+        w_me = (a * (t.load[r] + pl) / t.speed[r]
+                + b * (t.vol_off[r] + pve)
+                + g * (t.vol_on[r] + pvi)
+                + d * (t.homing[r] + pbb))
+        after = np.where(feas, np.maximum(w_src, w_me), np.inf)
+        np.minimum.at(after_pull, owner, after)
+
+    return max_before - np.minimum(after_give, after_pull)

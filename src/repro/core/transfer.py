@@ -6,6 +6,14 @@ Two evaluation layers:
     at cluster granularity.
   * ``find_best_exchange`` — stage 2 (after locking a peer): exact evaluation
     with the CCM update formulae over cluster give/swap candidates.
+
+Each layer has a scalar reference path (this module's per-candidate loops)
+and a batched production path (``engine=`` / ``repro.core.engine``): pass a
+:class:`~repro.core.engine.PhaseEngine` to ``find_best_exchange`` /
+``try_transfer`` and every shortlisted candidate pair is scored in one
+vectorized pass; stage-1 batching lives in ``engine.batch_peer_diffs``.
+Candidate enumeration, shortlisting, and the selection rule are shared by
+both paths, so they pick the same exchange.
 """
 from __future__ import annotations
 
@@ -83,7 +91,8 @@ class BestExchange:
 def find_best_exchange(state: CCMState, clusters_a: List[np.ndarray],
                        clusters_b: List[np.ndarray], r_a: int, r_b: int,
                        max_candidates: int = 12,
-                       shortlist: int = 32) -> Optional[BestExchange]:
+                       shortlist: int = 32,
+                       engine=None) -> Optional[BestExchange]:
     """Exact FindBestCCM: best give/swap among cluster pairs (incl. one-sided
     gives via the empty cluster).  ``max_candidates`` bounds each side
     (clusters come sorted by load) — the paper's quality/cost tunable.
@@ -92,20 +101,30 @@ def find_best_exchange(state: CCMState, clusters_a: List[np.ndarray],
     most promising ``shortlist`` pairs; only those get the exact CCM
     update-formula evaluation (alpha dominates realistic instances, so the
     shortlist rarely excludes the true best; the final choice is exact).
+
+    ``engine``: a :class:`~repro.core.engine.PhaseEngine` scores every
+    shortlisted pair in one batched pass; ``None`` falls back to one
+    ``exchange_eval`` call per pair (reference path).
     """
     empty = np.zeros((0,), np.int64)
     cand_a = [empty] + clusters_a[:max_candidates]
     cand_b = [empty] + clusters_b[:max_candidates]
     w_before = max(state.work(r_a), state.work(r_b))
+    agg_a = agg_b = None
+    if engine is not None:
+        agg_a = engine.cluster_aggregates(r_a, clusters_a)
+        agg_b = engine.cluster_aggregates(r_b, clusters_b)
 
     pairs = [(ia, ib) for ia in range(len(cand_a))
              for ib in range(len(cand_b)) if ia or ib]
     if len(pairs) > shortlist:
         ph = state.phase
-        la = np.array([ph.task_load[c].sum() for c in cand_a])
-        lb = np.array([ph.task_load[c].sum() for c in cand_b])
-        ld_a = state.load[r_a] / ph.rank_speed[r_a]
-        ld_b = state.load[r_b] / ph.rank_speed[r_b]
+        if engine is not None:  # cached, bitwise-equal per-cluster sums
+            la = np.concatenate([[0.0], agg_a.loads[:max_candidates]])
+            lb = np.concatenate([[0.0], agg_b.loads[:max_candidates]])
+        else:
+            la = np.array([ph.task_load[c].sum() for c in cand_a])
+            lb = np.array([ph.task_load[c].sum() for c in cand_b])
         ia = np.array([p[0] for p in pairs])
         ib = np.array([p[1] for p in pairs])
         after_a = (state.load[r_a] - la[ia] + lb[ib]) / ph.rank_speed[r_a]
@@ -115,6 +134,18 @@ def find_best_exchange(state: CCMState, clusters_a: List[np.ndarray],
         pairs = [pairs[i] for i in order]
 
     best: Optional[BestExchange] = None
+    if engine is not None:
+        wa, wb, feas = engine.batch_exchange_eval(r_a, r_b, cand_a, cand_b,
+                                                  pairs, agg_a, agg_b)
+        for k, (ia, ib) in enumerate(pairs):
+            if not feas[k]:
+                continue
+            ev = ExchangeEval(float(wa[k]), float(wb[k]), True)
+            diff = w_before - ev.max_after
+            if diff > 1e-12 and (best is None or diff > best.work_diff):
+                best = BestExchange(cand_a[ia], cand_b[ib], float(diff), ev)
+        return best
+
     for ia, ib in pairs:
         ca, cb = cand_a[ia], cand_b[ib]
         ev = exchange_eval(state, ca, cb, r_a, r_b)
@@ -127,10 +158,11 @@ def find_best_exchange(state: CCMState, clusters_a: List[np.ndarray],
 
 
 def try_transfer(state: CCMState, clusters_a, clusters_b, r_a: int, r_b: int,
-                 max_candidates: int = 12) -> Optional[BestExchange]:
+                 max_candidates: int = 12,
+                 engine=None) -> Optional[BestExchange]:
     """TryTransfer: execute the best positive exchange, if any (mutates)."""
     best = find_best_exchange(state, clusters_a, clusters_b, r_a, r_b,
-                              max_candidates)
+                              max_candidates, engine=engine)
     if best is None:
         return None
     state.swap(best.tasks_ab, r_a, best.tasks_ba, r_b)

@@ -2,7 +2,9 @@
 memory barrier, homing costs.  Property-based via hypothesis."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import CCMParams, CCMState, exchange_eval, random_phase
 from repro.core.problem import initial_assignment

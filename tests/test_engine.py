@@ -1,0 +1,240 @@
+"""Vectorized evaluation engine vs the scalar reference path.
+
+Three parity layers (the contract documented in repro/core/engine.py):
+  * CSR structures match a naive per-element construction;
+  * the vectorized cluster build equals the seed union-find reference,
+    composition AND ordering;
+  * batched stage-2 scores match ``exchange_eval`` (1e-9; feasibility
+    exact), batched stage-1 scores match ``approx_best_diff`` bitwise, and
+    full CCM-LB runs produce identical assignments/traces on both paths.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (CCMParams, CCMState, ccm_lb, exchange_eval,
+                        random_phase)
+from repro.core.clusters import (build_clusters, build_clusters_reference,
+                                 summarize_clusters, summarize_rank)
+from repro.core.csr import PhaseCSR, rank_segments
+from repro.core.engine import (PhaseEngine, batch_peer_diffs,
+                               build_summary_tables)
+from repro.core.gossip import build_peer_networks
+from repro.core.problem import initial_assignment
+from repro.core.transfer import approx_best_diff
+
+PARAMS = CCMParams(alpha=1.0, beta=1e-9, gamma=1e-11, delta=1e-9,
+                   memory_constraint=True)
+
+
+def _phase(seed, ranks=5, tasks=60, blocks=8, comms=120, mem_cap=4e8):
+    return random_phase(seed, num_ranks=ranks, num_tasks=tasks,
+                        num_blocks=blocks, num_comms=comms, mem_cap=mem_cap)
+
+
+# --------------------------------------------------------------------- CSR
+def test_csr_task_edges_match_naive():
+    phase = _phase(0)
+    csr = PhaseCSR.from_phase(phase)
+    for t in range(phase.num_tasks):
+        naive = [e for e in range(phase.num_comms)
+                 if phase.comm_src[e] == t or phase.comm_dst[e] == t]
+        assert sorted(csr.task_edges.row(t).tolist()) == naive
+
+
+def test_csr_block_tasks_and_rank_segments():
+    phase = _phase(1)
+    csr = PhaseCSR.from_phase(phase)
+    for b in range(phase.num_blocks):
+        naive = np.nonzero(phase.task_block == b)[0]
+        np.testing.assert_array_equal(csr.block_tasks.row(b), naive)
+    a = initial_assignment(phase, "home")
+    segs = rank_segments(a, phase.num_ranks)
+    for r in range(phase.num_ranks):
+        np.testing.assert_array_equal(segs.row(r), np.nonzero(a == r)[0])
+
+
+def test_csr_gather_concatenates_rows():
+    phase = _phase(2)
+    csr = PhaseCSR.from_phase(phase)
+    rows = np.array([5, 0, 5, 17], np.int64)
+    expect = np.concatenate([csr.task_edges.row(t) for t in rows])
+    np.testing.assert_array_equal(csr.task_edges.gather(rows), expect)
+    assert csr.task_edges.gather(np.zeros(0, np.int64)).size == 0
+
+
+# ----------------------------------------------------------- cluster build
+@pytest.mark.parametrize("seed", range(15))
+def test_build_clusters_matches_reference(seed):
+    phase = _phase(seed, ranks=6, tasks=80, blocks=10, comms=160,
+                   mem_cap=1e12)
+    state = CCMState.build(phase, initial_assignment(phase, "home"), PARAMS)
+    got = build_clusters(state)
+    ref = build_clusters_reference(state)
+    assert got.keys() == ref.keys()
+    for r in got:
+        assert len(got[r]) == len(ref[r])
+        for x, y in zip(got[r], ref[r]):
+            np.testing.assert_array_equal(x, y)
+
+
+def test_build_clusters_incremental_matches_reference():
+    phase = _phase(3, ranks=6, tasks=80, blocks=10, comms=160, mem_cap=1e12)
+    state = CCMState.build(phase, initial_assignment(phase, "round_robin"),
+                           PARAMS)
+    got = build_clusters(state, only_ranks=[1, 4],
+                         max_clusters_per_rank=5)
+    ref = build_clusters_reference(state, only_ranks=[1, 4],
+                                   max_clusters_per_rank=5)
+    for r in (1, 4):
+        assert len(got[r]) == len(ref[r])
+        for x, y in zip(got[r], ref[r]):
+            np.testing.assert_array_equal(x, y)
+
+
+def test_summarize_clusters_volumes():
+    phase = _phase(4, ranks=6, tasks=80, blocks=10, comms=160, mem_cap=1e12)
+    state = CCMState.build(phase, initial_assignment(phase, "home"), PARAMS)
+    clusters = build_clusters(state)
+    csum = summarize_clusters(state, clusters)
+    for r, summaries in csum.items():
+        for ci, c in enumerate(summaries):
+            tasks = clusters[r][ci]
+            in_c = np.zeros(phase.num_tasks, bool)
+            in_c[tasks] = True
+            src_in = in_c[phase.comm_src]
+            dst_in = in_c[phase.comm_dst]
+            assert c.vol_intra == pytest.approx(
+                phase.comm_vol[src_in & dst_in].sum(), abs=1e-6)
+            assert c.vol_ext == pytest.approx(
+                phase.comm_vol[src_in ^ dst_in].sum(), abs=1e-6)
+
+
+# -------------------------------------------------- stage-2 batched parity
+@pytest.mark.parametrize("seed", range(50))
+def test_batch_exchange_eval_matches_scalar(seed):
+    """Engine-batched scores vs legacy exchange_eval on random phases: all
+    candidate give/swap pairs of a random rank pair."""
+    phase = _phase(seed, mem_cap=4e8 if seed % 2 else 1e12)
+    params = CCMParams(alpha=1.0, beta=1e-9, gamma=1e-11, delta=1e-9,
+                       memory_constraint=bool(seed % 3))
+    mode = "round_robin" if seed % 2 else "home"
+    state = CCMState.build(phase, initial_assignment(phase, mode), params)
+    engine = PhaseEngine(state)
+    clusters = build_clusters(state)
+    r_a = seed % phase.num_ranks
+    r_b = (r_a + 1 + seed % (phase.num_ranks - 1)) % phase.num_ranks
+    empty = np.zeros(0, np.int64)
+    cand_a = [empty] + clusters[r_a][:6]
+    cand_b = [empty] + clusters[r_b][:6]
+    pairs = [(ia, ib) for ia in range(len(cand_a))
+             for ib in range(len(cand_b)) if ia or ib]
+    agg_a = engine.cluster_aggregates(r_a, clusters[r_a])
+    agg_b = engine.cluster_aggregates(r_b, clusters[r_b])
+    wa, wb, feas = engine.batch_exchange_eval(r_a, r_b, cand_a, cand_b,
+                                              pairs, agg_a, agg_b)
+    for k, (ia, ib) in enumerate(pairs):
+        ev = exchange_eval(state, cand_a[ia], cand_b[ib], r_a, r_b)
+        assert bool(feas[k]) == ev.feasible, (ia, ib)
+        if ev.feasible:
+            np.testing.assert_allclose(wa[k], ev.work_a_after, rtol=1e-9,
+                                       atol=1e-12, err_msg=f"pair {(ia, ib)}")
+            np.testing.assert_allclose(wb[k], ev.work_b_after, rtol=1e-9,
+                                       atol=1e-12, err_msg=f"pair {(ia, ib)}")
+
+
+def test_batch_exchange_eval_after_transfers():
+    """Cache/counter consistency: batched scores stay correct after state
+    mutation + cluster rebuilds (the aggregate cache must invalidate)."""
+    phase = _phase(7, ranks=6, tasks=100, blocks=12, comms=250, mem_cap=1e12)
+    state = CCMState.build(phase, initial_assignment(phase, "home"), PARAMS)
+    engine = PhaseEngine(state)
+    clusters = build_clusters(state)
+    rng = np.random.default_rng(0)
+    empty = np.zeros(0, np.int64)
+    for step in range(8):
+        r_a, r_b = rng.choice(phase.num_ranks, size=2, replace=False)
+        cand_a = [empty] + clusters[r_a][:5]
+        cand_b = [empty] + clusters[r_b][:5]
+        pairs = [(ia, ib) for ia in range(len(cand_a))
+                 for ib in range(len(cand_b)) if ia or ib]
+        agg_a = engine.cluster_aggregates(r_a, clusters[r_a])
+        agg_b = engine.cluster_aggregates(r_b, clusters[r_b])
+        wa, wb, feas = engine.batch_exchange_eval(r_a, r_b, cand_a, cand_b,
+                                                  pairs, agg_a, agg_b)
+        for k, (ia, ib) in enumerate(pairs):
+            ev = exchange_eval(state, cand_a[ia], cand_b[ib], r_a, r_b)
+            assert bool(feas[k]) == ev.feasible
+            if ev.feasible:
+                np.testing.assert_allclose(wa[k], ev.work_a_after,
+                                           rtol=1e-9, atol=1e-12)
+                np.testing.assert_allclose(wb[k], ev.work_b_after,
+                                           rtol=1e-9, atol=1e-12)
+        # mutate: apply the first feasible non-empty give, rebuild clusters
+        for k, (ia, ib) in enumerate(pairs):
+            if feas[k] and (len(cand_a[ia]) or len(cand_b[ib])):
+                state.swap(cand_a[ia], r_a, cand_b[ib], r_b)
+                local = build_clusters(state, only_ranks=[r_a, r_b])
+                clusters[r_a] = local[r_a]
+                clusters[r_b] = local[r_b]
+                break
+
+
+# -------------------------------------------------- stage-1 batched parity
+@pytest.mark.parametrize("seed", range(10))
+def test_batch_peer_diffs_bitwise_matches_scalar(seed):
+    phase = _phase(seed, ranks=10, tasks=150, blocks=20, comms=300,
+                   mem_cap=3e8)
+    state = CCMState.build(phase, initial_assignment(phase, "home"), PARAMS)
+    clusters = build_clusters(state)
+    csum = summarize_clusters(state, clusters)
+    summaries = {r: summarize_rank(state, r, csum[r])
+                 for r in range(phase.num_ranks)}
+    info = build_peer_networks(summaries, k_rounds=2, fanout=3, seed=seed)
+    tables = build_summary_tables(summaries, PARAMS)
+    for r in range(phase.num_ranks):
+        peers = np.array([p for p in info[r] if p != r], np.int64)
+        diffs = batch_peer_diffs(tables, r, peers, PARAMS)
+        for d, p in zip(diffs, peers):
+            ref = approx_best_diff(summaries[r], summaries[int(p)], PARAMS)
+            assert float(d) == ref, (r, p)  # bitwise
+
+
+# ------------------------------------------------------- end-to-end parity
+@pytest.mark.parametrize("seed", range(5))
+def test_ccmlb_engine_matches_scalar_end_to_end(seed):
+    """Identical transfer traces -> bitwise-identical assignments under a
+    fixed seed, engine on vs off."""
+    phase = _phase(seed, ranks=12, tasks=240, blocks=30, comms=500,
+                   mem_cap=5e8)
+    params = CCMParams(delta=1e-9)
+    a0 = initial_assignment(phase)
+    ref = ccm_lb(phase, a0, params, n_iter=3, seed=seed, use_engine=False)
+    got = ccm_lb(phase, a0, params, n_iter=3, seed=seed, use_engine=True)
+    assert not ref.engine_used and got.engine_used
+    np.testing.assert_array_equal(got.assignment, ref.assignment)
+    assert got.transfers == ref.transfers
+    assert got.lock_conflicts == ref.lock_conflicts
+    assert got.max_work == ref.max_work
+    assert got.total_work == ref.total_work
+    assert got.imbalance == ref.imbalance
+
+
+def test_ccmlb_engine_parity_commfree_degenerate():
+    """beta=gamma=delta=0, no blocks/comms (the seqpack mapping) — heavy
+    score ties, so selection order must match exactly."""
+    rng = np.random.default_rng(0)
+    costs = np.round(rng.uniform(1, 4, 60))  # many exact ties
+    from repro.core.problem import Phase
+    phase = Phase(
+        task_load=costs, task_mem=np.zeros(60), task_overhead=np.zeros(60),
+        task_block=np.full(60, -1, np.int64), block_size=np.zeros(0),
+        block_home=np.zeros(0, np.int64), comm_src=np.zeros(0, np.int64),
+        comm_dst=np.zeros(0, np.int64), comm_vol=np.zeros(0),
+        rank_mem_base=np.zeros(6), rank_mem_cap=np.full(6, np.inf))
+    params = CCMParams(alpha=1.0, beta=0.0, gamma=0.0, delta=0.0,
+                       memory_constraint=False)
+    a0 = (np.arange(60) % 6).astype(np.int64)
+    ref = ccm_lb(phase, a0, params, n_iter=3, seed=1, use_engine=False)
+    got = ccm_lb(phase, a0, params, n_iter=3, seed=1, use_engine=True)
+    np.testing.assert_array_equal(got.assignment, ref.assignment)
+    assert got.max_work == ref.max_work

@@ -4,7 +4,9 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import CCMParams, CCMState, ccm_lb, random_phase
 from repro.core.milp import (build_comcp, build_fwmp, build_fwmp_reduced,
