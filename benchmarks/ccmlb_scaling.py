@@ -1,13 +1,15 @@
 """§IV scalability: CCM-LB solve time + quality vs rank count / fanout /
 rounds (the paper reports <0.7 s at 14 ranks; we sweep up to 256).
 
-Each rank-count config runs twice — scalar reference path
-(``use_engine=False``) and vectorized engine (``use_engine=True``) — and the
-results land in ``BENCH_ccmlb_scaling.json`` so the perf trajectory (and the
-engine speedup) is tracked from PR to PR.  Each pair of runs is checked for
-assignment identity (recorded as ``identical_assignments`` per config and
-asserted here; see repro/core/engine.py for the contract), so the speedup
-column is apples to apples.
+Each rank-count config runs three times — scalar reference path
+(``use_engine=False``), vectorized engine (``use_engine=True``), and the
+engine with batched lock events (``batch_lock_events=BATCH_EVENTS``: up to
+that many disjoint rank pairs scored per flush through one block-diagonal
+flow assembly) — and the results land in ``BENCH_ccmlb_scaling.json`` so
+the perf trajectory (and the engine/batched speedups) is tracked from PR to
+PR.  Every run of a config is checked for assignment identity (recorded as
+``identical_assignments`` and asserted here; see repro/core/engine.py for
+the contract), so the speedup columns are apples to apples.
 """
 from __future__ import annotations
 
@@ -22,12 +24,14 @@ from repro.core.problem import initial_assignment
 
 JSON_PATH = os.environ.get("BENCH_CCMLB_JSON", "BENCH_ccmlb_scaling.json")
 N_ITER = 4
+BATCH_EVENTS = 8
 
 
 def run(report):
     params = CCMParams(delta=1e-9)
     records = []
     speedup_largest = None
+    batched_speedup_largest = None
     for ranks in (16, 64, 256):
         phase = random_phase(1, num_ranks=ranks, num_tasks=25 * ranks,
                              num_blocks=3 * ranks, num_comms=50 * ranks,
@@ -37,14 +41,17 @@ def run(report):
         mean = phase.task_load.sum() / ranks
         times = {}
         assignments = {}
-        for use_engine in (False, True):
+        configs = (("scalar", dict(use_engine=False)),
+                   ("engine", dict(use_engine=True)),
+                   ("batched", dict(use_engine=True,
+                                    batch_lock_events=BATCH_EVENTS)))
+        for tag, kw in configs:
             t0 = time.perf_counter()
             res = ccm_lb(phase, a0, params, n_iter=N_ITER, k_rounds=2,
-                         fanout=4, seed=0, use_engine=use_engine)
+                         fanout=4, seed=0, **kw)
             dt = time.perf_counter() - t0
-            times[use_engine] = dt
-            assignments[use_engine] = res.assignment
-            tag = "engine" if use_engine else "scalar"
+            times[tag] = dt
+            assignments[tag] = res.assignment
             report(f"ccmlb_ranks_{ranks}_{tag}", dt * 1e6,
                    f"imb {st0.imbalance():.2f}->{res.imbalance[-1]:.4f} "
                    f"Wmax/mean={res.max_work[-1]/mean:.4f} "
@@ -54,7 +61,8 @@ def run(report):
                 "tasks": phase.num_tasks,
                 "comms": phase.num_comms,
                 "n_iter": N_ITER,
-                "engine": use_engine,
+                "engine": kw.get("use_engine", True),
+                "batch_lock_events": kw.get("batch_lock_events", 1),
                 "seconds": dt,
                 "seconds_per_iteration": dt / N_ITER,
                 "imbalance_after": float(res.imbalance[-1]),
@@ -63,15 +71,20 @@ def run(report):
             })
         # ratio goes in the derived column only — the us_per_call column
         # stays a call time so the CSV is uniformly parseable
-        identical = bool(np.array_equal(assignments[True],
-                                        assignments[False]))
-        assert identical, f"engine/scalar trajectories diverged at {ranks} ranks"
-        speedup = times[False] / times[True]
+        identical = bool(
+            np.array_equal(assignments["engine"], assignments["scalar"])
+            and np.array_equal(assignments["batched"], assignments["scalar"]))
+        assert identical, \
+            f"engine/batched/scalar trajectories diverged at {ranks} ranks"
+        speedup = times["scalar"] / times["engine"]
+        batched_speedup = times["scalar"] / times["batched"]
         report(f"ccmlb_ranks_{ranks}_speedup", 0.0,
-               f"engine {speedup:.2f}x over scalar, identical assignments")
-        records[-1]["identical_assignments"] = identical
-        records[-2]["identical_assignments"] = identical
+               f"engine {speedup:.2f}x, batched({BATCH_EVENTS}) "
+               f"{batched_speedup:.2f}x over scalar, identical assignments")
+        for k in range(-3, 0):
+            records[k]["identical_assignments"] = identical
         speedup_largest = speedup
+        batched_speedup_largest = batched_speedup
 
     # fanout/round sweep at 64 ranks (engine path — the default)
     phase = random_phase(2, num_ranks=64, num_tasks=1600, num_blocks=192,
@@ -97,6 +110,8 @@ def run(report):
         "numpy": np.__version__,
         "results": records,
         "engine_speedup_largest_config": speedup_largest,
+        "batched_speedup_largest_config": batched_speedup_largest,
+        "batch_lock_events": BATCH_EVENTS,
     }
     with open(JSON_PATH, "w") as f:
         json.dump(payload, f, indent=2)

@@ -104,10 +104,14 @@ def plan_expert_placement(counts: np.ndarray, cfg: ModelConfig,
                           rank_speed: Optional[np.ndarray] = None,
                           n_iter: int = 4, fanout: int = 4,
                           seed: int = 0,
-                          use_engine: bool = True) -> PlacementPlan:
+                          use_engine: bool = True,
+                          backend: str = "numpy",
+                          batch_lock_events: int = 1) -> PlacementPlan:
     """Plan an expert placement with CCM-LB.  ``use_engine`` selects the
     vectorized evaluation engine (default; the scalar reference path gives
-    identical plans — the knob exists for A/B benchmarking)."""
+    identical plans — the knob exists for A/B benchmarking); ``backend``
+    and ``batch_lock_events`` tune the engine's stage-2 scorer (Pallas
+    kernel / deferred disjoint-pair batching, both trajectory-exact)."""
     l_n, e_n = counts.shape
     assert e_n % n_devices == 0
     e_loc = e_n // n_devices
@@ -118,7 +122,8 @@ def plan_expert_placement(counts: np.ndarray, cfg: ModelConfig,
     a0 = phase.block_home.copy()  # tasks start at their expert's device
     st0 = CCMState.build(phase, a0, ccm)
     res = ccm_lb(phase, a0, ccm, n_iter=n_iter, fanout=fanout, seed=seed,
-                 use_engine=use_engine)
+                 use_engine=use_engine, backend=backend,
+                 batch_lock_events=batch_lock_events)
 
     # project the plan onto per-layer slot permutations: on each layer,
     # device dev gets the experts assigned to it (top e_loc by load if the

@@ -65,7 +65,9 @@ def plan_pipeline_stages(cfg: ModelConfig, n_stages: int, *,
                          tokens_per_microbatch: int = 4096,
                          hbm_budget_bytes: float = 16e9,
                          seed: int = 0,
-                         use_engine: bool = True) -> StagePlan:
+                         use_engine: bool = True,
+                         backend: str = "numpy",
+                         batch_lock_events: int = 1) -> StagePlan:
     kinds = cfg.layer_kinds()
     l_n = len(kinds)
     loads = np.array([layer_flops(cfg, k, tokens_per_microbatch)
@@ -92,7 +94,8 @@ def plan_pipeline_stages(cfg: ModelConfig, n_stages: int, *,
     params = CCMParams(alpha=1.0, beta=beta, gamma=0.0, delta=0.0,
                        memory_constraint=True)
     res = ccm_lb(phase, a0, params, n_iter=4, fanout=min(4, n_stages - 1),
-                 seed=seed, use_engine=use_engine)
+                 seed=seed, use_engine=use_engine, backend=backend,
+                 batch_lock_events=batch_lock_events)
     assign = res.assignment
     stage_flops = np.bincount(assign, weights=loads, minlength=n_stages)
     crossings = assign[phase.comm_src] != assign[phase.comm_dst]

@@ -33,7 +33,9 @@ def rebalance_sequences(costs: np.ndarray, n_ranks: int, *,
                         act_bytes: Optional[np.ndarray] = None,
                         mem_cap: float = np.inf, seed: int = 0,
                         n_iter: int = 3,
-                        use_engine: bool = True) -> SeqPackResult:
+                        use_engine: bool = True,
+                        backend: str = "numpy",
+                        batch_lock_events: int = 1) -> SeqPackResult:
     """costs: (n_seqs,) predicted step-time contribution per sequence."""
     k = costs.shape[0]
     phase = Phase(
@@ -55,7 +57,8 @@ def rebalance_sequences(costs: np.ndarray, n_ranks: int, *,
                        memory_constraint=np.isfinite(mem_cap))
     st0 = CCMState.build(phase, a0, params)
     res = ccm_lb(phase, a0, params, n_iter=n_iter, fanout=4, seed=seed,
-                 use_engine=use_engine)
+                 use_engine=use_engine, backend=backend,
+                 batch_lock_events=batch_lock_events)
     return SeqPackResult(
         assignment=res.assignment,
         makespan_before=st0.max_work(),

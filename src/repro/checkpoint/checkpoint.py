@@ -7,6 +7,16 @@ the latest checkpoint, which is what the fault-tolerance restart loop
 (repro.runtime.fault) depends on.  Restore re-places leaves with a target
 sharding tree, which is also the elastic re-mesh path: the same checkpoint
 restores onto a different mesh by passing different shardings.
+
+Async saves are tracked in a module-level in-flight registry keyed by the
+checkpoint directory: readers (``latest_step``/``restore``) join any
+pending writer threads for that directory before listing or loading.  This
+is what makes restart-after-failure correct with ``async_write=True`` — the
+restart loop constructs a FRESH ``CheckpointManager`` that cannot join the
+crashed run's writer thread through ``self._thread``, and without the
+registry it would read the directory mid-write and silently replay from
+step 0 (observed: an injected step-5 failure ~2 fast steps after the step-3
+save consistently beat the writer to the rename).
 """
 from __future__ import annotations
 
@@ -72,7 +82,42 @@ def save(ckpt_dir: str, step: int, tree: Any, *, extra: Optional[dict] = None,
     return final
 
 
+# directory -> in-flight async writer threads; readers join them so a save
+# started by one CheckpointManager is never invisible to another (or to the
+# module-level functions) in the same process
+_INFLIGHT: dict = {}
+_INFLIGHT_LOCK = threading.Lock()
+
+
+def _register_and_start(ckpt_dir, thread: threading.Thread):
+    """Register an async writer and start it under the registry lock, so a
+    reader snapshotting the registry can never observe a registered-but-
+    unstarted thread (join() on one raises) nor miss a started one.  Dead
+    writers are pruned here, keeping the registry bounded over long runs."""
+    key = str(Path(ckpt_dir).resolve())
+    with _INFLIGHT_LOCK:
+        alive = [t for t in _INFLIGHT.get(key, ()) if t.is_alive()]
+        alive.append(thread)
+        _INFLIGHT[key] = alive
+        thread.start()
+
+
+def wait_for_inflight(ckpt_dir):
+    """Block until every pending async save targeting ``ckpt_dir`` (from any
+    CheckpointManager in this process) has completed."""
+    key = str(Path(ckpt_dir).resolve())
+    with _INFLIGHT_LOCK:
+        threads = list(_INFLIGHT.get(key, ()))
+    for t in threads:
+        t.join()
+    with _INFLIGHT_LOCK:
+        alive = [t for t in _INFLIGHT.get(key, ()) if t.is_alive()]
+        if key in _INFLIGHT:
+            _INFLIGHT[key] = alive
+
+
 def latest_step(ckpt_dir: str) -> Optional[int]:
+    wait_for_inflight(ckpt_dir)
     d = Path(ckpt_dir)
     if not d.exists():
         return None
@@ -86,6 +131,7 @@ def restore(ckpt_dir: str, step: int, example_tree: Any,
     """Restore into the structure of ``example_tree``; if ``shardings`` is
     given (a matching tree of NamedShardings), leaves are placed accordingly
     — pass shardings built on a DIFFERENT mesh to elastically re-shard."""
+    wait_for_inflight(ckpt_dir)
     d = Path(ckpt_dir) / f"step_{step:08d}"
     manifest = json.loads((d / "manifest.json").read_text())
     flat, names, treedef = _flatten_with_names(example_tree)
@@ -127,7 +173,7 @@ class CheckpointManager:
         self.wait()
         if self.async_write:
             self._thread = threading.Thread(target=work, daemon=True)
-            self._thread.start()
+            _register_and_start(self.dir, self._thread)
         else:
             work()
 

@@ -22,6 +22,29 @@ that guarantee — stage-2 scores may differ by summation-order ulps, so a
 sub-ulp near-tie between two candidate exchanges could in principle
 diverge the paths).
 
+``backend`` selects the engine's stage-4 tile scorer ("numpy" or the
+Pallas ``ccm_scorer`` kernel, bitwise-equal in interpret mode).
+
+Batched lock events: ``batch_lock_events=k`` defers the scoring of up to
+``k`` executable lock events whose rank pairs are pairwise disjoint, then
+scores them in ONE engine call (one block-diagonal flow assembly, one
+Pallas launch under ``backend="pallas"``).  Trajectory-exact in exact
+arithmetic: a transfer between ranks (a, b) cannot change the score,
+shortlist or clusters of a disjoint pair (c, d) — see
+``PhaseEngine.batch_exchange_eval_multi`` — and the event sequence itself
+is independent of scoring outcomes (turn order is fixed by the stage-3
+work lists and the lock protocol).  The batch is flushed the moment a turn
+touches a rank with a deferred event, before any grant-chain handoff, and
+at stage end, so the sequential order of state mutations is preserved.
+The guarantee carries the same sub-ulp caveat as the engine-vs-scalar
+contract: a disjoint (a, b) swap relabels entries of vol rows/columns of
+third ranks without changing their true sums, so the ``st.vol[r].sum()``
+bases a deferred event reads can differ from the sequential path's
+post-swap re-summation by summation-order ulps — a near-tie inside that
+window could in principle flip the selected exchange.
+tests/test_engine.py and the scaling benchmark assert identical
+trajectories empirically (they hold on every tested instance).
+
 Returns the improved assignment plus a trace (max work, imbalance, transfers
 per iteration) used by tests and benchmarks.
 """
@@ -36,12 +59,13 @@ import numpy as np
 from repro.core.ccm import CCMState
 from repro.core.clusters import (build_clusters, summarize_clusters,
                                  summarize_rank)
-from repro.core.engine import (PhaseEngine, batch_peer_diffs,
+from repro.core.engine import (ExchangeEvent, PhaseEngine, batch_peer_diffs,
                                build_summary_tables)
 from repro.core.gossip import build_peer_networks
 from repro.core.locks import LockManager
 from repro.core.problem import CCMParams, Phase
-from repro.core.transfer import approx_best_diff, try_transfer
+from repro.core.transfer import (approx_best_diff, select_best,
+                                 shortlist_pairs, try_transfer)
 
 
 @dataclasses.dataclass
@@ -60,9 +84,14 @@ def ccm_lb(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
            n_iter: int = 4, k_rounds: int = 2, fanout: int = 4,
            seed: int = 0, max_candidates: int = 12,
            max_clusters_per_rank: Optional[int] = None,
-           use_engine: bool = True) -> CCMLBResult:
+           use_engine: bool = True, backend: str = "numpy",
+           batch_lock_events: int = 1) -> CCMLBResult:
+    if batch_lock_events < 1:
+        raise ValueError("batch_lock_events must be >= 1")
+    if batch_lock_events > 1 and not use_engine:
+        raise ValueError("batch_lock_events > 1 requires use_engine=True")
     state = CCMState.build(phase, assignment, params)
-    engine = PhaseEngine(state) if use_engine else None
+    engine = PhaseEngine(state, backend=backend) if use_engine else None
     trace_max = [state.max_work()]
     trace_tot = [state.total_work()]
     trace_imb = [state.imbalance()]
@@ -108,57 +137,15 @@ def ccm_lb(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
             work_lists[r] = deque(scored)
 
         # stage 2: lock/transfer event loop
-        locks = LockManager(phase.num_ranks)
-        # round-robin over ranks for fairness; each "turn" a rank either
-        # requests its best remaining peer or is idle.  Queued lock requests
-        # are drained synchronously on release (_handle_grant), so a
-        # non-empty active deque is the only liveness condition.
-        active = deque(r for r in range(phase.num_ranks) if work_lists[r])
-        spins = 0
-        max_spins = 50 * phase.num_ranks + 1000
-        while active and spins < max_spins:
-            spins += 1
-            r = active.popleft()
-            if not work_lists[r]:
-                continue
-            diff, p = work_lists[r].popleft()
-            granted = locks.request(r, p)
-            if not granted:
-                conflicts += 1
-                # re-queue the attempt at the back (retry later)
-                work_lists[r].append((diff * 0.5, p))
-                if work_lists[r]:
-                    active.append(r)
-                continue
-            # granted: deadlock-avoidance check (Fig.1 line 45)
-            if locks.must_yield(r, p):
-                conflicts += 1
-                nxt = locks.release(r, p)
-                work_lists[r].append((diff, p))
-                active.append(r)
-                if nxt is not None:
-                    transfers += _handle_grant(
-                        nxt, p, state, clusters, locks, work_lists, active,
-                        max_candidates, max_clusters_per_rank, engine)
-                continue
-            # fresh info exchange + exact transfer (recvUpdate/TryTransfer)
-            best = try_transfer(state, clusters[r], clusters[p], r, p,
-                                max_candidates, engine=engine)
-            if best is not None:
-                transfers += 1
-                # cluster membership changed on r and p: rebuild locally
-                local = build_clusters(
-                    state, max_clusters_per_rank=max_clusters_per_rank,
-                    only_ranks=[r, p])
-                clusters[r] = local[r]
-                clusters[p] = local[p]
-            nxt = locks.release(r, p)
-            if nxt is not None:
-                transfers += _handle_grant(
-                    nxt, p, state, clusters, locks, work_lists, active,
-                    max_candidates, max_clusters_per_rank, engine)
-            if work_lists[r]:
-                active.append(r)
+        if batch_lock_events > 1:
+            dt, dc = _stage2_batched(phase, state, clusters, work_lists,
+                                     engine, max_candidates,
+                                     max_clusters_per_rank, batch_lock_events)
+        else:
+            dt, dc = _stage2(phase, state, clusters, work_lists, engine,
+                             max_candidates, max_clusters_per_rank)
+        transfers += dt
+        conflicts += dc
 
         trace_max.append(state.max_work())
         trace_tot.append(state.total_work())
@@ -167,6 +154,169 @@ def ccm_lb(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
     return CCMLBResult(state.assignment.copy(), state, trace_max, trace_tot,
                        trace_imb, transfers, conflicts,
                        engine_used=engine is not None)
+
+
+def _stage2(phase, state, clusters, work_lists, engine, max_candidates,
+            max_clusters_per_rank) -> Tuple[int, int]:
+    """One-event-at-a-time lock/transfer loop (the reference event order)."""
+    transfers = conflicts = 0
+    locks = LockManager(phase.num_ranks)
+    # round-robin over ranks for fairness; each "turn" a rank either
+    # requests its best remaining peer or is idle.  Queued lock requests
+    # are drained synchronously on release (_handle_grant), so a
+    # non-empty active deque is the only liveness condition.
+    active = deque(r for r in range(phase.num_ranks) if work_lists[r])
+    spins = 0
+    max_spins = 50 * phase.num_ranks + 1000
+    while active and spins < max_spins:
+        spins += 1
+        r = active.popleft()
+        if not work_lists[r]:
+            continue
+        diff, p = work_lists[r].popleft()
+        granted = locks.request(r, p)
+        if not granted:
+            conflicts += 1
+            # re-queue the attempt at the back (retry later)
+            work_lists[r].append((diff * 0.5, p))
+            if work_lists[r]:
+                active.append(r)
+            continue
+        # granted: deadlock-avoidance check (Fig.1 line 45)
+        if locks.must_yield(r, p):
+            conflicts += 1
+            nxt = locks.release(r, p)
+            work_lists[r].append((diff, p))
+            active.append(r)
+            if nxt is not None:
+                transfers += _handle_grant(
+                    nxt, p, state, clusters, locks, work_lists, active,
+                    max_candidates, max_clusters_per_rank, engine)
+            continue
+        # fresh info exchange + exact transfer (recvUpdate/TryTransfer)
+        best = try_transfer(state, clusters[r], clusters[p], r, p,
+                            max_candidates, engine=engine)
+        if best is not None:
+            transfers += 1
+            # cluster membership changed on r and p: rebuild locally
+            local = build_clusters(
+                state, max_clusters_per_rank=max_clusters_per_rank,
+                only_ranks=[r, p])
+            clusters[r] = local[r]
+            clusters[p] = local[p]
+        nxt = locks.release(r, p)
+        if nxt is not None:
+            transfers += _handle_grant(
+                nxt, p, state, clusters, locks, work_lists, active,
+                max_candidates, max_clusters_per_rank, engine)
+        if work_lists[r]:
+            active.append(r)
+    return transfers, conflicts
+
+
+@dataclasses.dataclass
+class _PendingEvent:
+    """An executable lock event whose scoring has been deferred."""
+
+    r: int
+    p: int
+    cand_a: list
+    cand_b: list
+    pairs: list
+    agg_a: object
+    agg_b: object
+    w_before: float
+
+
+def _stage2_batched(phase, state, clusters, work_lists, engine,
+                    max_candidates, max_clusters_per_rank,
+                    batch: int) -> Tuple[int, int]:
+    """Lock/transfer loop with deferred, batched event scoring.
+
+    Identical turn order to :func:`_stage2` (lock state never outlives a
+    turn, so request/grant outcomes cannot differ); only the try_transfer
+    evaluation of up to ``batch`` pairwise-disjoint events is deferred and
+    executed at flush points in original event order.  Flushes happen
+    before any turn that touches a deferred rank, before any grant-chain
+    handoff, on a full batch, and at stage end — exactly the moments the
+    sequential loop would have interleaved state mutations.
+    """
+    transfers = conflicts = 0
+    locks = LockManager(phase.num_ranks)
+    active = deque(r for r in range(phase.num_ranks) if work_lists[r])
+    pending: List[_PendingEvent] = []
+    busy: set = set()
+
+    def flush():
+        nonlocal transfers
+        if not pending:
+            return
+        results = engine.batch_exchange_eval_multi([
+            ExchangeEvent(e.r, e.p, e.cand_a, e.cand_b, e.pairs,
+                          e.agg_a, e.agg_b) for e in pending])
+        for e, (wa, wb, feas) in zip(pending, results):
+            best = select_best(e.cand_a, e.cand_b, e.pairs, wa, wb, feas,
+                               e.w_before)
+            if best is not None:
+                state.swap(best.tasks_ab, e.r, best.tasks_ba, e.p)
+                transfers += 1
+                local = build_clusters(
+                    state, max_clusters_per_rank=max_clusters_per_rank,
+                    only_ranks=[e.r, e.p])
+                clusters[e.r] = local[e.r]
+                clusters[e.p] = local[e.p]
+        pending.clear()
+        busy.clear()
+
+    spins = 0
+    max_spins = 50 * phase.num_ranks + 1000
+    while active and spins < max_spins:
+        spins += 1
+        r = active.popleft()
+        if not work_lists[r]:
+            continue
+        if r in busy or work_lists[r][0][1] in busy:
+            flush()     # this turn reads/mutates a deferred rank
+        diff, p = work_lists[r].popleft()
+        granted = locks.request(r, p)
+        if not granted:
+            conflicts += 1
+            work_lists[r].append((diff * 0.5, p))
+            if work_lists[r]:
+                active.append(r)
+            continue
+        if locks.must_yield(r, p):
+            conflicts += 1
+            nxt = locks.release(r, p)
+            work_lists[r].append((diff, p))
+            active.append(r)
+            if nxt is not None:
+                flush()     # chain transfers must see deferred swaps
+                transfers += _handle_grant(
+                    nxt, p, state, clusters, locks, work_lists, active,
+                    max_candidates, max_clusters_per_rank, engine)
+            continue
+        # executable: capture candidates/shortlist now (invariant under the
+        # other deferred events' transfers — disjoint ranks), score later
+        cand_a, cand_b, pairs, agg_a, agg_b = shortlist_pairs(
+            state, clusters[r], clusters[p], r, p, max_candidates,
+            engine=engine)
+        w_before = max(state.work(r), state.work(p))
+        pending.append(_PendingEvent(r, p, cand_a, cand_b, pairs,
+                                     agg_a, agg_b, w_before))
+        busy.update((r, p))
+        nxt = locks.release(r, p)
+        if nxt is not None:
+            flush()
+            transfers += _handle_grant(
+                nxt, p, state, clusters, locks, work_lists, active,
+                max_candidates, max_clusters_per_rank, engine)
+        if work_lists[r]:
+            active.append(r)
+        if len(pending) >= batch:
+            flush()
+    flush()
+    return transfers, conflicts
 
 
 def _handle_grant(r: int, p: int, state, clusters, locks, work_lists, active,

@@ -6,7 +6,9 @@ give/swap with one :func:`repro.core.ccm.exchange_eval` call (a Python loop
 over the touched edges and a dict of volume deltas); at 256 ranks that is
 ~400k calls and >80 % of wall-clock.  This module evaluates *all* candidate
 moves of a lock event (and all stage-1 peer scores of a rank) in single
-vectorized passes over flat arrays.
+vectorized passes over flat arrays — and, since PR 2, all candidate moves
+of SEVERAL disjoint lock events in one batched scoring pass that can run on
+the Pallas ``ccm_scorer`` kernel.
 
 Contract with the scalar path
 -----------------------------
@@ -32,6 +34,12 @@ batched scorer computes exactly the same model:
     same order — so the degenerate comm-free instances where ties actually
     occur (equal integer-ish loads, beta=gamma=delta=0) stay in lockstep;
     with continuous comm volumes, sub-ulp near-ties have measure zero.
+  * the two engine backends (``backend="numpy"`` and ``backend="pallas"``
+    in interpret mode) are BITWISE-equal on scores and feasibility: both
+    consume the same packed feature tiles (built here, reductions on the
+    host) and evaluate the same multiplication-free expression tree (see
+    repro/kernels/ccm_scorer), then share one host-side work combine.
+    tests/test_ccm_scorer.py asserts it.
 
 Stage-2 decomposition
 ---------------------
@@ -48,19 +56,36 @@ exchange pair (A_i, B_j) is a small linear combination of F entries, so all
 ops.  Homing/shared-memory transitions (Thm III.1) decompose the same way:
 per-cluster block leave/arrive terms plus a sparse pairwise correction for
 blocks shared between A_i and B_j.
+
+Batched lock events extend this to E pairwise-disjoint rank pairs: each
+event keeps its own group id space (a block-diagonal flow matrix), all
+blocks are accumulated with ONE flat bincount whose per-event bin segments
+see exactly the per-event edge lists in the per-event order — so each
+event's F is bitwise-identical to what a solo evaluation would build — and
+the E score tiles go through the scorer in one call (one Pallas launch).
+A transfer between ranks (a, b) never changes the TRUE score of a disjoint
+pair (c, d): loads, blocks and memory of c/d are untouched, and c/d's
+row/column sums of the volume matrix are preserved (moved edges only
+relabel a<->b endpoints), which is what makes deferred batch scoring
+trajectory-exact in exact arithmetic.  In floating point the preserved row
+sums are re-summed from relabelled entries, so deferred scores can differ
+from sequential post-swap scores by summation-order ulps — the same
+empirical-not-absolute caveat as the engine-vs-scalar contract above.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.ccm import CCMState, INF
 from repro.core.csr import CSR, PhaseCSR
+from repro.kernels.ccm_scorer import layout as L
+from repro.kernels.ccm_scorer import ops as scorer_ops
 
-__all__ = ["PhaseEngine", "SummaryTables", "build_summary_tables",
-           "batch_peer_diffs"]
+__all__ = ["PhaseEngine", "ExchangeEvent", "SummaryTables",
+           "build_summary_tables", "batch_peer_diffs"]
 
 
 @dataclasses.dataclass
@@ -85,20 +110,56 @@ class ClusterAggregates:
     blk_map: Dict[int, List[Tuple[int, int]]]  # block -> [(ci, cnt)]
 
 
+@dataclasses.dataclass
+class ExchangeEvent:
+    """One lock event to score: candidate cluster lists of a rank pair.
+
+    ``cand_a[0]``/``cand_b[0]`` must be the empty cluster; ``pairs`` is the
+    (ia, ib) shortlist to return scores for.  ``agg_*`` are the cached
+    aggregates of the rank's FULL cluster lists (``cand_*[1:]`` must be a
+    prefix of them); omitted, they are computed on the fly.
+    """
+
+    r_a: int
+    r_b: int
+    cand_a: Sequence[np.ndarray]
+    cand_b: Sequence[np.ndarray]
+    pairs: Sequence[Tuple[int, int]]
+    agg_a: Optional[ClusterAggregates] = None
+    agg_b: Optional[ClusterAggregates] = None
+
+
+def _with_empty(x: np.ndarray) -> np.ndarray:
+    out = np.zeros(x.shape[0] + 1)
+    out[1:] = x
+    return out
+
+
 class PhaseEngine:
     """Batched (vectorizable, JAX-friendly) move scoring over a CCMState.
 
-    Holds only *phase-static* structure (the CSR view, a reusable label
-    buffer) plus per-cluster-list aggregate caches validated by list
+    Holds only *phase-static* structure (the CSR view, reusable label
+    buffers) plus per-cluster-list aggregate caches validated by list
     identity; all mutable state stays in the wrapped ``CCMState``, so the
     engine remains valid across transfers.
+
+    ``backend`` selects the stage-2 tile scorer: ``"numpy"`` (the
+    reference, repro/kernels/ccm_scorer/ref.py) or ``"pallas"`` (the
+    kernel; ``interpret=True`` runs it through the Pallas interpreter on
+    CPU, where it is bitwise-equal to numpy — the CI-exercised path).
     """
 
-    def __init__(self, state: CCMState):
+    def __init__(self, state: CCMState, backend: str = "numpy",
+                 interpret: bool = True):
+        if backend not in ("numpy", "pallas"):
+            raise ValueError(f"unknown engine backend: {backend!r}")
         self.state = state
         self.phase = state.phase
         self.csr: PhaseCSR = state.csr
+        self.backend = backend
+        self.interpret = interpret
         self._glab = np.zeros(self.phase.num_tasks, np.int64)
+        self._elab = np.full(self.phase.num_tasks, -1, np.int64)
         # rank -> (cluster list reference, aggregates); holding the list
         # reference both validates the cache (ccm_lb installs a NEW list
         # when a rank's clusters are rebuilt) and pins its id.
@@ -154,52 +215,154 @@ class PhaseEngine:
     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Score every candidate pair ``(cand_a[ia] a->b, cand_b[ib] b->a)``.
 
-        ``cand_a[0]``/``cand_b[0]`` must be the empty cluster (one-sided
-        gives).  ``agg_*`` are the cached aggregates of the rank's FULL
-        cluster lists (``cand_*[1:]`` must be a prefix of them); omitted,
-        they are computed on the fly.  Returns ``(work_a_after,
-        work_b_after, feasible)`` arrays aligned with ``pairs``; infeasible
-        pairs get ``inf`` work, matching the scalar ``exchange_eval``.
+        Returns ``(work_a_after, work_b_after, feasible)`` arrays aligned
+        with ``pairs``; infeasible pairs get ``inf`` work, matching the
+        scalar ``exchange_eval``.  One-event convenience wrapper around
+        :meth:`batch_exchange_eval_multi`.
         """
-        st, ph, p = self.state, self.phase, self.state.params
-        na, nb = len(cand_a) - 1, len(cand_b) - 1
+        [res] = self.batch_exchange_eval_multi([
+            ExchangeEvent(r_a, r_b, cand_a, cand_b, pairs, agg_a, agg_b)])
+        return res
+
+    def batch_exchange_eval_multi(
+            self, events: Sequence[ExchangeEvent],
+    ) -> List[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+        """Score a batched lock event: E pairwise-disjoint rank pairs.
+
+        All events' block-diagonal flow matrices come from one flat
+        bincount and all score tiles from one scorer call (one Pallas
+        launch under ``backend="pallas"``).  Returns per-event
+        ``(work_a_after, work_b_after, feasible)`` aligned with each
+        event's ``pairs``.
+        """
+        if not events:
+            return []
+        events = [dataclasses.replace(
+            e,
+            agg_a=(e.agg_a if e.agg_a is not None
+                   else self._compute_aggregates(list(e.cand_a[1:]))),
+            agg_b=(e.agg_b if e.agg_b is not None
+                   else self._compute_aggregates(list(e.cand_b[1:]))))
+            for e in events]
+        flows = self._flow_matrices(events)
+        feats = [self._event_features(e, F) for e, F in zip(events, flows)]
+
+        a_pad = max(f[0].shape[1] for f in feats)
+        b_pad = max(f[1].shape[1] for f in feats)
+        if self.backend == "pallas":
+            a_pad = max(8, -(-a_pad // 8) * 8)   # tile hygiene for the kernel
+            b_pad = max(8, -(-b_pad // 8) * 8)
+        e_n = len(events)
+        if e_n == 1 and feats[0][0].shape[1] == a_pad \
+                and feats[0][1].shape[1] == b_pad:
+            # solo event, no padding needed: score the feature views directly
+            av, bv, pm = (f[None] for f in feats[0][:3])
+            sc = feats[0][3][None]
+        else:
+            av = np.zeros((e_n, L.N_AV, a_pad))
+            bv = np.zeros((e_n, L.N_AV, b_pad))
+            pm = np.zeros((e_n, L.N_PM, a_pad, b_pad))
+            sc = np.zeros((e_n, L.N_SC))
+            for k, (av_k, bv_k, pm_k, sc_k) in enumerate(feats):
+                av[k, :, :av_k.shape[1]] = av_k
+                bv[k, :, :bv_k.shape[1]] = bv_k
+                pm[k, :, :pm_k.shape[1], :pm_k.shape[2]] = pm_k
+                sc[k] = sc_k
+
+        out = scorer_ops.ccm_score_tiles(av, bv, pm, sc,
+                                         backend=self.backend,
+                                         interpret=self.interpret)
+        w_a, w_b, feas = scorer_ops.combine_work(out, sc, self.state.params)
+
+        results = []
+        for k, e in enumerate(events):
+            n_p = len(e.pairs)
+            ia = np.fromiter((q[0] for q in e.pairs), np.int64, n_p)
+            ib = np.fromiter((q[1] for q in e.pairs), np.int64, n_p)
+            results.append((w_a[k, ia, ib], w_b[k, ia, ib], feas[k, ia, ib]))
+        return results
+
+    def _flow_matrices(self, events: Sequence[ExchangeEvent]
+                       ) -> List[np.ndarray]:
+        """Per-event group-flow matrices via ONE flat bincount.
+
+        Event k's bins only ever receive edges incident to event k's ranks,
+        gathered in ascending edge-id order — exactly the edge list and
+        order a solo evaluation uses — so each returned F is bitwise-equal
+        to the single-event construction.  Tasks of other events read as
+        group 0 ("other rank") through the event-id mask.
+        """
+        ph, g, ev = self.phase, self._glab, self._elab
+        assignment = self.state.assignment
+        metas = []      # (tasks_both, eids, G, offset)
+        bins_l, w_l = [], []
+        offset = 0
+        def _reset_labels(upto):
+            for both_, ca_, cb_, _, _, _ in metas[:upto]:
+                g[both_] = 0
+                ev[both_] = -1
+                for c in ca_:
+                    g[c] = 0
+                    ev[c] = -1
+                for c in cb_:
+                    g[c] = 0
+                    ev[c] = -1
+
+        for k, e in enumerate(events):
+            na, nb = len(e.cand_a) - 1, len(e.cand_b) - 1
+            G = 3 + na + nb
+            tasks_a = np.nonzero(assignment == e.r_a)[0]
+            tasks_b = np.nonzero(assignment == e.r_b)[0]
+            both = np.concatenate([tasks_a, tasks_b])
+            if (ev[both] != -1).any():
+                # detected BEFORE this event touches the buffers: roll back
+                # the earlier events' labels so the engine stays usable
+                _reset_labels(k)
+                raise ValueError(
+                    "batched lock events must have pairwise-disjoint rank "
+                    f"sets (event {k} on ranks ({e.r_a}, {e.r_b}) overlaps "
+                    "an earlier event)")
+            g[tasks_a] = 1
+            g[tasks_b] = 2
+            ev[both] = k
+            for i, c in enumerate(e.cand_a[1:]):
+                g[c] = 3 + i
+                ev[c] = k
+            for j, c in enumerate(e.cand_b[1:]):
+                g[c] = 3 + na + j
+                ev[c] = k
+            eids = np.unique(self.csr.task_edges.gather(both))
+            metas.append((both, e.cand_a[1:], e.cand_b[1:], eids, G, offset))
+            offset += G * G
+        for k, (both, ca, cb, eids, G, off) in enumerate(metas):
+            src, dst = ph.comm_src[eids], ph.comm_dst[eids]
+            gs = np.where(ev[src] == k, g[src], 0)
+            gd = np.where(ev[dst] == k, g[dst], 0)
+            bins_l.append(off + gs * G + gd)
+            w_l.append(ph.comm_vol[eids])
+        flat = np.bincount(
+            np.concatenate(bins_l) if bins_l else np.zeros(0, np.int64),
+            weights=np.concatenate(w_l) if w_l else None,
+            minlength=offset)
+        # reset the shared buffers — including the candidate arrays, which
+        # a direct caller may pass with tasks no longer assigned to the
+        # event's ranks (a stale label here would corrupt every later
+        # evaluation)
+        _reset_labels(len(metas))
+        return [flat[off:off + G * G].reshape(G, G)
+                for _, _, _, _, G, off in metas]
+
+    def _event_features(self, e: ExchangeEvent, F: np.ndarray
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                   np.ndarray]:
+        """Feature planes of one event (see repro/kernels/ccm_scorer/ops.py
+        for the layout) — host-side reductions only; everything downstream
+        is elementwise and backend-shared."""
+        st, ph = self.state, self.phase
+        r_a, r_b = e.r_a, e.r_b
+        agg_a, agg_b = e.agg_a, e.agg_b
+        na, nb = len(e.cand_a) - 1, len(e.cand_b) - 1
         G = 3 + na + nb
-        assignment = st.assignment
-        tasks_a = np.nonzero(assignment == r_a)[0]
-        tasks_b = np.nonzero(assignment == r_b)[0]
-        if agg_a is None:  # direct call: compute without touching the cache
-            agg_a = self._compute_aggregates(list(cand_a[1:]))
-        if agg_b is None:
-            agg_b = self._compute_aggregates(list(cand_b[1:]))
-
-        # --- group labels + group-flow matrix F --------------------------
-        g = self._glab
-        g[tasks_a] = 1
-        g[tasks_b] = 2
-        for i, c in enumerate(cand_a[1:]):
-            g[c] = 3 + i
-        for j, c in enumerate(cand_b[1:]):
-            g[c] = 3 + na + j
-        both = np.concatenate([tasks_a, tasks_b])
-        eids = np.unique(self.csr.task_edges.gather(both))
-        gs = g[ph.comm_src[eids]]
-        gd = g[ph.comm_dst[eids]]
-        F = np.bincount(gs * G + gd, weights=ph.comm_vol[eids],
-                        minlength=G * G).reshape(G, G)
-        # reset the shared buffer — including the candidate arrays, which a
-        # direct caller may pass with tasks no longer assigned to r_a/r_b
-        # (a stale label here would corrupt every later evaluation)
-        g[both] = 0
-        for c in cand_a[1:]:
-            g[c] = 0
-        for c in cand_b[1:]:
-            g[c] = 0
-
-        def col(x):         # per-a-candidate -> column vector (na+1, 1)
-            return x[:, None]
-
-        def row(x):         # per-b-candidate -> row vector (1, nb+1)
-            return x[None, :]
 
         # group layout is contiguous (1 | 2 | a-clusters | b-clusters), so
         # every flow aggregate reduces to slice sums of F:
@@ -210,103 +373,41 @@ class PhaseEngine:
         col_from_a = F[1, :] + F[sa:sb, :].sum(0)
         col_from_b = F[2, :] + F[sb:, :].sum(0)
 
-        def with_empty(x):
-            out = np.zeros(x.shape[0] + 1)
-            out[1:] = x
-            return out
-
         ar = np.arange(sa, sb)
         br = np.arange(sb, G)
-        a_intra = with_empty(F[ar, ar])
-        a_out_own = with_empty(row_to_a[sa:sb])    # v(A -> Ra)
-        a_in_own = with_empty(col_from_a[sa:sb])   # v(Ra -> A)
-        a_out_peer = with_empty(row_to_b[sa:sb])   # v(A -> Rb)
-        a_in_peer = with_empty(col_from_b[sa:sb])  # v(Rb -> A)
-        a_out_o = with_empty(F[sa:sb, 0])
-        a_in_o = with_empty(F[0, sa:sb])
-        b_intra = with_empty(F[br, br])
-        b_out_own = with_empty(row_to_b[sb:])
-        b_in_own = with_empty(col_from_b[sb:])
-        b_out_peer = with_empty(row_to_a[sb:])
-        b_in_peer = with_empty(col_from_a[sb:])
-        b_out_o = with_empty(F[sb:, 0])
-        b_in_o = with_empty(F[0, sb:])
 
-        x_ab = np.zeros((na + 1, nb + 1))    # v(A_i -> B_j)
-        x_ba = np.zeros((na + 1, nb + 1))    # v(B_j -> A_i)
+        av = np.zeros((L.N_AV, na + 1))
+        av[L.AV.intra] = _with_empty(F[ar, ar])
+        av[L.AV.out_own] = _with_empty(row_to_a[sa:sb])    # v(A -> Ra)
+        av[L.AV.in_own] = _with_empty(col_from_a[sa:sb])   # v(Ra -> A)
+        av[L.AV.out_peer] = _with_empty(row_to_b[sa:sb])   # v(A -> Rb)
+        av[L.AV.in_peer] = _with_empty(col_from_b[sa:sb])  # v(Rb -> A)
+        av[L.AV.out_other] = _with_empty(F[sa:sb, 0])
+        av[L.AV.in_other] = _with_empty(F[0, sa:sb])
+        av[L.AV.load] = _with_empty(agg_a.loads[:na])
+        av[L.AV.mem] = _with_empty(agg_a.mems[:na])
+        av[L.AV.ovh] = _with_empty(agg_a.overheads[:na])
+        (av[L.AV.s_rm], av[L.AV.h_rm], av[L.AV.s_add_peer],
+         av[L.AV.h_add_peer]) = self._block_terms(agg_a, na, r_a, r_b)
+
+        bv = np.zeros((L.N_AV, nb + 1))
+        bv[L.AV.intra] = _with_empty(F[br, br])
+        bv[L.AV.out_own] = _with_empty(row_to_b[sb:])
+        bv[L.AV.in_own] = _with_empty(col_from_b[sb:])
+        bv[L.AV.out_peer] = _with_empty(row_to_a[sb:])
+        bv[L.AV.in_peer] = _with_empty(col_from_a[sb:])
+        bv[L.AV.out_other] = _with_empty(F[sb:, 0])
+        bv[L.AV.in_other] = _with_empty(F[0, sb:])
+        bv[L.AV.load] = _with_empty(agg_b.loads[:nb])
+        bv[L.AV.mem] = _with_empty(agg_b.mems[:nb])
+        bv[L.AV.ovh] = _with_empty(agg_b.overheads[:nb])
+        (bv[L.AV.s_rm], bv[L.AV.h_rm], bv[L.AV.s_add_peer],
+         bv[L.AV.h_add_peer]) = self._block_terms(agg_b, nb, r_b, r_a)
+
+        pm = np.zeros((L.N_PM, na + 1, nb + 1))
         if na and nb:
-            x_ab[1:, 1:] = F[sa:sb, sb:]
-            x_ba[1:, 1:] = F[sb:, sa:sb].T
-
-        f_ab = row_to_b[1] + row_to_b[sa:sb].sum()   # v(Ra -> Rb)
-        f_ba = row_to_a[2] + row_to_a[sb:].sum()
-        f_aa = row_to_a[1] + row_to_a[sa:sb].sum()
-        f_bb = row_to_b[2] + row_to_b[sb:].sum()
-        f_ao = F[1, 0] + F[sa:sb, 0].sum()
-        f_oa = F[0, 1] + F[0, sa:sb].sum()
-        f_bo = F[2, 0] + F[sb:, 0].sum()
-        f_ob = F[0, 2] + F[0, sb:].sum()
-
-        # --- flows after the exchange, per pair (broadcast na+1 x nb+1) --
-        # Endpoint classes after moving A a->b and B b->a:
-        #   rank a holds Sa (=Ra\A) and B;  rank b holds Sb (=Rb\B) and A.
-        sent_a = (x_ba + row(b_out_own - b_intra + b_out_o)
-                  + col(a_in_own - a_intra)
-                  + (f_ab - col(a_out_peer) - row(b_in_peer) + x_ab)
-                  + (f_ao - col(a_out_o)))
-        recv_a = (x_ab + row(b_in_own - b_intra + b_in_o)
-                  + col(a_out_own - a_intra)
-                  + (f_ba - row(b_out_peer) - col(a_in_peer) + x_ba)
-                  + (f_oa - col(a_in_o)))
-        on_a = (row(b_intra) + (row(b_out_peer) - x_ba)
-                + (row(b_in_peer) - x_ab)
-                + (f_aa - col(a_out_own + a_in_own - a_intra)))
-        sent_b = (x_ab + col(a_out_own - a_intra + a_out_o)
-                  + row(b_in_own - b_intra)
-                  + (f_ba - row(b_out_peer) - col(a_in_peer) + x_ba)
-                  + (f_bo - row(b_out_o)))
-        recv_b = (x_ba + col(a_in_own - a_intra + a_in_o)
-                  + row(b_out_own - b_intra)
-                  + (f_ab - col(a_out_peer) - row(b_in_peer) + x_ab)
-                  + (f_ob - row(b_in_o)))
-        on_b = (col(a_intra) + (col(a_out_peer) - x_ab)
-                + (col(a_in_peer) - x_ba)
-                + (f_bb - row(b_out_own + b_in_own - b_intra)))
-
-        # deltas vs the same F-derived "before" flows, applied to the
-        # incrementally-maintained bases — mirrors the scalar path's
-        # base-plus-dvol structure so both paths share any drift in vol.
-        base_sent_a = st.vol[r_a].sum() - st.vol[r_a, r_a]
-        base_recv_a = st.vol[:, r_a].sum() - st.vol[r_a, r_a]
-        base_sent_b = st.vol[r_b].sum() - st.vol[r_b, r_b]
-        base_recv_b = st.vol[:, r_b].sum() - st.vol[r_b, r_b]
-        off_a = np.maximum(base_sent_a + (sent_a - (f_ab + f_ao)),
-                           base_recv_a + (recv_a - (f_ba + f_oa)))
-        off_b = np.maximum(base_sent_b + (sent_b - (f_ba + f_bo)),
-                           base_recv_b + (recv_b - (f_ab + f_ob)))
-        on_a = st.vol[r_a, r_a] + (on_a - f_aa)
-        on_b = st.vol[r_b, r_b] + (on_b - f_bb)
-
-        # --- per-candidate scalar aggregates (cached; same numpy reductions
-        # as the scalar path -> bitwise-equal loads/mem/overhead) ----------
-        la = with_empty(agg_a.loads[:na])
-        lb = with_empty(agg_b.loads[:nb])
-        ma = with_empty(agg_a.mems[:na])
-        mb = with_empty(agg_b.mems[:nb])
-        oa = with_empty(agg_a.overheads[:na])
-        ob = with_empty(agg_b.overheads[:nb])
-        load_a = st.load[r_a] - col(la) + row(lb)
-        load_b = st.load[r_b] + col(la) - row(lb)
-
-        # --- homing / shared-memory transitions (Thm III.1) --------------
-        s_rm_a, h_rm_a, s_add_b, h_add_b = \
-            self._block_terms(agg_a, na, r_a, r_b)
-        s_rm_b, h_rm_b, s_add_a, h_add_a = \
-            self._block_terms(agg_b, nb, r_b, r_a)
-        cs_a = np.zeros((na + 1, nb + 1))
-        ch_a = np.zeros((na + 1, nb + 1))
-        cs_b = np.zeros((na + 1, nb + 1))
-        ch_b = np.zeros((na + 1, nb + 1))
+            pm[L.PM.x_ab, 1:, 1:] = F[sa:sb, sb:]       # v(A_i -> B_j)
+            pm[L.PM.x_ba, 1:, 1:] = F[sb:, sa:sb].T     # v(B_j -> A_i)
         for blk, lst_a in agg_a.blk_map.items():
             lst_b = agg_b.blk_map.get(blk)
             if not lst_b:
@@ -323,39 +424,51 @@ class PhaseEngine:
                     if j >= nb:
                         continue
                     if st.block_count[r_a, blk] == cnt_a:
-                        cs_a[i + 1, j + 1] += size
+                        pm[L.PM.cs_a, i + 1, j + 1] += size
                         if off_home_a:
-                            ch_a[i + 1, j + 1] += size
+                            pm[L.PM.ch_a, i + 1, j + 1] += size
                     if st.block_count[r_b, blk] == cnt_b:
-                        cs_b[i + 1, j + 1] += size
+                        pm[L.PM.cs_b, i + 1, j + 1] += size
                         if off_home_b:
-                            ch_b[i + 1, j + 1] += size
-        shared_a = st.shared_cache[r_a] - col(s_rm_a) + row(s_add_a) + cs_a
-        shared_b = st.shared_cache[r_b] - row(s_rm_b) + col(s_add_b) + cs_b
-        hom_a = st.hom_cache[r_a] - col(h_rm_a) + row(h_add_a) + ch_a
-        hom_b = st.hom_cache[r_b] - row(h_rm_b) + col(h_add_b) + ch_b
+                            pm[L.PM.ch_b, i + 1, j + 1] += size
 
-        # --- memory feasibility (eq. 9) -----------------------------------
-        mem_a = (ph.rank_mem_base[r_a] + st.mem_task[r_a] - col(ma) + row(mb)
-                 + shared_a + np.maximum(st.mem_overhead_max[r_a], row(ob)))
-        mem_b = (ph.rank_mem_base[r_b] + st.mem_task[r_b] + col(ma) - row(mb)
-                 + shared_b + np.maximum(st.mem_overhead_max[r_b], col(oa)))
-        if p.memory_constraint:
-            feas = ((mem_a <= ph.rank_mem_cap[r_a] + 1e-6)
-                    & (mem_b <= ph.rank_mem_cap[r_b] + 1e-6))
-        else:
-            feas = np.ones((na + 1, nb + 1), bool)
-
-        w_a = (p.alpha * load_a / ph.rank_speed[r_a] + p.beta * off_a
-               + p.gamma * on_a + p.delta * hom_a)
-        w_b = (p.alpha * load_b / ph.rank_speed[r_b] + p.beta * off_b
-               + p.gamma * on_b + p.delta * hom_b)
-        w_a = np.where(feas, w_a, INF)
-        w_b = np.where(feas, w_b, INF)
-
-        ia = np.fromiter((q[0] for q in pairs), np.int64, len(pairs))
-        ib = np.fromiter((q[1] for q in pairs), np.int64, len(pairs))
-        return w_a[ia, ib], w_b[ia, ib], feas[ia, ib]
+        sc = np.zeros(L.N_SC)
+        sc[L.SC.f_ab] = row_to_b[1] + row_to_b[sa:sb].sum()   # v(Ra -> Rb)
+        sc[L.SC.f_ba] = row_to_a[2] + row_to_a[sb:].sum()
+        sc[L.SC.f_aa] = row_to_a[1] + row_to_a[sa:sb].sum()
+        sc[L.SC.f_bb] = row_to_b[2] + row_to_b[sb:].sum()
+        sc[L.SC.f_ao] = F[1, 0] + F[sa:sb, 0].sum()
+        sc[L.SC.f_oa] = F[0, 1] + F[0, sa:sb].sum()
+        sc[L.SC.f_bo] = F[2, 0] + F[sb:, 0].sum()
+        sc[L.SC.f_ob] = F[0, 2] + F[0, sb:].sum()
+        # deltas are applied to the incrementally-maintained bases — mirrors
+        # the scalar path's base-plus-dvol structure so both paths share any
+        # drift in vol.
+        sc[L.SC.base_sent_a] = st.vol[r_a].sum() - st.vol[r_a, r_a]
+        sc[L.SC.base_recv_a] = st.vol[:, r_a].sum() - st.vol[r_a, r_a]
+        sc[L.SC.base_sent_b] = st.vol[r_b].sum() - st.vol[r_b, r_b]
+        sc[L.SC.base_recv_b] = st.vol[:, r_b].sum() - st.vol[r_b, r_b]
+        sc[L.SC.vol_aa] = st.vol[r_a, r_a]
+        sc[L.SC.vol_bb] = st.vol[r_b, r_b]
+        sc[L.SC.load_a] = st.load[r_a]
+        sc[L.SC.load_b] = st.load[r_b]
+        sc[L.SC.shared_a] = st.shared_cache[r_a]
+        sc[L.SC.shared_b] = st.shared_cache[r_b]
+        sc[L.SC.hom_a] = st.hom_cache[r_a]
+        sc[L.SC.hom_b] = st.hom_cache[r_b]
+        sc[L.SC.mem_base_a] = ph.rank_mem_base[r_a]
+        sc[L.SC.mem_task_a] = st.mem_task[r_a]
+        sc[L.SC.ovh_a] = st.mem_overhead_max[r_a]
+        sc[L.SC.mem_base_b] = ph.rank_mem_base[r_b]
+        sc[L.SC.mem_task_b] = st.mem_task[r_b]
+        sc[L.SC.ovh_b] = st.mem_overhead_max[r_b]
+        sc[L.SC.na] = float(na)
+        sc[L.SC.nb] = float(nb)
+        sc[L.SC.speed_a] = ph.rank_speed[r_a]
+        sc[L.SC.speed_b] = ph.rank_speed[r_b]
+        sc[L.SC.mem_cap_a] = ph.rank_mem_cap[r_a]
+        sc[L.SC.mem_cap_b] = ph.rank_mem_cap[r_b]
+        return av, bv, pm, sc
 
     def _block_terms(self, agg: ClusterAggregates, n: int, r_src: int,
                      r_dst: int):

@@ -88,28 +88,27 @@ class BestExchange:
     eval: ExchangeEval
 
 
-def find_best_exchange(state: CCMState, clusters_a: List[np.ndarray],
-                       clusters_b: List[np.ndarray], r_a: int, r_b: int,
-                       max_candidates: int = 12,
-                       shortlist: int = 32,
-                       engine=None) -> Optional[BestExchange]:
-    """Exact FindBestCCM: best give/swap among cluster pairs (incl. one-sided
-    gives via the empty cluster).  ``max_candidates`` bounds each side
-    (clusters come sorted by load) — the paper's quality/cost tunable.
+def shortlist_pairs(state: CCMState, clusters_a: List[np.ndarray],
+                    clusters_b: List[np.ndarray], r_a: int, r_b: int,
+                    max_candidates: int = 12, shortlist: int = 32,
+                    engine=None):
+    """Candidate enumeration + load-only shortlist, shared by
+    ``find_best_exchange`` and ccm_lb's batched lock events.
 
     Beyond-paper speedup: a vectorized load-only estimate shortlists the
     most promising ``shortlist`` pairs; only those get the exact CCM
     update-formula evaluation (alpha dominates realistic instances, so the
     shortlist rarely excludes the true best; the final choice is exact).
+    Depends only on the two ranks' own loads and cluster lists, so the
+    shortlist of a lock event is invariant under transfers between OTHER
+    (disjoint) rank pairs — the property batched lock events rest on.
 
-    ``engine``: a :class:`~repro.core.engine.PhaseEngine` scores every
-    shortlisted pair in one batched pass; ``None`` falls back to one
-    ``exchange_eval`` call per pair (reference path).
+    Returns ``(cand_a, cand_b, pairs, agg_a, agg_b)``; the aggregates are
+    None on the scalar path.
     """
     empty = np.zeros((0,), np.int64)
     cand_a = [empty] + clusters_a[:max_candidates]
     cand_b = [empty] + clusters_b[:max_candidates]
-    w_before = max(state.work(r_a), state.work(r_b))
     agg_a = agg_b = None
     if engine is not None:
         agg_a = engine.cluster_aggregates(r_a, clusters_a)
@@ -132,20 +131,49 @@ def find_best_exchange(state: CCMState, clusters_a: List[np.ndarray],
         score = np.maximum(after_a, after_b)
         order = np.argsort(score)[:shortlist]
         pairs = [pairs[i] for i in order]
+    return cand_a, cand_b, pairs, agg_a, agg_b
 
+
+def select_best(cand_a, cand_b, pairs, wa, wb, feas,
+                w_before: float) -> Optional[BestExchange]:
+    """Selection rule over batched scores — shared by the engine path of
+    ``find_best_exchange`` and ccm_lb's batched lock events, so deferred
+    scoring picks the exact same exchange."""
     best: Optional[BestExchange] = None
+    for k, (ia, ib) in enumerate(pairs):
+        if not feas[k]:
+            continue
+        ev = ExchangeEval(float(wa[k]), float(wb[k]), True)
+        diff = w_before - ev.max_after
+        if diff > 1e-12 and (best is None or diff > best.work_diff):
+            best = BestExchange(cand_a[ia], cand_b[ib], float(diff), ev)
+    return best
+
+
+def find_best_exchange(state: CCMState, clusters_a: List[np.ndarray],
+                       clusters_b: List[np.ndarray], r_a: int, r_b: int,
+                       max_candidates: int = 12,
+                       shortlist: int = 32,
+                       engine=None) -> Optional[BestExchange]:
+    """Exact FindBestCCM: best give/swap among cluster pairs (incl. one-sided
+    gives via the empty cluster).  ``max_candidates`` bounds each side
+    (clusters come sorted by load) — the paper's quality/cost tunable.
+
+    ``engine``: a :class:`~repro.core.engine.PhaseEngine` scores every
+    shortlisted pair in one batched pass; ``None`` falls back to one
+    ``exchange_eval`` call per pair (reference path).
+    """
+    cand_a, cand_b, pairs, agg_a, agg_b = shortlist_pairs(
+        state, clusters_a, clusters_b, r_a, r_b, max_candidates, shortlist,
+        engine)
+    w_before = max(state.work(r_a), state.work(r_b))
+
     if engine is not None:
         wa, wb, feas = engine.batch_exchange_eval(r_a, r_b, cand_a, cand_b,
                                                   pairs, agg_a, agg_b)
-        for k, (ia, ib) in enumerate(pairs):
-            if not feas[k]:
-                continue
-            ev = ExchangeEval(float(wa[k]), float(wb[k]), True)
-            diff = w_before - ev.max_after
-            if diff > 1e-12 and (best is None or diff > best.work_diff):
-                best = BestExchange(cand_a[ia], cand_b[ib], float(diff), ev)
-        return best
+        return select_best(cand_a, cand_b, pairs, wa, wb, feas, w_before)
 
+    best: Optional[BestExchange] = None
     for ia, ib in pairs:
         ca, cb = cand_a[ia], cand_b[ib]
         ev = exchange_eval(state, ca, cb, r_a, r_b)

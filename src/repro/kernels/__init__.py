@@ -2,3 +2,8 @@
 # kernel.py (pl.pallas_call + BlockSpec VMEM tiling), ops.py (jit'd wrapper)
 # and ref.py (pure-jnp oracle).  Validated with interpret=True on CPU; the
 # TPU is the TARGET (see DESIGN.md hardware-adaptation notes).
+# ccm_scorer deviates deliberately: its ref.py is pure NumPy and doubles as
+# the CCM evaluation engine's production backend, and the kernel is held
+# BITWISE-equal to it in interpret mode (not approximately) — see
+# ccm_scorer/kernel.py for the multiplication-free contract that makes
+# that possible.

@@ -1,0 +1,4 @@
+from repro.kernels.ccm_scorer.layout import (AV, N_AV, N_OUT, N_PM,  # noqa: F401
+                                             N_SC, OUT, PM, SC)
+from repro.kernels.ccm_scorer.ops import ccm_score_tiles, combine_work  # noqa: F401
+from repro.kernels.ccm_scorer.ref import score_tiles  # noqa: F401

@@ -1,0 +1,103 @@
+"""Packing, dispatch and the shared work combine for the CCM scorer tiles.
+
+Tile / mask layout
+------------------
+A *lock event* is one (rank a, rank b) exchange negotiation; scoring it
+means evaluating every candidate cluster pair ``(A_ia a->b, B_ib b->a)``
+with ``ia in 0..na``, ``ib in 0..nb`` (index 0 = the empty cluster, i.e.
+one-sided gives).  A *batched* lock event packs E such events — with
+pairwise-disjoint rank sets — into fixed-size device tiles:
+
+  av  (E, N_AV, A)     per-a-candidate feature planes (layout.AV rows)
+  bv  (E, N_AV, B)     per-b-candidate feature planes (same row meanings)
+  pm  (E, N_PM, A, B)  pairwise planes: counter-flow volumes x_ab/x_ba and
+                       the shared-block corrections cs/ch (layout.PM)
+  sc  (E, N_SC)        per-event scalars: current rank-to-rank flows,
+                       CCMState volume bases, load/mem/homing bases, the
+                       mask bounds na/nb, and the combine-only scalars
+                       speed/mem-cap (layout.SC)
+
+``A``/``B`` are fixed pad sizes >= max(na)+1 / max(nb)+1 over the batch
+(the engine rounds them up to a multiple of 8 for the kernel path; a real
+TPU deployment would pad B to the 128-lane boundary).  Candidate slots past
+``na``/``nb`` are the *masked tail*: feature planes are zero-padded, and
+the scorer forces tail outputs to 0 (flow/load/homing planes) or +inf
+(memory planes, so tail pairs can never appear feasible).  Events are
+independent grid steps — the flow decomposition is block-diagonal across
+the batch, assembled by ``PhaseEngine`` with one flat bincount.
+
+The scorer itself (ref.score_tiles / kernel.score_tiles_fwd) produces the
+ten *work components* per pair (layout.OUT): loads, off-/on-rank volumes,
+homing bytes and memory highs after the exchange.  It deliberately contains
+no multiplications — XLA's FMA contraction would re-round them and break
+the bitwise NumPy/Pallas parity contract (kernel.py) — so applying the CCM
+coefficients is a separate, backend-shared host step:
+
+  ``combine_work``: W = alpha*L/speed + beta*Voff + gamma*Von + delta*M_H,
+  feasibility from the memory planes vs the per-event caps (eq. 9), and
+  infeasible pairs forced to +inf — the exact expression the scalar
+  reference evaluates, applied to whole tiles at once.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.kernels.ccm_scorer import ref
+from repro.kernels.ccm_scorer.layout import (AV, N_AV, N_OUT, N_PM, N_SC,
+                                             OUT, PM, SC)
+
+__all__ = ["ccm_score_tiles", "combine_work", "AV", "PM", "SC", "OUT",
+           "N_AV", "N_PM", "N_SC", "N_OUT"]
+
+INF = float("inf")
+
+
+def ccm_score_tiles(av: np.ndarray, bv: np.ndarray, pm: np.ndarray,
+                    sc: np.ndarray, *, backend: str = "numpy",
+                    interpret: bool = True) -> np.ndarray:
+    """Dispatch packed tiles to the NumPy reference or the Pallas kernel.
+
+    Both return (E, N_OUT, A, B) float64 and agree bitwise when the kernel
+    runs in interpret mode (the compiled TPU path is f32 and approximate).
+    """
+    if backend == "numpy":
+        return ref.score_tiles(av, bv, pm, sc)
+    if backend == "pallas":
+        import jax  # deferred: the numpy path must not require jax
+
+        from repro.kernels.ccm_scorer.kernel import score_tiles_fwd
+        with jax.experimental.enable_x64():
+            out = score_tiles_fwd(av, bv, pm, sc, interpret=interpret)
+        return np.asarray(out)
+    raise ValueError(f"unknown ccm_scorer backend: {backend!r}")
+
+
+def combine_work(out: np.ndarray, sc: np.ndarray, params,
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Backend-shared affine combine: work components -> (w_a, w_b, feas).
+
+    Mirrors ``CCMState.work`` / the scalar ``exchange_eval`` tail exactly
+    (same expression tree, so the NumPy engine stays bitwise-compatible
+    with the pre-kernel implementation).
+    """
+    speed_a = sc[:, SC.speed_a, None, None]
+    speed_b = sc[:, SC.speed_b, None, None]
+    if params.memory_constraint:
+        feas = ((out[:, OUT.mem_a] <= sc[:, SC.mem_cap_a, None, None] + 1e-6)
+                & (out[:, OUT.mem_b] <= sc[:, SC.mem_cap_b, None, None]
+                   + 1e-6))
+    else:
+        feas = np.ones(out.shape[0:1] + out.shape[2:], bool)
+    w_a = (params.alpha * out[:, OUT.load_a] / speed_a
+           + params.beta * out[:, OUT.off_a]
+           + params.gamma * out[:, OUT.on_a]
+           + params.delta * out[:, OUT.hom_a])
+    w_b = (params.alpha * out[:, OUT.load_b] / speed_b
+           + params.beta * out[:, OUT.off_b]
+           + params.gamma * out[:, OUT.on_b]
+           + params.delta * out[:, OUT.hom_b])
+    w_a = np.where(feas, w_a, INF)
+    w_b = np.where(feas, w_b, INF)
+    return w_a, w_b, feas

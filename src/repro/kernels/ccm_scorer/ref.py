@@ -1,0 +1,133 @@
+"""Pure-NumPy reference for the CCM stage-2 scorer tiles.
+
+This IS the evaluation engine's ``backend="numpy"`` implementation as well
+as the oracle the Pallas kernel (kernel.py) is held bitwise-equal to: both
+compute the identical expression tree over the packed feature tiles (see
+ops.py for the layout), using only additions, subtractions, maxima and
+selects — the operations XLA cannot re-round — so interpret-mode kernel
+outputs and this function agree bit for bit.  Keep the expression structure
+in the two files in lockstep; tests/test_ccm_scorer.py enforces it.
+
+Every expression below mirrors the original per-event broadcast section of
+``PhaseEngine.batch_exchange_eval`` (repro/core/engine.py), re-rooted at the
+packed event axis: ``col(v) = v[..., :, None]`` broadcasts a per-a-candidate
+vector down the rows, ``row(v) = v[..., None, :]`` broadcasts a
+per-b-candidate vector along the columns, and scalars enter via
+``sc[:, i, None, None]``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels.ccm_scorer.layout import AV, N_OUT, OUT, PM, SC
+
+
+def score_tiles(av: np.ndarray, bv: np.ndarray, pm: np.ndarray,
+                sc: np.ndarray) -> np.ndarray:
+    """Score packed exchange tiles (NumPy reference path).
+
+    av: (E, N_AV, A) per-a-candidate features, bv: (E, N_AV, B),
+    pm: (E, N_PM, A, B) pairwise features, sc: (E, N_SC) scalars.
+    Returns (E, N_OUT, A, B); the tail beyond (na+1, nb+1) is masked to 0
+    (flow/load/homing planes) or +inf (memory planes).
+    """
+    e_n, _, a_n = av.shape
+    b_n = bv.shape[2]
+
+    def col(i):
+        return av[:, i, :, None]
+
+    def row(i):
+        return bv[:, i, None, :]
+
+    def colv(v):
+        return v[:, :, None]
+
+    def rowv(v):
+        return v[:, None, :]
+
+    def scal(i):
+        return sc[:, i, None, None]
+
+    x_ab, x_ba = pm[:, PM.x_ab], pm[:, PM.x_ba]
+    cs_a, ch_a = pm[:, PM.cs_a], pm[:, PM.ch_a]
+    cs_b, ch_b = pm[:, PM.cs_b], pm[:, PM.ch_b]
+
+    # --- flows after the exchange (same expression tree as the engine) ---
+    sent_a = (x_ba + rowv(bv[:, AV.out_own] - bv[:, AV.intra]
+                          + bv[:, AV.out_other])
+              + colv(av[:, AV.in_own] - av[:, AV.intra])
+              + (scal(SC.f_ab) - col(AV.out_peer) - row(AV.in_peer) + x_ab)
+              + (scal(SC.f_ao) - col(AV.out_other)))
+    recv_a = (x_ab + rowv(bv[:, AV.in_own] - bv[:, AV.intra]
+                          + bv[:, AV.in_other])
+              + colv(av[:, AV.out_own] - av[:, AV.intra])
+              + (scal(SC.f_ba) - row(AV.out_peer) - col(AV.in_peer) + x_ba)
+              + (scal(SC.f_oa) - col(AV.in_other)))
+    on_a = (row(AV.intra) + (row(AV.out_peer) - x_ba)
+            + (row(AV.in_peer) - x_ab)
+            + (scal(SC.f_aa) - colv(av[:, AV.out_own] + av[:, AV.in_own]
+                                    - av[:, AV.intra])))
+    sent_b = (x_ab + colv(av[:, AV.out_own] - av[:, AV.intra]
+                          + av[:, AV.out_other])
+              + rowv(bv[:, AV.in_own] - bv[:, AV.intra])
+              + (scal(SC.f_ba) - row(AV.out_peer) - col(AV.in_peer) + x_ba)
+              + (scal(SC.f_bo) - row(AV.out_other)))
+    recv_b = (x_ba + colv(av[:, AV.in_own] - av[:, AV.intra]
+                          + av[:, AV.in_other])
+              + rowv(bv[:, AV.out_own] - bv[:, AV.intra])
+              + (scal(SC.f_ab) - col(AV.out_peer) - row(AV.in_peer) + x_ab)
+              + (scal(SC.f_ob) - row(AV.in_other)))
+    on_b = (col(AV.intra) + (col(AV.out_peer) - x_ab)
+            + (col(AV.in_peer) - x_ba)
+            + (scal(SC.f_bb) - rowv(bv[:, AV.out_own] + bv[:, AV.in_own]
+                                    - bv[:, AV.intra])))
+
+    off_a = np.maximum(
+        scal(SC.base_sent_a) + (sent_a - (sc[:, SC.f_ab, None, None]
+                                          + sc[:, SC.f_ao, None, None])),
+        scal(SC.base_recv_a) + (recv_a - (sc[:, SC.f_ba, None, None]
+                                          + sc[:, SC.f_oa, None, None])))
+    off_b = np.maximum(
+        scal(SC.base_sent_b) + (sent_b - (sc[:, SC.f_ba, None, None]
+                                          + sc[:, SC.f_bo, None, None])),
+        scal(SC.base_recv_b) + (recv_b - (sc[:, SC.f_ab, None, None]
+                                          + sc[:, SC.f_ob, None, None])))
+    on_a = scal(SC.vol_aa) + (on_a - scal(SC.f_aa))
+    on_b = scal(SC.vol_bb) + (on_b - scal(SC.f_bb))
+
+    load_a = scal(SC.load_a) - col(AV.load) + row(AV.load)
+    load_b = scal(SC.load_b) + col(AV.load) - row(AV.load)
+
+    # --- homing / shared-memory transitions -----------------------------
+    shared_a = (scal(SC.shared_a) - col(AV.s_rm) + row(AV.s_add_peer) + cs_a)
+    shared_b = (scal(SC.shared_b) - row(AV.s_rm) + col(AV.s_add_peer) + cs_b)
+    hom_a = scal(SC.hom_a) - col(AV.h_rm) + row(AV.h_add_peer) + ch_a
+    hom_b = scal(SC.hom_b) - row(AV.h_rm) + col(AV.h_add_peer) + ch_b
+
+    # --- memory (eq. 9 inputs) ------------------------------------------
+    mem_a = (scal(SC.mem_base_a) + scal(SC.mem_task_a) - col(AV.mem)
+             + row(AV.mem) + shared_a
+             + np.maximum(scal(SC.ovh_a), row(AV.ovh)))
+    mem_b = (scal(SC.mem_base_b) + scal(SC.mem_task_b) + col(AV.mem)
+             - row(AV.mem) + shared_b
+             + np.maximum(scal(SC.ovh_b), col(AV.ovh)))
+
+    # --- masked tail -----------------------------------------------------
+    ia = np.arange(a_n, dtype=np.float64)[None, :, None]
+    ib = np.arange(b_n, dtype=np.float64)[None, None, :]
+    mask = (ia <= sc[:, SC.na, None, None]) & (ib <= sc[:, SC.nb, None, None])
+
+    out = np.empty((e_n, N_OUT, a_n, b_n), np.float64)
+    zero, inf = np.float64(0.0), np.float64(np.inf)
+    out[:, OUT.load_a] = np.where(mask, load_a, zero)
+    out[:, OUT.load_b] = np.where(mask, load_b, zero)
+    out[:, OUT.off_a] = np.where(mask, off_a, zero)
+    out[:, OUT.off_b] = np.where(mask, off_b, zero)
+    out[:, OUT.on_a] = np.where(mask, on_a, zero)
+    out[:, OUT.on_b] = np.where(mask, on_b, zero)
+    out[:, OUT.hom_a] = np.where(mask, hom_a, zero)
+    out[:, OUT.hom_b] = np.where(mask, hom_b, zero)
+    out[:, OUT.mem_a] = np.where(mask, mem_a, inf)
+    out[:, OUT.mem_b] = np.where(mask, mem_b, inf)
+    return out

@@ -1,0 +1,161 @@
+"""CCM scorer kernel parity: NumPy reference tiles vs the Pallas kernel
+(interpret mode) must agree BITWISE — on raw packed tiles, on engine
+scores through both backends, and on end-to-end CCM-LB assignments.  The
+contract and why it is achievable (multiplication-free kernel body + shared
+host combine) is documented in repro/kernels/ccm_scorer/kernel.py."""
+import numpy as np
+import pytest
+
+from repro.core import CCMParams, CCMState, ccm_lb, random_phase
+from repro.core.clusters import build_clusters
+from repro.core.engine import ExchangeEvent, PhaseEngine
+from repro.core.problem import Phase, initial_assignment
+from repro.kernels.ccm_scorer import N_AV, N_PM, N_SC, SC, ops, ref
+
+PARAMS = CCMParams(alpha=1.0, beta=1e-9, gamma=1e-11, delta=1e-9,
+                   memory_constraint=True)
+
+
+def _random_tiles(seed, e_n=4, a_n=16, b_n=16):
+    rng = np.random.default_rng(seed)
+    av = rng.uniform(-2, 2, (e_n, N_AV, a_n))
+    bv = rng.uniform(-2, 2, (e_n, N_AV, b_n))
+    pm = rng.uniform(-2, 2, (e_n, N_PM, a_n, b_n))
+    sc = rng.uniform(0.1, 3.0, (e_n, N_SC))
+    sc[:, SC.na] = rng.integers(0, a_n, e_n)
+    sc[:, SC.nb] = rng.integers(0, b_n, e_n)
+    return av, bv, pm, sc
+
+
+# -------------------------------------------------------------- raw tiles
+@pytest.mark.parametrize("seed", range(5))
+def test_kernel_bitwise_matches_ref_on_random_tiles(seed):
+    av, bv, pm, sc = _random_tiles(seed)
+    got = ops.ccm_score_tiles(av, bv, pm, sc, backend="pallas",
+                              interpret=True)
+    want = ref.score_tiles(av, bv, pm, sc)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_kernel_masked_tail():
+    """Slots past (na, nb) must be exactly 0 (flow planes) / +inf (memory
+    planes) so padded pairs can never look feasible."""
+    av, bv, pm, sc = _random_tiles(7, e_n=2, a_n=8, b_n=8)
+    sc[:, SC.na] = [2, 0]
+    sc[:, SC.nb] = [3, 0]
+    for backend in ("numpy", "pallas"):
+        out = ops.ccm_score_tiles(av, bv, pm, sc, backend=backend)
+        for e, (na, nb) in enumerate(((2, 3), (0, 0))):
+            tail = np.ones((8, 8), bool)
+            tail[:na + 1, :nb + 1] = False
+            assert (out[e, :8][:, tail] == 0.0).all()
+            assert np.isinf(out[e, 8:][:, tail]).all()
+            assert np.isfinite(out[e, :, :na + 1, :nb + 1]).all()
+
+
+# ------------------------------------------------------- engine backends
+def _events_for(state, clusters, rank_pairs, n_cand=6):
+    empty = np.zeros(0, np.int64)
+    events = []
+    for r_a, r_b in rank_pairs:
+        cand_a = [empty] + clusters[r_a][:n_cand]
+        cand_b = [empty] + clusters[r_b][:n_cand]
+        pairs = [(ia, ib) for ia in range(len(cand_a))
+                 for ib in range(len(cand_b)) if ia or ib]
+        events.append(ExchangeEvent(r_a, r_b, cand_a, cand_b, pairs))
+    return events
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_engine_backends_bitwise_equal_scores(seed):
+    phase = random_phase(seed, num_ranks=8, num_tasks=120, num_blocks=14,
+                        num_comms=260, mem_cap=4e8 if seed % 2 else 1e12)
+    params = CCMParams(alpha=1.0, beta=1e-9, gamma=1e-11, delta=1e-9,
+                       memory_constraint=bool(seed % 3))
+    state = CCMState.build(
+        phase, initial_assignment(phase, "home" if seed % 2 else
+                                  "round_robin"), params)
+    clusters = build_clusters(state)
+    events = _events_for(state, clusters, ((0, 1), (2, 3), (4, 5), (6, 7)))
+    res_np = PhaseEngine(state, backend="numpy") \
+        .batch_exchange_eval_multi(events)
+    res_pl = PhaseEngine(state, backend="pallas") \
+        .batch_exchange_eval_multi(events)
+    for (wa, wb, fe), (wa2, wb2, fe2) in zip(res_np, res_pl):
+        np.testing.assert_array_equal(wa, wa2)
+        np.testing.assert_array_equal(wb, wb2)
+        np.testing.assert_array_equal(fe, fe2)
+
+
+def test_engine_backends_empty_candidates():
+    """na = nb = 0 (both sides only offer the empty cluster) must survive
+    both backends: no pairs to score, no crash, empty outputs."""
+    phase = random_phase(3, num_ranks=4, num_tasks=40, num_blocks=6,
+                        num_comms=80, mem_cap=1e12)
+    state = CCMState.build(phase, initial_assignment(phase, "home"), PARAMS)
+    empty = np.zeros(0, np.int64)
+    events = [ExchangeEvent(0, 1, [empty], [empty], [])]
+    for backend in ("numpy", "pallas"):
+        [(wa, wb, fe)] = PhaseEngine(state, backend=backend) \
+            .batch_exchange_eval_multi(events)
+        assert wa.shape == wb.shape == fe.shape == (0,)
+
+
+def test_engine_backends_single_task_phase():
+    """One task, one candidate, one-sided give — the smallest real tile."""
+    phase = Phase(
+        task_load=np.array([2.0]), task_mem=np.array([8.0]),
+        task_overhead=np.array([1.0]), task_block=np.array([0]),
+        block_size=np.array([16.0]), block_home=np.array([0]),
+        comm_src=np.array([0]), comm_dst=np.array([0]),
+        comm_vol=np.array([3.0]),
+        rank_mem_base=np.zeros(2), rank_mem_cap=np.full(2, 1e9))
+    state = CCMState.build(phase, np.array([0]), PARAMS)
+    clusters = build_clusters(state)
+    empty = np.zeros(0, np.int64)
+    cand_a = [empty] + clusters[0]
+    events = [ExchangeEvent(0, 1, cand_a, [empty], [(1, 0)])]
+    outs = {}
+    for backend in ("numpy", "pallas"):
+        [(wa, wb, fe)] = PhaseEngine(state, backend=backend) \
+            .batch_exchange_eval_multi(events)
+        outs[backend] = (wa, wb, fe)
+        assert fe[0]
+    np.testing.assert_array_equal(outs["numpy"][0], outs["pallas"][0])
+    np.testing.assert_array_equal(outs["numpy"][1], outs["pallas"][1])
+    # giving the only task away moves its load and block to rank 1
+    from repro.core import exchange_eval
+    ev = exchange_eval(state, clusters[0][0], [], 0, 1)
+    np.testing.assert_allclose(outs["numpy"][0][0], ev.work_a_after,
+                               rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(outs["numpy"][1][0], ev.work_b_after,
+                               rtol=1e-9, atol=1e-12)
+
+
+# ------------------------------------------------------------ end to end
+@pytest.mark.parametrize("batch", [1, 4])
+def test_ccmlb_pallas_backend_identical_assignments(batch):
+    """Acceptance: Pallas (interpret) and NumPy engine backends produce
+    bitwise-identical CCM-LB assignments (small phase — interpret mode
+    launches one pallas_call per flush)."""
+    phase = random_phase(11, num_ranks=6, num_tasks=90, num_blocks=12,
+                        num_comms=200, mem_cap=5e8)
+    params = CCMParams(delta=1e-9)
+    a0 = initial_assignment(phase)
+    ref_run = ccm_lb(phase, a0, params, n_iter=2, seed=1, backend="numpy",
+                     batch_lock_events=batch)
+    got = ccm_lb(phase, a0, params, n_iter=2, seed=1, backend="pallas",
+                 batch_lock_events=batch)
+    np.testing.assert_array_equal(got.assignment, ref_run.assignment)
+    assert got.max_work == ref_run.max_work
+    assert got.transfers == ref_run.transfers
+
+
+def test_unknown_backend_rejected():
+    phase = random_phase(0, num_ranks=3, num_tasks=12, num_blocks=2,
+                        num_comms=10, mem_cap=1e12)
+    state = CCMState.build(phase, initial_assignment(phase, "home"), PARAMS)
+    with pytest.raises(ValueError):
+        PhaseEngine(state, backend="tpu")
+    with pytest.raises(ValueError):
+        ops.ccm_score_tiles(*_random_tiles(0, e_n=1), backend="cuda")

@@ -57,6 +57,32 @@ def test_structure_change_rejected(tmp_path):
         restore(tmp_path, 1, bad)
 
 
+def test_latest_step_waits_for_interrupted_async_save(tmp_path, monkeypatch):
+    """Regression: an async save still in flight when its manager is
+    abandoned (the crash-restart path) must be visible to a FRESH reader —
+    ``latest_step`` has to join the registered writer thread instead of
+    returning None and silently replaying from step 0."""
+    import time
+
+    import repro.checkpoint.checkpoint as ckpt
+
+    orig_save = ckpt.save
+
+    def slow_save(*args, **kwargs):
+        time.sleep(0.5)  # guarantee the reader races ahead of the rename
+        return orig_save(*args, **kwargs)
+
+    monkeypatch.setattr(ckpt, "save", slow_save)
+    mgr = CheckpointManager(tmp_path, async_write=True)
+    mgr.save(3, _tree())
+    # simulate the crashed run: mgr is never wait()ed or used again
+    assert latest_step(tmp_path) == 3
+    fresh = CheckpointManager(tmp_path, async_write=True)
+    assert fresh.latest() == 3
+    restored, step = fresh.restore(_tree())
+    assert step == 3
+
+
 def test_restart_reproduces_uninterrupted_run(tmp_path):
     """Deterministic data + atomic checkpoints => restarted == straight run."""
     cfg = configs.get_smoke_config("tinyllama-1.1b")

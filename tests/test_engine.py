@@ -219,6 +219,98 @@ def test_ccmlb_engine_matches_scalar_end_to_end(seed):
     assert got.imbalance == ref.imbalance
 
 
+# ------------------------------------------------- batched lock events
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("batch", [2, 4, 16])
+def test_ccmlb_batched_lock_events_match_sequential(seed, batch):
+    """Deferred disjoint-pair scoring must reproduce the one-pair-at-a-time
+    trajectory exactly on seeded imbalanced phases: same assignments, same
+    transfer counts, same per-iteration traces."""
+    phase = _phase(seed, ranks=12, tasks=240, blocks=30, comms=500,
+                   mem_cap=5e8)
+    params = CCMParams(delta=1e-9)
+    a0 = initial_assignment(phase, "home")  # imbalanced start
+    ref = ccm_lb(phase, a0, params, n_iter=3, seed=seed,
+                 batch_lock_events=1)
+    got = ccm_lb(phase, a0, params, n_iter=3, seed=seed,
+                 batch_lock_events=batch)
+    np.testing.assert_array_equal(got.assignment, ref.assignment)
+    assert got.transfers == ref.transfers
+    assert got.lock_conflicts == ref.lock_conflicts
+    assert got.max_work == ref.max_work
+    assert got.total_work == ref.total_work
+    assert got.imbalance == ref.imbalance
+
+
+def test_ccmlb_batched_matches_scalar_reference():
+    """Transitivity check straight to the seed's scalar path."""
+    phase = _phase(9, ranks=10, tasks=200, blocks=24, comms=420, mem_cap=6e8)
+    params = CCMParams(delta=1e-9)
+    a0 = initial_assignment(phase)
+    ref = ccm_lb(phase, a0, params, n_iter=3, seed=2, use_engine=False)
+    got = ccm_lb(phase, a0, params, n_iter=3, seed=2, batch_lock_events=8)
+    np.testing.assert_array_equal(got.assignment, ref.assignment)
+    assert got.transfers == ref.transfers
+    assert got.max_work == ref.max_work
+
+
+def test_batch_exchange_eval_multi_matches_single_events():
+    """Scoring E disjoint events jointly (block-diagonal flow, one scorer
+    call) must be bitwise-equal to scoring each event alone."""
+    phase = _phase(5, ranks=8, tasks=160, blocks=16, comms=320, mem_cap=1e12)
+    state = CCMState.build(phase, initial_assignment(phase, "round_robin"),
+                           PARAMS)
+    engine = PhaseEngine(state)
+    clusters = build_clusters(state)
+    empty = np.zeros(0, np.int64)
+    from repro.core.engine import ExchangeEvent
+    events = []
+    for r_a, r_b in ((0, 3), (1, 6), (2, 7)):
+        cand_a = [empty] + clusters[r_a][:5]
+        cand_b = [empty] + clusters[r_b][:5]
+        pairs = [(ia, ib) for ia in range(len(cand_a))
+                 for ib in range(len(cand_b)) if ia or ib]
+        events.append(ExchangeEvent(r_a, r_b, cand_a, cand_b, pairs))
+    joint = engine.batch_exchange_eval_multi(events)
+    for e, (wa, wb, fe) in zip(events, joint):
+        wa1, wb1, fe1 = engine.batch_exchange_eval(
+            e.r_a, e.r_b, e.cand_a, e.cand_b, e.pairs)
+        np.testing.assert_array_equal(wa, wa1)
+        np.testing.assert_array_equal(wb, wb1)
+        np.testing.assert_array_equal(fe, fe1)
+
+
+def test_batch_exchange_eval_multi_rejects_overlapping_events():
+    phase = _phase(6, ranks=6, tasks=80, blocks=10, comms=160, mem_cap=1e12)
+    state = CCMState.build(phase, initial_assignment(phase, "home"), PARAMS)
+    engine = PhaseEngine(state)
+    clusters = build_clusters(state)
+    empty = np.zeros(0, np.int64)
+    from repro.core.engine import ExchangeEvent
+    mk = lambda ra, rb: ExchangeEvent(
+        ra, rb, [empty] + clusters[ra][:3], [empty] + clusters[rb][:3],
+        [(1, 0)])
+    with pytest.raises(ValueError, match="disjoint"):
+        engine.batch_exchange_eval_multi([mk(0, 1), mk(1, 2)])
+    # the failed call must roll back its label buffers: a subsequent valid
+    # evaluation still matches a fresh engine bitwise
+    [(wa, wb, fe)] = engine.batch_exchange_eval_multi([mk(3, 4)])
+    [(wa2, wb2, fe2)] = PhaseEngine(state).batch_exchange_eval_multi(
+        [mk(3, 4)])
+    np.testing.assert_array_equal(wa, wa2)
+    np.testing.assert_array_equal(wb, wb2)
+    np.testing.assert_array_equal(fe, fe2)
+
+
+def test_ccmlb_batched_requires_engine():
+    phase = _phase(0)
+    a0 = initial_assignment(phase)
+    with pytest.raises(ValueError):
+        ccm_lb(phase, a0, PARAMS, use_engine=False, batch_lock_events=4)
+    with pytest.raises(ValueError):
+        ccm_lb(phase, a0, PARAMS, batch_lock_events=0)
+
+
 def test_ccmlb_engine_parity_commfree_degenerate():
     """beta=gamma=delta=0, no blocks/comms (the seqpack mapping) — heavy
     score ties, so selection order must match exactly."""

@@ -1,0 +1,100 @@
+"""Property-based scorer parity (hypothesis): random phases -> the scalar
+``exchange_eval`` reference, the NumPy engine and the Pallas (interpret)
+kernel must agree — engine-vs-kernel BITWISE on scores and feasibility,
+engine-vs-scalar to the documented 1e-9 (summation-order ulps), and
+CCM-LB end-to-end assignments identical across backends and lock-event
+batch sizes.  Runs under the deterministic "ci" profile (conftest.py);
+skipped when hypothesis (requirements-dev.txt) is absent."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import (CCMParams, CCMState, ccm_lb, exchange_eval,  # noqa: E402
+                        random_phase)
+from repro.core.clusters import build_clusters  # noqa: E402
+from repro.core.engine import ExchangeEvent, PhaseEngine  # noqa: E402
+from repro.core.problem import initial_assignment  # noqa: E402
+
+
+def _state(seed, ranks, tasks, mem_cap, mem_constraint):
+    phase = random_phase(seed, num_ranks=ranks, num_tasks=tasks,
+                         num_blocks=max(2, tasks // 8),
+                         num_comms=2 * tasks, mem_cap=mem_cap)
+    params = CCMParams(alpha=1.0, beta=1e-9, gamma=1e-11, delta=1e-9,
+                       memory_constraint=mem_constraint)
+    mode = "home" if seed % 2 else "round_robin"
+    return CCMState.build(phase, initial_assignment(phase, mode), params)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), ranks=st.integers(4, 9),
+       tasks=st.integers(8, 90), tight_mem=st.booleans(),
+       mem_constraint=st.booleans(), data=st.data())
+def test_scorer_paths_agree_on_random_phases(seed, ranks, tasks, tight_mem,
+                                             mem_constraint, data):
+    """ref (scalar exchange_eval), NumPy engine and Pallas (interpret)
+    agree on every candidate pair of a random disjoint event batch —
+    including events whose ranks hold no clusters (empty candidates) and
+    tiny phases where ranks own a single task."""
+    state = _state(seed, ranks, tasks, 3e8 if tight_mem else 1e12,
+                   mem_constraint)
+    clusters = build_clusters(state)
+    perm = data.draw(st.permutations(list(range(ranks))))
+    n_events = data.draw(st.integers(1, ranks // 2))
+    empty = np.zeros(0, np.int64)
+    events = []
+    for k in range(n_events):
+        r_a, r_b = perm[2 * k], perm[2 * k + 1]
+        cand_a = [empty] + clusters[r_a][:5]
+        cand_b = [empty] + clusters[r_b][:5]
+        pairs = [(ia, ib) for ia in range(len(cand_a))
+                 for ib in range(len(cand_b)) if ia or ib]
+        events.append(ExchangeEvent(r_a, r_b, cand_a, cand_b, pairs))
+
+    res_np = PhaseEngine(state, backend="numpy") \
+        .batch_exchange_eval_multi(events)
+    res_pl = PhaseEngine(state, backend="pallas") \
+        .batch_exchange_eval_multi(events)
+    for e, (wa, wb, fe), (wa2, wb2, fe2) in zip(events, res_np, res_pl):
+        # engine backends: bitwise
+        np.testing.assert_array_equal(wa, wa2)
+        np.testing.assert_array_equal(wb, wb2)
+        np.testing.assert_array_equal(fe, fe2)
+        # engine vs scalar reference: documented 1e-9, feasibility exact
+        for k, (ia, ib) in enumerate(e.pairs):
+            ev = exchange_eval(state, e.cand_a[ia], e.cand_b[ib],
+                               e.r_a, e.r_b)
+            assert bool(fe[k]) == ev.feasible, (e.r_a, e.r_b, ia, ib)
+            if ev.feasible:
+                np.testing.assert_allclose(wa[k], ev.work_a_after,
+                                           rtol=1e-9, atol=1e-12)
+                np.testing.assert_allclose(wb[k], ev.work_b_after,
+                                           rtol=1e-9, atol=1e-12)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 1000), batch=st.integers(2, 6))
+def test_ccmlb_end_to_end_assignment_parity(seed, batch):
+    """Full CCM-LB on random phases: scalar path, NumPy engine (batched and
+    unbatched) and Pallas backend all land on the same assignment."""
+    phase = random_phase(seed, num_ranks=6, num_tasks=72, num_blocks=10,
+                         num_comms=150, mem_cap=5e8)
+    params = CCMParams(delta=1e-9)
+    a0 = initial_assignment(phase)
+    runs = {
+        "scalar": ccm_lb(phase, a0, params, n_iter=2, seed=seed,
+                         use_engine=False),
+        "engine": ccm_lb(phase, a0, params, n_iter=2, seed=seed),
+        "batched": ccm_lb(phase, a0, params, n_iter=2, seed=seed,
+                          batch_lock_events=batch),
+        "pallas": ccm_lb(phase, a0, params, n_iter=2, seed=seed,
+                         backend="pallas", batch_lock_events=batch),
+    }
+    base = runs["scalar"]
+    for name, run in runs.items():
+        np.testing.assert_array_equal(run.assignment, base.assignment,
+                                      err_msg=name)
+        assert run.transfers == base.transfers, name
+        assert run.max_work == base.max_work, name

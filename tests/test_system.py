@@ -28,19 +28,28 @@ def test_training_reduces_loss():
 
 
 def test_moe_training_reduces_loss_and_reports_stats():
+    # config pinned by an lr/warmup/steps sweep: the default
+    # make_train_step warmup (100 steps) never ramped the lr within a
+    # 20-step run, leaving the loss flat.  With warmup_steps=3 the measured
+    # first5-last5 drops were lr 3e-3/20 steps: 0.06, 3e-3/30: 0.13,
+    # 1e-2/30: 0.28 — the last gives a deterministic ~3x margin over the
+    # 0.1 threshold asserted below.
     cfg = configs.get_smoke_config("qwen3-moe-30b-a3b")
     from repro.launch.steps import make_train_step
     from repro.optim import adamw_init
+    n_steps = 30
     model = build_model(cfg, MESH)
     params, _ = split_lp_tree(model.init(jax.random.key(0)))
     opt = adamw_init(params)
-    step = jax.jit(make_train_step(model, lr=1e-3))
+    step = jax.jit(make_train_step(model, lr=1e-2, warmup_steps=3,
+                                   total_steps=n_steps))
     losses = []
-    for i in range(20):
+    for i in range(n_steps):
         batch = make_batch(cfg, 64, 4, i)
         params, opt, m = step(params, opt, batch)
         losses.append(float(m["loss"]))
-    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1, (
+        np.mean(losses[:5]), np.mean(losses[-5:]))
     counts = np.asarray(m["expert_counts"])
     assert counts.shape[-1] == cfg.num_experts
     # every token routed top_k times
