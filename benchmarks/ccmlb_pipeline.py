@@ -1,0 +1,149 @@
+"""Multi-phase pipeline amortization (paper §III-B iterative executions).
+
+An iterative application re-invokes the balancer over a sequence of phases
+whose loads drift but whose adjacency topology is stable.  This benchmark
+measures what the :func:`repro.core.pipeline.ccm_lb_pipeline` orchestrator
+buys over replanning every phase from scratch:
+
+  * **cold**  — every phase starts from the initial-assignment rule and
+    builds its own PhaseCSR (``warm_start=False``, ``reuse_csr=False``);
+  * **warm**  — phase ``k+1`` starts from phase ``k``'s balanced output and
+    shares the CSR bundle (the pipeline default).
+
+Per config it records per-phase seconds/transfers/imbalance and the
+aggregate speedup + transfer reduction into ``BENCH_ccmlb_pipeline.json``.
+Quality is tracked as each phase's final imbalance: a warm start repairs
+drift with a fraction of the transfers but may settle a few hundredths of
+imbalance away from the cold replan's endpoint (fewer positive stage-1
+diffs from a near-balanced start) — the JSON records both trajectories and
+the smoke assertion bounds the gap absolutely.
+
+Standalone:  PYTHONPATH=src python benchmarks/ccmlb_pipeline.py [--quick]
+(--quick runs a small-rank smoke config for CI; also wired into
+benchmarks/run.py as ``ccmlb_pipeline``.)
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.core import CCMParams, ccm_lb_pipeline, random_phase
+
+JSON_PATH = os.environ.get("BENCH_CCMLB_PIPELINE_JSON",
+                           "BENCH_ccmlb_pipeline.json")
+N_PHASES = 6
+DRIFT = 0.08        # per-phase lognormal load drift (sigma)
+
+
+def make_phases(seed: int, ranks: int, n_phases: int = N_PHASES):
+    """A drifting phase sequence sharing one topology: task loads random-
+    walk by ``DRIFT`` per phase; comm volumes and block structure stay."""
+    base = random_phase(seed, num_ranks=ranks, num_tasks=25 * ranks,
+                        num_blocks=3 * ranks, num_comms=50 * ranks,
+                        mem_cap=1e12)
+    rng = np.random.default_rng(seed + 1)
+    phases = [base]
+    for _ in range(n_phases - 1):
+        prev = phases[-1]
+        phases.append(dataclasses.replace(
+            prev,
+            task_load=prev.task_load * rng.lognormal(0.0, DRIFT,
+                                                     prev.num_tasks)))
+    return phases
+
+
+def _run_config(report, records, ranks: int, n_iter: int,
+                batch_lock_events: int):
+    phases = make_phases(1, ranks)
+    params = CCMParams(delta=1e-9)
+    lb = dict(n_iter=n_iter, k_rounds=2, fanout=4, seed=0,
+              batch_lock_events=batch_lock_events)
+
+    t0 = time.perf_counter()
+    cold = ccm_lb_pipeline(phases, params, warm_start=False, reuse_csr=False,
+                           **lb)
+    cold_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    warm = ccm_lb_pipeline(phases, params, **lb)
+    warm_s = time.perf_counter() - t0
+
+    speedup = cold_s / warm_s if warm_s > 0 else float("inf")
+    cold_tr, warm_tr = cold.total_transfers, warm.total_transfers
+    report(f"ccmlb_pipeline_ranks_{ranks}_cold", cold_s * 1e6,
+           f"{len(phases)} phases, transfers={cold_tr}")
+    report(f"ccmlb_pipeline_ranks_{ranks}_warm", warm_s * 1e6,
+           f"transfers={warm_tr} speedup={speedup:.2f}x "
+           f"csr_reused={sum(r.csr_reused for r in warm.runs)}")
+    records.append({
+        "ranks": ranks,
+        "tasks": phases[0].num_tasks,
+        "comms": phases[0].num_comms,
+        "n_phases": len(phases),
+        "n_iter": n_iter,
+        "batch_lock_events": batch_lock_events,
+        "load_drift_sigma": DRIFT,
+        "cold_seconds": cold_s,
+        "warm_seconds": warm_s,
+        "warm_speedup": speedup,
+        "cold_transfers": int(cold_tr),
+        "warm_transfers": int(warm_tr),
+        "transfer_reduction": (1.0 - warm_tr / cold_tr) if cold_tr else 0.0,
+        "csr_reused_phases": int(sum(r.csr_reused for r in warm.runs)),
+        "warm_started_phases": int(sum(r.warm_started for r in warm.runs)),
+        "cold_imbalance_after": [float(r.result.imbalance[-1])
+                                 for r in cold.runs],
+        "warm_imbalance_after": [float(r.result.imbalance[-1])
+                                 for r in warm.runs],
+        "cold_phase_seconds": [r.seconds for r in cold.runs],
+        "warm_phase_seconds": [r.seconds for r in warm.runs],
+    })
+
+
+def run(report, quick: bool = False):
+    records = []
+    configs = ((16,) if quick else (64, 256))
+    for ranks in configs:
+        _run_config(report, records, ranks, n_iter=2 if quick else 4,
+                    batch_lock_events=8)
+    payload = {
+        "benchmark": "ccmlb_pipeline",
+        "quick": quick,
+        "numpy": np.__version__,
+        "n_phases": N_PHASES,
+        "results": records,
+        "warm_speedup_largest_config": records[-1]["warm_speedup"],
+        "transfer_reduction_largest_config":
+            records[-1]["transfer_reduction"],
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    report("ccmlb_pipeline_json", 0.0, f"written to {JSON_PATH}")
+
+
+def main():
+    quick = "--quick" in sys.argv
+    print("name,us_per_call,derived")
+
+    def report(name, us, derived=""):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    run(report, quick=quick)
+    # CI smoke assertion: the warm path must not lose quality vs cold
+    with open(JSON_PATH) as f:
+        payload = json.load(f)
+    for rec in payload["results"]:
+        cold_i = rec["cold_imbalance_after"]
+        warm_i = rec["warm_imbalance_after"]
+        assert all(w <= c + 0.1 for w, c in zip(warm_i, cold_i)), \
+            (cold_i, warm_i)
+        assert rec["warm_transfers"] <= rec["cold_transfers"], rec
+    print("ccmlb_pipeline_ok,0.0,quality+transfer checks passed", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,15 +1,18 @@
 """§IV scalability: CCM-LB solve time + quality vs rank count / fanout /
 rounds (the paper reports <0.7 s at 14 ranks; we sweep up to 256).
 
-Each rank-count config runs three times — scalar reference path
-(``use_engine=False``), vectorized engine (``use_engine=True``), and the
-engine with batched lock events (``batch_lock_events=BATCH_EVENTS``: up to
-that many disjoint rank pairs scored per flush through one block-diagonal
-flow assembly) — and the results land in ``BENCH_ccmlb_scaling.json`` so
-the perf trajectory (and the engine/batched speedups) is tracked from PR to
-PR.  Every run of a config is checked for assignment identity (recorded as
-``identical_assignments`` and asserted here; see repro/core/engine.py for
-the contract), so the speedup columns are apples to apples.
+Each rank-count config runs four times — scalar reference path
+(``use_engine=False``), the engine with full per-event state re-gathering
+(``incremental=False``, the rebuild reference), the incremental engine
+(``use_engine=True``, the default), and the incremental engine with batched
+lock events (``batch_lock_events=BATCH_EVENTS``: up to that many disjoint
+rank pairs scored per flush through one block-diagonal flow assembly) —
+and the results land in ``BENCH_ccmlb_scaling.json`` so the perf trajectory
+(engine/batched speedups AND the incremental-vs-rebuild delta) is tracked
+from PR to PR.  Every run of a config is checked for assignment identity
+(recorded as ``identical_assignments`` and asserted here; see
+repro/core/engine.py for the contract), so the speedup columns are apples
+to apples.
 """
 from __future__ import annotations
 
@@ -32,6 +35,7 @@ def run(report):
     records = []
     speedup_largest = None
     batched_speedup_largest = None
+    incremental_delta_largest = None
     for ranks in (16, 64, 256):
         phase = random_phase(1, num_ranks=ranks, num_tasks=25 * ranks,
                              num_blocks=3 * ranks, num_comms=50 * ranks,
@@ -42,6 +46,7 @@ def run(report):
         times = {}
         assignments = {}
         configs = (("scalar", dict(use_engine=False)),
+                   ("rebuild", dict(use_engine=True, incremental=False)),
                    ("engine", dict(use_engine=True)),
                    ("batched", dict(use_engine=True,
                                     batch_lock_events=BATCH_EVENTS)))
@@ -62,6 +67,7 @@ def run(report):
                 "comms": phase.num_comms,
                 "n_iter": N_ITER,
                 "engine": kw.get("use_engine", True),
+                "incremental": kw.get("incremental", True),
                 "batch_lock_events": kw.get("batch_lock_events", 1),
                 "seconds": dt,
                 "seconds_per_iteration": dt / N_ITER,
@@ -71,20 +77,23 @@ def run(report):
             })
         # ratio goes in the derived column only — the us_per_call column
         # stays a call time so the CSV is uniformly parseable
-        identical = bool(
-            np.array_equal(assignments["engine"], assignments["scalar"])
-            and np.array_equal(assignments["batched"], assignments["scalar"]))
+        identical = bool(all(
+            np.array_equal(assignments[t], assignments["scalar"])
+            for t in ("rebuild", "engine", "batched")))
         assert identical, \
             f"engine/batched/scalar trajectories diverged at {ranks} ranks"
         speedup = times["scalar"] / times["engine"]
         batched_speedup = times["scalar"] / times["batched"]
+        incr_delta = times["rebuild"] / times["engine"]
         report(f"ccmlb_ranks_{ranks}_speedup", 0.0,
                f"engine {speedup:.2f}x, batched({BATCH_EVENTS}) "
-               f"{batched_speedup:.2f}x over scalar, identical assignments")
-        for k in range(-3, 0):
+               f"{batched_speedup:.2f}x over scalar, incremental "
+               f"{incr_delta:.2f}x over rebuild, identical assignments")
+        for k in range(-4, 0):
             records[k]["identical_assignments"] = identical
         speedup_largest = speedup
         batched_speedup_largest = batched_speedup
+        incremental_delta_largest = incr_delta
 
     # fanout/round sweep at 64 ranks (engine path — the default)
     phase = random_phase(2, num_ranks=64, num_tasks=1600, num_blocks=192,
@@ -111,6 +120,7 @@ def run(report):
         "results": records,
         "engine_speedup_largest_config": speedup_largest,
         "batched_speedup_largest_config": batched_speedup_largest,
+        "incremental_over_rebuild_largest_config": incremental_delta_largest,
         "batch_lock_events": BATCH_EVENTS,
     }
     with open(JSON_PATH, "w") as f:

@@ -10,9 +10,9 @@ from __future__ import annotations
 import sys
 import traceback
 
-from benchmarks import (assembly_scaling, ccmlb_scaling, costmodel_eval,
-                        delta_sweep, expert_placement, kernels_bench,
-                        milp_vs_ccmlb, roofline)
+from benchmarks import (assembly_scaling, ccmlb_pipeline, ccmlb_scaling,
+                        costmodel_eval, delta_sweep, expert_placement,
+                        kernels_bench, milp_vs_ccmlb, roofline)
 
 MODULES = [
     ("fig4a_milp_vs_ccmlb", milp_vs_ccmlb),
@@ -20,6 +20,7 @@ MODULES = [
     ("fig5_assembly_scaling", assembly_scaling),
     ("costmodel", costmodel_eval),
     ("ccmlb_scaling", ccmlb_scaling),
+    ("ccmlb_pipeline", ccmlb_pipeline),
     ("kernels", kernels_bench),
     ("expert_placement", expert_placement),
     ("roofline", roofline),

@@ -1,5 +1,8 @@
 from repro.balance.expert_placement import (apply_expert_permutation,  # noqa: F401
                                             phase_from_router_stats,
-                                            plan_expert_placement)
-from repro.balance.pipeline_stages import plan_pipeline_stages  # noqa: F401
-from repro.balance.seqpack import rebalance_sequences  # noqa: F401
+                                            plan_expert_placement,
+                                            plan_expert_placement_sequence)
+from repro.balance.pipeline_stages import (plan_pipeline_stages,  # noqa: F401
+                                           plan_pipeline_stages_schedule)
+from repro.balance.seqpack import (rebalance_sequences,  # noqa: F401
+                                   rebalance_sequences_stream)

@@ -20,12 +20,12 @@ permutation-only projection of the plan.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import CCMParams, CCMState, ccm_lb
+from repro.core import CCMParams, ccm_lb, ccm_lb_pipeline
 from repro.core.problem import Phase
 
 
@@ -114,22 +114,24 @@ def plan_expert_placement(counts: np.ndarray, cfg: ModelConfig,
     kernel / deferred disjoint-pair batching, both trajectory-exact)."""
     l_n, e_n = counts.shape
     assert e_n % n_devices == 0
-    e_loc = e_n // n_devices
     phase = phase_from_router_stats(counts, cfg, n_devices,
                                     hbm_budget_bytes=hbm_budget_bytes,
                                     rank_speed=rank_speed)
     ccm = params or CCMParams(alpha=1.0, beta=2e-11, gamma=1e-13, delta=1e-12)
     a0 = phase.block_home.copy()  # tasks start at their expert's device
-    st0 = CCMState.build(phase, a0, ccm)
     res = ccm_lb(phase, a0, ccm, n_iter=n_iter, fanout=fanout, seed=seed,
                  use_engine=use_engine, backend=backend,
                  batch_lock_events=batch_lock_events)
+    return _project_plan(counts, res, n_devices)
 
-    # project the plan onto per-layer slot permutations: on each layer,
-    # device dev gets the experts assigned to it (top e_loc by load if the
-    # plan overflows a device; spill handling keeps it a permutation).
+
+def _project_plan(counts: np.ndarray, res, n_devices: int) -> PlacementPlan:
+    """Project a CCM-LB result onto per-layer slot permutations: on each
+    layer, device dev gets the experts assigned to it (top e_loc by load if
+    the plan overflows a device; spill handling keeps it a permutation)."""
+    l_n, e_n = counts.shape
+    e_loc = e_n // n_devices
     perms = np.zeros((l_n, e_n), np.int64)
-    replicated = 0
     assign = res.assignment.reshape(l_n, e_n)
     for l in range(l_n):
         buckets: List[List[int]] = [[] for _ in range(n_devices)]
@@ -148,19 +150,56 @@ def plan_expert_placement(counts: np.ndarray, cfg: ModelConfig,
         perm = [e for devb in buckets for e in devb]
         perms[l] = np.array(perm, np.int64)
     # replication desired by the plan: blocks present on >1 rank
-    replicated = int((res.state.block_count > 0).sum(axis=0).max(initial=0) > 1)
     replicated = int(((res.state.block_count > 0).sum(axis=0) > 1).sum())
 
     return PlacementPlan(
         assignment=res.assignment,
         permutations=perms,
-        imbalance_before=st0.imbalance(),
+        imbalance_before=float(res.imbalance[0]),
         imbalance_after=res.state.imbalance(),
         replicated_blocks=replicated,
-        max_work_before=st0.max_work(),
+        max_work_before=float(res.max_work[0]),
         max_work_after=res.state.max_work(),
         lb_result=res,
     )
+
+
+def plan_expert_placement_sequence(
+        counts_seq: Sequence[np.ndarray], cfg: ModelConfig, n_devices: int, *,
+        hbm_budget_bytes: float, params: Optional[CCMParams] = None,
+        rank_speed: Optional[np.ndarray] = None, n_iter: int = 4,
+        fanout: int = 4, seed: int = 0, warm_start: bool = True,
+        use_engine: bool = True, backend: str = "numpy",
+        batch_lock_events: int = 1) -> List[PlacementPlan]:
+    """Plan placements for a SEQUENCE of router-stat windows (paper §III-B
+    iterative executions): each window's phase shares the (layer, expert)
+    task/block grid, so phase ``k+1`` warm-starts from phase ``k``'s
+    placement via :func:`repro.core.pipeline.ccm_lb_pipeline`.  On slowly
+    drifting routing distributions the balancer then only repairs the
+    drift — a fraction of the transfers (and wall-clock) of replanning each
+    window from scratch (``warm_start=False``, the cold reference).
+
+    Comm edges are re-derived per window (they follow the routing flows),
+    so only the warm start amortizes here — CSR reuse kicks in when
+    consecutive windows produce identical sparsified flow graphs.
+    """
+    counts_seq = [np.asarray(c, np.float64) for c in counts_seq]
+    if not counts_seq:
+        return []
+    l_n, e_n = counts_seq[0].shape
+    assert e_n % n_devices == 0
+    phases = [phase_from_router_stats(c, cfg, n_devices,
+                                      hbm_budget_bytes=hbm_budget_bytes,
+                                      rank_speed=rank_speed)
+              for c in counts_seq]
+    ccm = params or CCMParams(alpha=1.0, beta=2e-11, gamma=1e-13, delta=1e-12)
+    pipe = ccm_lb_pipeline(phases, ccm, warm_start=warm_start,
+                           a0=phases[0].block_home.copy(), seed=seed,
+                           n_iter=n_iter, fanout=fanout,
+                           use_engine=use_engine, backend=backend,
+                           batch_lock_events=batch_lock_events)
+    return [_project_plan(c, run.result, n_devices)
+            for c, run in zip(counts_seq, pipe.runs)]
 
 
 def apply_expert_permutation(moe_params: Dict, perm: np.ndarray) -> Dict:

@@ -13,13 +13,13 @@ DP algorithm.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 import numpy as np
 
 from repro.configs.base import (BLOCK_ATTN, BLOCK_LOCAL, BLOCK_MOE, BLOCK_REC,
                                 BLOCK_RWKV, ModelConfig)
-from repro.core import CCMParams, CCMState, ccm_lb
+from repro.core import CCMParams, ccm_lb, ccm_lb_pipeline
 from repro.core.problem import Phase
 
 
@@ -61,19 +61,16 @@ class StagePlan:
     contiguous: bool
 
 
-def plan_pipeline_stages(cfg: ModelConfig, n_stages: int, *,
-                         tokens_per_microbatch: int = 4096,
-                         hbm_budget_bytes: float = 16e9,
-                         seed: int = 0,
-                         use_engine: bool = True,
-                         backend: str = "numpy",
-                         batch_lock_events: int = 1) -> StagePlan:
+def _stage_phase(cfg: ModelConfig, n_stages: int, tokens: int,
+                 hbm_budget_bytes: float) -> Phase:
+    """Layers-as-tasks phase for one microbatch size.  The chain topology
+    (comm endpoints, no blocks) is independent of ``tokens``, so phases for
+    different microbatch sizes share one PhaseCSR (pipeline amortization)."""
     kinds = cfg.layer_kinds()
     l_n = len(kinds)
-    loads = np.array([layer_flops(cfg, k, tokens_per_microbatch)
-                      for k in kinds]) / 197e12
-    act_bytes = float(tokens_per_microbatch * cfg.d_model * 2)
-    phase = Phase(
+    loads = np.array([layer_flops(cfg, k, tokens) for k in kinds]) / 197e12
+    act_bytes = float(tokens * cfg.d_model * 2)
+    return Phase(
         task_load=loads,
         task_mem=np.array([layer_param_bytes(cfg, k) for k in kinds]),
         task_overhead=np.zeros(l_n),
@@ -86,20 +83,24 @@ def plan_pipeline_stages(cfg: ModelConfig, n_stages: int, *,
         rank_mem_base=np.zeros(n_stages),
         rank_mem_cap=np.full(n_stages, hbm_budget_bytes),
     )
-    # initial: contiguous equal-count split
-    a0 = np.minimum((np.arange(l_n) * n_stages) // l_n, n_stages - 1)
+
+
+def _stage_params(phase: Phase) -> CCMParams:
     # beta chosen so one extra stage crossing costs ~ one layer's time:
     # beta * act_bytes ~ median layer time
-    beta = float(np.median(loads) / act_bytes)
-    params = CCMParams(alpha=1.0, beta=beta, gamma=0.0, delta=0.0,
-                       memory_constraint=True)
-    res = ccm_lb(phase, a0, params, n_iter=4, fanout=min(4, n_stages - 1),
-                 seed=seed, use_engine=use_engine, backend=backend,
-                 batch_lock_events=batch_lock_events)
+    beta = float(np.median(phase.task_load) / phase.comm_vol[0]) \
+        if phase.num_comms else 0.0
+    return CCMParams(alpha=1.0, beta=beta, gamma=0.0, delta=0.0,
+                     memory_constraint=True)
+
+
+def _stage_plan(phase: Phase, res, n_stages: int) -> StagePlan:
     assign = res.assignment
+    loads = phase.task_load
     stage_flops = np.bincount(assign, weights=loads, minlength=n_stages)
     crossings = assign[phase.comm_src] != assign[phase.comm_dst]
-    contiguous = bool(np.all(np.diff(assign) >= 0)) and crossings.sum() == n_stages - 1
+    contiguous = (bool(np.all(np.diff(assign) >= 0))
+                  and crossings.sum() == n_stages - 1)
     mu = stage_flops.mean()
     return StagePlan(
         assignment=assign,
@@ -108,3 +109,51 @@ def plan_pipeline_stages(cfg: ModelConfig, n_stages: int, *,
         cut_bytes=float(phase.comm_vol[crossings].sum()),
         contiguous=contiguous,
     )
+
+
+def plan_pipeline_stages(cfg: ModelConfig, n_stages: int, *,
+                         tokens_per_microbatch: int = 4096,
+                         hbm_budget_bytes: float = 16e9,
+                         seed: int = 0,
+                         use_engine: bool = True,
+                         backend: str = "numpy",
+                         batch_lock_events: int = 1) -> StagePlan:
+    phase = _stage_phase(cfg, n_stages, tokens_per_microbatch,
+                         hbm_budget_bytes)
+    l_n = phase.num_tasks
+    # initial: contiguous equal-count split
+    a0 = np.minimum((np.arange(l_n) * n_stages) // l_n, n_stages - 1)
+    res = ccm_lb(phase, a0, _stage_params(phase), n_iter=4,
+                 fanout=min(4, n_stages - 1), seed=seed,
+                 use_engine=use_engine, backend=backend,
+                 batch_lock_events=batch_lock_events)
+    return _stage_plan(phase, res, n_stages)
+
+
+def plan_pipeline_stages_schedule(
+        cfg: ModelConfig, n_stages: int,
+        tokens_schedule: Sequence[int], *,
+        hbm_budget_bytes: float = 16e9, seed: int = 0,
+        warm_start: bool = True, use_engine: bool = True,
+        backend: str = "numpy",
+        batch_lock_events: int = 1) -> List[StagePlan]:
+    """Re-plan the stage split as the microbatch size changes (sequence-
+    length curriculum, serving traffic shifts): one CCM phase per entry of
+    ``tokens_schedule``, run through :func:`ccm_lb_pipeline` so step ``k+1``
+    starts from step ``k``'s split and — the chain topology being
+    token-independent — every step after the first reuses the PhaseCSR.
+    Work-model coefficients are re-derived per step (beta tracks the
+    activation size)."""
+    if not tokens_schedule:
+        return []
+    phases = [_stage_phase(cfg, n_stages, int(t), hbm_budget_bytes)
+              for t in tokens_schedule]
+    l_n = phases[0].num_tasks
+    a0 = np.minimum((np.arange(l_n) * n_stages) // l_n, n_stages - 1)
+    pipe = ccm_lb_pipeline(phases, [_stage_params(p) for p in phases],
+                           warm_start=warm_start, a0=a0, seed=seed,
+                           n_iter=4, fanout=min(4, n_stages - 1),
+                           use_engine=use_engine, backend=backend,
+                           batch_lock_events=batch_lock_events)
+    return [_stage_plan(phase, run.result, n_stages)
+            for phase, run in zip(phases, pipe.runs)]

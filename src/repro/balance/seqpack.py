@@ -11,11 +11,11 @@ partitioning — exactly the paper's model with beta=gamma=delta=0.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import List, Optional, Sequence
 
 import numpy as np
 
-from repro.core import CCMParams, CCMState, ccm_lb
+from repro.core import CCMParams, ccm_lb, ccm_lb_pipeline
 from repro.core.problem import Phase
 
 
@@ -28,17 +28,11 @@ class SeqPackResult:
     imbalance_after: float
 
 
-def rebalance_sequences(costs: np.ndarray, n_ranks: int, *,
-                        rank_speed: Optional[np.ndarray] = None,
-                        act_bytes: Optional[np.ndarray] = None,
-                        mem_cap: float = np.inf, seed: int = 0,
-                        n_iter: int = 3,
-                        use_engine: bool = True,
-                        backend: str = "numpy",
-                        batch_lock_events: int = 1) -> SeqPackResult:
-    """costs: (n_seqs,) predicted step-time contribution per sequence."""
+def _seq_phase(costs: np.ndarray, n_ranks: int,
+               rank_speed: Optional[np.ndarray],
+               act_bytes: Optional[np.ndarray], mem_cap: float) -> Phase:
     k = costs.shape[0]
-    phase = Phase(
+    return Phase(
         task_load=costs,
         task_mem=act_bytes if act_bytes is not None else np.zeros(k),
         task_overhead=np.zeros(k),
@@ -52,17 +46,64 @@ def rebalance_sequences(costs: np.ndarray, n_ranks: int, *,
         rank_mem_cap=np.full(n_ranks, mem_cap),
         rank_speed=rank_speed,
     )
+
+
+def _seq_result(res) -> SeqPackResult:
+    return SeqPackResult(
+        assignment=res.assignment,
+        makespan_before=float(res.max_work[0]),
+        makespan_after=res.state.max_work(),
+        imbalance_before=float(res.imbalance[0]),
+        imbalance_after=res.state.imbalance(),
+    )
+
+
+def rebalance_sequences(costs: np.ndarray, n_ranks: int, *,
+                        rank_speed: Optional[np.ndarray] = None,
+                        act_bytes: Optional[np.ndarray] = None,
+                        mem_cap: float = np.inf, seed: int = 0,
+                        n_iter: int = 3,
+                        use_engine: bool = True,
+                        backend: str = "numpy",
+                        batch_lock_events: int = 1) -> SeqPackResult:
+    """costs: (n_seqs,) predicted step-time contribution per sequence."""
+    k = costs.shape[0]
+    phase = _seq_phase(costs, n_ranks, rank_speed, act_bytes, mem_cap)
     a0 = (np.arange(k) % n_ranks).astype(np.int64)
     params = CCMParams(alpha=1.0, beta=0.0, gamma=0.0, delta=0.0,
                        memory_constraint=np.isfinite(mem_cap))
-    st0 = CCMState.build(phase, a0, params)
     res = ccm_lb(phase, a0, params, n_iter=n_iter, fanout=4, seed=seed,
                  use_engine=use_engine, backend=backend,
                  batch_lock_events=batch_lock_events)
-    return SeqPackResult(
-        assignment=res.assignment,
-        makespan_before=st0.max_work(),
-        makespan_after=res.state.max_work(),
-        imbalance_before=st0.imbalance(),
-        imbalance_after=res.state.imbalance(),
-    )
+    return _seq_result(res)
+
+
+def rebalance_sequences_stream(
+        cost_batches: Sequence[np.ndarray], n_ranks: int, *,
+        rank_speed: Optional[np.ndarray] = None,
+        mem_cap: float = np.inf, seed: int = 0, n_iter: int = 3,
+        warm_start: bool = True, use_engine: bool = True,
+        backend: str = "numpy",
+        batch_lock_events: int = 1) -> List[SeqPackResult]:
+    """Rebalance a STREAM of DP batches (one phase per step): slot ``i`` of
+    batch ``k+1`` warm-starts on the rank slot ``i`` of batch ``k`` landed
+    on — under steady length distributions the previous map is already
+    near-balanced, so each step only repairs the drift.  Equal-sized
+    batches also share the (trivial, comm-free) PhaseCSR.  Runs through
+    :func:`repro.core.pipeline.ccm_lb_pipeline`; ``warm_start=False`` is
+    the per-batch-from-scratch cold reference.
+    """
+    cost_batches = [np.asarray(c, np.float64) for c in cost_batches]
+    if not cost_batches:
+        return []
+    phases = [_seq_phase(c, n_ranks, rank_speed, None, mem_cap)
+              for c in cost_batches]
+    params = CCMParams(alpha=1.0, beta=0.0, gamma=0.0, delta=0.0,
+                       memory_constraint=np.isfinite(mem_cap))
+    a0 = (np.arange(cost_batches[0].shape[0]) % n_ranks).astype(np.int64)
+    pipe = ccm_lb_pipeline(phases, params, warm_start=warm_start, a0=a0,
+                           initial_mode="round_robin", seed=seed,
+                           n_iter=n_iter, fanout=4, use_engine=use_engine,
+                           backend=backend,
+                           batch_lock_events=batch_lock_events)
+    return [_seq_result(run.result) for run in pipe.runs]

@@ -21,12 +21,15 @@ two agree; keep them in sync when touching the model.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+import weakref
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.csr import PhaseCSR
 from repro.core.problem import CCMParams, Phase
+
+TransferListener = Callable[[np.ndarray, int, int], None]
 
 INF = float("inf")
 
@@ -47,8 +50,13 @@ class CCMState:
 
     # ------------------------------------------------------------------ build
     @staticmethod
-    def build(phase: Phase, assignment: np.ndarray,
-              params: CCMParams) -> "CCMState":
+    def build(phase: Phase, assignment: np.ndarray, params: CCMParams,
+              csr: Optional[PhaseCSR] = None) -> "CCMState":
+        """``csr``: a prebuilt :class:`PhaseCSR` for this phase's topology
+        (task->edge / block->task adjacency).  Multi-phase pipelines pass the
+        previous phase's bundle when the topology is unchanged, amortizing
+        the build (see repro/core/pipeline.py); the content is identical to
+        a fresh build, so results cannot differ."""
         i_n = phase.num_ranks
         assignment = np.asarray(assignment, np.int64).copy()
         load = np.bincount(assignment, weights=phase.task_load, minlength=i_n)
@@ -70,21 +78,44 @@ class CCMState:
                 mem_overhead_max[r] = phase.task_overhead[sel].max()
         st = CCMState(phase, params, assignment, load, vol, block_count,
                       mem_task, mem_overhead_max)
-        st._build_caches()
+        st._build_caches(csr)
         return st
 
-    def _build_caches(self):
+    def _build_caches(self, csr: Optional[PhaseCSR] = None):
         """CSR phase view + per-rank homing/shared caches (exchange_eval hot
         path: O(all edges + all blocks) per call -> O(touched edges +
         blocks)).  The CSR bundle is phase-static and shared with the
         vectorized engine."""
         ph = self.phase
-        self.csr = PhaseCSR.from_phase(ph)
+        self.csr = csr if csr is not None else PhaseCSR.from_phase(ph)
+        # transfer listeners: every mutation (apply_transfer/swap) is
+        # reported AFTER the state is consistent, so long-lived observers
+        # (PhaseEngine's incremental rank segments) can update in place
+        # instead of re-deriving from the assignment.  Entries are
+        # zero-arg resolvers returning the callback or None once its owner
+        # was garbage-collected (see add_transfer_listener).
+        self._transfer_listeners: List[Callable[
+            [], Optional[TransferListener]]] = []
         present = self.block_count > 0                     # (I, N)
         off_home = present.copy()
         off_home[ph.block_home, np.arange(ph.num_blocks)] = False
         self.hom_cache = (off_home * ph.block_size[None, :]).sum(1)
         self.shared_cache = (present * ph.block_size[None, :]).sum(1)
+
+    def add_transfer_listener(self, cb: TransferListener) -> None:
+        """Register ``cb(tasks, r_from, r_to)`` to run after every
+        :meth:`apply_transfer` (tasks is the moved id array, state already
+        updated).
+
+        Bound methods are held WEAKLY so a discarded observer (e.g. a
+        throwaway ``PhaseEngine`` on a long-lived state) is detached by
+        garbage collection instead of being pinned forever and spliced on
+        every transfer; plain functions/lambdas are held strongly (a weak
+        ref to an anonymous lambda would die immediately)."""
+        if hasattr(cb, "__self__"):
+            self._transfer_listeners.append(weakref.WeakMethod(cb))
+        else:
+            self._transfer_listeners.append(lambda _cb=cb: _cb)
 
     def _touched_edges(self, tasks: np.ndarray) -> np.ndarray:
         """Unique ids of comm edges incident to ``tasks`` (CSR gather)."""
@@ -190,6 +221,17 @@ class CCMState:
             sel = self.assignment == r
             self.mem_overhead_max[r] = (
                 ph.task_overhead[sel].max() if sel.any() else 0.0)
+        if self._transfer_listeners:
+            dead = False
+            for entry in self._transfer_listeners:
+                cb = entry()
+                if cb is None:
+                    dead = True
+                else:
+                    cb(tasks, r_from, r_to)
+            if dead:    # prune collected observers
+                self._transfer_listeners = [
+                    e for e in self._transfer_listeners if e() is not None]
 
     def swap(self, tasks_a: Sequence[int], r_a: int, tasks_b: Sequence[int],
              r_b: int):

@@ -22,6 +22,18 @@ that guarantee — stage-2 scores may differ by summation-order ulps, so a
 sub-ulp near-tie between two candidate exchanges could in principle
 diverge the paths).
 
+Incremental engine state: the engine is a long-lived object whose per-rank
+member-task segments are updated in place by a transfer listener on the
+``CCMState`` — every mutation this module performs (direct transfers,
+grant-chain handoffs, batched deferred flushes) goes through
+``state.swap``/``state.apply_transfer`` and therefore through that hook;
+the per-transfer cluster rebuilds pass ``rank_tasks=engine.rank_tasks`` so
+``build_clusters(only_ranks=...)`` touches only the two ranks' tasks and
+their incident edges.  The served segments are bitwise what an assignment
+scan returns (parity guarantee: tests/test_incremental.py asserts segments
+and end-to-end trajectories against ``incremental=False``, the full
+re-gather reference that remains available for A/B benchmarking).
+
 ``backend`` selects the engine's stage-4 tile scorer ("numpy" or the
 Pallas ``ccm_scorer`` kernel, bitwise-equal in interpret mode).
 
@@ -34,8 +46,13 @@ shortlist or clusters of a disjoint pair (c, d) — see
 ``PhaseEngine.batch_exchange_eval_multi`` — and the event sequence itself
 is independent of scoring outcomes (turn order is fixed by the stage-3
 work lists and the lock protocol).  The batch is flushed the moment a turn
-touches a rank with a deferred event, before any grant-chain handoff, and
-at stage end, so the sequential order of state mutations is preserved.
+touches a rank with a deferred event, on a full batch, and at stage end,
+so the sequential order of state mutations is preserved.  Grant-chain
+handoffs ride the same deferred machinery as single-event batches: each
+chain transfer on (cur, p) is appended to the pending batch (joining
+already-deferred disjoint events) and the shared rank p forces a flush
+before the next chain element scores — the same disjointness argument, the
+same sequential mutation order.
 The guarantee carries the same sub-ulp caveat as the engine-vs-scalar
 contract: a disjoint (a, b) swap relabels entries of vol rows/columns of
 third ranks without changing their true sums, so the ``st.vol[r].sum()``
@@ -85,13 +102,19 @@ def ccm_lb(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
            seed: int = 0, max_candidates: int = 12,
            max_clusters_per_rank: Optional[int] = None,
            use_engine: bool = True, backend: str = "numpy",
-           batch_lock_events: int = 1) -> CCMLBResult:
+           batch_lock_events: int = 1, incremental: bool = True,
+           csr=None) -> CCMLBResult:
+    """``incremental`` keeps the engine's per-rank segments current via the
+    transfer hook (default; ``False`` re-gathers per event — the rebuild
+    reference).  ``csr`` is an optional prebuilt ``PhaseCSR`` for this
+    phase's topology (multi-phase pipelines amortize it)."""
     if batch_lock_events < 1:
         raise ValueError("batch_lock_events must be >= 1")
     if batch_lock_events > 1 and not use_engine:
         raise ValueError("batch_lock_events > 1 requires use_engine=True")
-    state = CCMState.build(phase, assignment, params)
-    engine = PhaseEngine(state, backend=backend) if use_engine else None
+    state = CCMState.build(phase, assignment, params, csr=csr)
+    engine = (PhaseEngine(state, backend=backend, incremental=incremental)
+              if use_engine else None)
     trace_max = [state.max_work()]
     trace_tot = [state.total_work()]
     trace_imb = [state.imbalance()]
@@ -156,6 +179,17 @@ def ccm_lb(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
                        engine_used=engine is not None)
 
 
+def _rebuild_local(state, clusters, engine, max_clusters_per_rank, r, p):
+    """Post-transfer cluster rebuild for the two touched ranks, fed from the
+    engine's incremental segments when available."""
+    rt = (engine.rank_tasks
+          if engine is not None and engine.incremental else None)
+    local = build_clusters(state, max_clusters_per_rank=max_clusters_per_rank,
+                           only_ranks=[r, p], rank_tasks=rt)
+    clusters[r] = local[r]
+    clusters[p] = local[p]
+
+
 def _stage2(phase, state, clusters, work_lists, engine, max_candidates,
             max_clusters_per_rank) -> Tuple[int, int]:
     """One-event-at-a-time lock/transfer loop (the reference event order)."""
@@ -199,11 +233,8 @@ def _stage2(phase, state, clusters, work_lists, engine, max_candidates,
         if best is not None:
             transfers += 1
             # cluster membership changed on r and p: rebuild locally
-            local = build_clusters(
-                state, max_clusters_per_rank=max_clusters_per_rank,
-                only_ranks=[r, p])
-            clusters[r] = local[r]
-            clusters[p] = local[p]
+            _rebuild_local(state, clusters, engine, max_clusters_per_rank,
+                           r, p)
         nxt = locks.release(r, p)
         if nxt is not None:
             transfers += _handle_grant(
@@ -222,7 +253,7 @@ class _PendingEvent:
     p: int
     cand_a: list
     cand_b: list
-    pairs: list
+    pairs: np.ndarray       # (P, 2) shortlist rows
     agg_a: object
     agg_b: object
     w_before: float
@@ -237,9 +268,14 @@ def _stage2_batched(phase, state, clusters, work_lists, engine,
     turn, so request/grant outcomes cannot differ); only the try_transfer
     evaluation of up to ``batch`` pairwise-disjoint events is deferred and
     executed at flush points in original event order.  Flushes happen
-    before any turn that touches a deferred rank, before any grant-chain
-    handoff, on a full batch, and at stage end — exactly the moments the
-    sequential loop would have interleaved state mutations.
+    before any turn that touches a deferred rank, on a full batch, and at
+    stage end — exactly the moments the sequential loop would have
+    interleaved state mutations.  Grant-chain handoffs go through
+    :func:`_handle_grant_deferred`: each chain event joins the pending
+    batch as a single-event entry (it may share a flush with
+    already-deferred DISJOINT events; the chain's shared rank ``p`` forces
+    a flush before the next chain element scores), so chains ride the same
+    deferred-scoring machinery with the same trajectory argument.
     """
     transfers = conflicts = 0
     locks = LockManager(phase.num_ranks)
@@ -260,13 +296,23 @@ def _stage2_batched(phase, state, clusters, work_lists, engine,
             if best is not None:
                 state.swap(best.tasks_ab, e.r, best.tasks_ba, e.p)
                 transfers += 1
-                local = build_clusters(
-                    state, max_clusters_per_rank=max_clusters_per_rank,
-                    only_ranks=[e.r, e.p])
-                clusters[e.r] = local[e.r]
-                clusters[e.p] = local[e.p]
+                _rebuild_local(state, clusters, engine,
+                               max_clusters_per_rank, e.r, e.p)
         pending.clear()
         busy.clear()
+
+    def defer(r, p):
+        # capture candidates/shortlist now (invariant under the other
+        # deferred events' transfers — disjoint ranks), score at flush
+        cand_a, cand_b, pairs, agg_a, agg_b = shortlist_pairs(
+            state, clusters[r], clusters[p], r, p, max_candidates,
+            engine=engine)
+        w_before = max(state.work(r), state.work(p))
+        pending.append(_PendingEvent(r, p, cand_a, cand_b, pairs,
+                                     agg_a, agg_b, w_before))
+        busy.update((r, p))
+        if len(pending) >= batch:
+            flush()
 
     spins = 0
     max_spins = 50 * phase.num_ranks + 1000
@@ -291,32 +337,50 @@ def _stage2_batched(phase, state, clusters, work_lists, engine,
             work_lists[r].append((diff, p))
             active.append(r)
             if nxt is not None:
-                flush()     # chain transfers must see deferred swaps
-                transfers += _handle_grant(
-                    nxt, p, state, clusters, locks, work_lists, active,
-                    max_candidates, max_clusters_per_rank, engine)
+                _handle_grant_deferred(nxt, p, state, locks, work_lists,
+                                       active, busy, defer, flush)
             continue
-        # executable: capture candidates/shortlist now (invariant under the
-        # other deferred events' transfers — disjoint ranks), score later
-        cand_a, cand_b, pairs, agg_a, agg_b = shortlist_pairs(
-            state, clusters[r], clusters[p], r, p, max_candidates,
-            engine=engine)
-        w_before = max(state.work(r), state.work(p))
-        pending.append(_PendingEvent(r, p, cand_a, cand_b, pairs,
-                                     agg_a, agg_b, w_before))
-        busy.update((r, p))
+        defer(r, p)
         nxt = locks.release(r, p)
         if nxt is not None:
-            flush()
-            transfers += _handle_grant(
-                nxt, p, state, clusters, locks, work_lists, active,
-                max_candidates, max_clusters_per_rank, engine)
+            _handle_grant_deferred(nxt, p, state, locks, work_lists, active,
+                                   busy, defer, flush)
         if work_lists[r]:
             active.append(r)
-        if len(pending) >= batch:
-            flush()
     flush()
     return transfers, conflicts
+
+
+def _handle_grant_deferred(r: int, p: int, state, locks, work_lists, active,
+                           busy, defer, flush) -> None:
+    """Grant-chain drain for the batched path: chain events are deferred
+    through the same single-flush machinery instead of scored scalarly.
+
+    Mirrors :func:`_handle_grant`'s control flow exactly — the chain
+    structure (who yields, who releases to whom, re-activation order) never
+    depends on scoring outcomes, so deferring the evaluations preserves the
+    sequential trajectory: an event only joins the pending batch when its
+    ranks are disjoint from every deferred event (otherwise ``flush()``
+    first), and consecutive chain elements share ``p``, so each forces the
+    previous element's flush before it captures its shortlist.
+    """
+    post: List[int] = []
+    cur: Optional[int] = r
+    while cur is not None:
+        if locks.must_yield(cur, p):
+            nxt = locks.release(cur, p)
+            active.append(cur)
+            cur = nxt
+            continue
+        if cur in busy or p in busy:
+            flush()     # chain event must see the deferred swaps it touches
+        defer(cur, p)
+        nxt = locks.release(cur, p)
+        post.append(cur)
+        cur = nxt
+    for rr in reversed(post):
+        if work_lists[rr]:
+            active.append(rr)
 
 
 def _handle_grant(r: int, p: int, state, clusters, locks, work_lists, active,
@@ -342,11 +406,8 @@ def _handle_grant(r: int, p: int, state, clusters, locks, work_lists, active,
                             max_candidates, engine=engine)
         if best is not None:
             n_transfers += 1
-            local = build_clusters(state,
-                                   max_clusters_per_rank=max_clusters_per_rank,
-                                   only_ranks=[cur, p])
-            clusters[cur] = local[cur]
-            clusters[p] = local[p]
+            _rebuild_local(state, clusters, engine, max_clusters_per_rank,
+                           cur, p)
         nxt = locks.release(cur, p)
         post.append(cur)
         cur = nxt

@@ -58,11 +58,28 @@ class ClusterSummary:
     size: int
 
 
+def _heavy_threshold(state: CCMState, heavy_quantile: float) -> float:
+    """Heavy-edge volume threshold from the global edge-volume distribution
+    (static per phase -> cached on the state across the many incremental
+    rebuilds)."""
+    ph = state.phase
+    qcache = getattr(state, "_quantile_cache", None)
+    if qcache is None:
+        qcache = {}
+        state._quantile_cache = qcache
+    thresh = qcache.get(heavy_quantile)
+    if thresh is None:
+        thresh = (np.quantile(ph.comm_vol, heavy_quantile)
+                  if ph.num_comms else np.inf)
+        qcache[heavy_quantile] = thresh
+    return thresh
+
+
 def build_clusters(state: CCMState, heavy_quantile: float = 0.75,
                    max_clusters_per_rank: Optional[int] = None,
                    split_frac: float = 0.25,
-                   only_ranks: Optional[List[int]] = None
-                   ) -> Dict[int, List[np.ndarray]]:
+                   only_ranks: Optional[List[int]] = None,
+                   rank_tasks=None) -> Dict[int, List[np.ndarray]]:
     """rank -> list of task-id arrays (clusters).  Singletons included.
 
     ``split_frac``: clusters whose load exceeds ``split_frac * mean rank
@@ -72,7 +89,11 @@ def build_clusters(state: CCMState, heavy_quantile: float = 0.75,
     that the delta term charges.
 
     ``only_ranks``: restrict to these ranks (incremental rebuild after a
-    transfer touches two ranks).
+    transfer touches two ranks).  ``rank_tasks``: optional ``r -> sorted
+    member-task id array`` accessor (PhaseEngine.rank_tasks); with it, the
+    ``only_ranks`` rebuild touches only the selected ranks' tasks and their
+    incident edges instead of scanning every task and edge of the phase —
+    same output bitwise (see ``_local_labels``).
 
     Vectorized: union relations become flat (u, v) pair arrays — consecutive
     tasks of each (block, rank) group plus the heavy same-rank edges — and
@@ -85,37 +106,47 @@ def build_clusters(state: CCMState, heavy_quantile: float = 0.75,
     mean_load = ph.task_load.sum() / max(ph.num_ranks, 1)
     load_cap = max(split_frac * mean_load, ph.task_load.max(initial=0.0))
     out: Dict[int, List[np.ndarray]] = {}
-    # heavy threshold from the global edge-volume distribution (static per
-    # phase -> cached on the state across the many incremental rebuilds)
-    qcache = getattr(state, "_quantile_cache", None)
-    if qcache is None:
-        qcache = {}
-        state._quantile_cache = qcache
-    thresh = qcache.get(heavy_quantile)
-    if thresh is None:
-        thresh = (np.quantile(ph.comm_vol, heavy_quantile)
-                  if ph.num_comms else np.inf)
-        qcache[heavy_quantile] = thresh
-    same_rank = a[ph.comm_src] == a[ph.comm_dst]
-    heavy = same_rank & (ph.comm_vol >= thresh)
+    thresh = _heavy_threshold(state, heavy_quantile)
     ranks = list(range(ph.num_ranks)) if only_ranks is None else list(only_ranks)
-    rank_sel = np.zeros(ph.num_ranks, bool)
-    rank_sel[ranks] = True
 
-    # union pairs: consecutive members of each (block, rank) group ...
-    bt = np.nonzero(rank_sel[a] & (ph.task_block >= 0))[0]
-    order = np.lexsort((bt, a[bt], ph.task_block[bt]))
-    bts = bt[order]
-    grp = ((ph.task_block[bts][1:] == ph.task_block[bts][:-1])
-           & (a[bts][1:] == a[bts][:-1])) if bts.size else np.zeros(0, bool)
-    # ... plus heavy same-rank comm edges on the selected ranks
-    he = np.nonzero(heavy & rank_sel[a[ph.comm_src]])[0]
-    u = np.concatenate([bts[:-1][grp], ph.comm_src[he]])
-    v = np.concatenate([bts[1:][grp], ph.comm_dst[he]])
+    if only_ranks is not None and rank_tasks is not None:
+        tasks_sel, lab, lab_of = _local_labels(state, ranks, rank_tasks,
+                                               thresh)
+        rank_members = {r: rank_tasks(r) for r in ranks}
+    else:
+        lab = _global_labels(state, ranks, thresh)
+        lab_of = None
+        # full build: one argsort gives every rank's segment; incremental
+        # rebuild (2 ranks): a direct membership scan per rank is cheaper
+        segs = rank_segments(a, ph.num_ranks) if only_ranks is None else None
+        rank_members = {
+            r: (segs.row(r) if segs is not None else np.nonzero(a == r)[0])
+            for r in ranks}
 
-    # components: min-label propagation + pointer jumping (labels only ever
-    # decrease, so the fixpoint labels each task with its component's min id)
-    lab = np.arange(ph.num_tasks, dtype=np.int64)
+    for r in ranks:
+        tasks = rank_members[r]
+        if tasks.size == 0:
+            out[r] = []
+            continue
+        labs = lab_of(tasks) if lab_of is not None else lab[tasks]
+        uniq, inv = np.unique(labs, return_inverse=True)
+        sorted_tasks = tasks[np.argsort(inv, kind="stable")]
+        bounds = np.cumsum(np.bincount(inv, minlength=uniq.shape[0]))[:-1]
+        clusters: List[np.ndarray] = []
+        for g in np.split(sorted_tasks, bounds):
+            clusters.extend(_split_by_load(g, ph.task_load, load_cap))
+        clusters.sort(key=lambda c: -ph.task_load[c].sum())
+        if max_clusters_per_rank is not None:
+            clusters = clusters[:max_clusters_per_rank]
+        out[r] = clusters
+    return out
+
+
+def _propagate_min_labels(lab: np.ndarray, u: np.ndarray,
+                          v: np.ndarray) -> np.ndarray:
+    """Min-label propagation + pointer jumping over union pairs (u, v):
+    labels only ever decrease, so the fixpoint labels each element with its
+    component's minimum initial label."""
     while u.size:
         m = np.minimum(lab[u], lab[v])
         np.minimum.at(lab, u, m)
@@ -127,26 +158,79 @@ def build_clusters(state: CCMState, heavy_quantile: float = 0.75,
             lab = nl
         if np.array_equal(lab[u], lab[v]):
             break
+    return lab
 
-    # full build: one argsort gives every rank's segment; incremental
-    # rebuild (2 ranks): a direct membership scan per rank is cheaper
-    segs = rank_segments(a, ph.num_ranks) if only_ranks is None else None
-    for r in ranks:
-        tasks = segs.row(r) if segs is not None else np.nonzero(a == r)[0]
-        if tasks.size == 0:
-            out[r] = []
-            continue
-        uniq, inv = np.unique(lab[tasks], return_inverse=True)
-        sorted_tasks = tasks[np.argsort(inv, kind="stable")]
-        bounds = np.cumsum(np.bincount(inv, minlength=uniq.shape[0]))[:-1]
-        clusters: List[np.ndarray] = []
-        for g in np.split(sorted_tasks, bounds):
-            clusters.extend(_split_by_load(g, ph.task_load, load_cap))
-        clusters.sort(key=lambda c: -ph.task_load[c].sum())
-        if max_clusters_per_rank is not None:
-            clusters = clusters[:max_clusters_per_rank]
-        out[r] = clusters
-    return out
+
+def _global_labels(state: CCMState, ranks: List[int],
+                   thresh: float) -> np.ndarray:
+    """Component labels over all tasks of the selected ranks, scanning every
+    task and edge of the phase (the full-build path)."""
+    ph = state.phase
+    a = state.assignment
+    rank_sel = np.zeros(ph.num_ranks, bool)
+    rank_sel[ranks] = True
+    same_rank = a[ph.comm_src] == a[ph.comm_dst]
+    heavy = same_rank & (ph.comm_vol >= thresh)
+
+    # union pairs: consecutive members of each (block, rank) group ...
+    bt = np.nonzero(rank_sel[a] & (ph.task_block >= 0))[0]
+    order = np.lexsort((bt, a[bt], ph.task_block[bt]))
+    bts = bt[order]
+    grp = ((ph.task_block[bts][1:] == ph.task_block[bts][:-1])
+           & (a[bts][1:] == a[bts][:-1])) if bts.size else np.zeros(0, bool)
+    # ... plus heavy same-rank comm edges on the selected ranks
+    he = np.nonzero(heavy & rank_sel[a[ph.comm_src]])[0]
+    u = np.concatenate([bts[:-1][grp], ph.comm_src[he]])
+    v = np.concatenate([bts[1:][grp], ph.comm_dst[he]])
+    lab = np.arange(ph.num_tasks, dtype=np.int64)
+    return _propagate_min_labels(lab, u, v)
+
+
+def _local_labels(state: CCMState, ranks: List[int], rank_tasks,
+                  thresh: float):
+    """Component labels restricted to the selected ranks' tasks — O(their
+    tasks + their incident edges) instead of O(num_tasks + num_comms).
+
+    Exactness: union pairs never cross ranks (block groups are per (block,
+    rank); heavy edges require ``a[src] == a[dst]``), so restricting to the
+    selected ranks' tasks and their incident edges keeps every qualifying
+    pair.  Labels are component-min LOCAL indices into the globally-sorted
+    selected-task array; within any single rank the local index is monotone
+    in the global task id, so per-rank ``np.unique`` grouping and group
+    ORDER are bitwise-identical to the global-label path.
+    """
+    ph = state.phase
+    a = state.assignment
+    segs = [rank_tasks(r) for r in ranks]
+    tasks_sel = (np.sort(np.concatenate(segs)) if segs
+                 else np.zeros(0, np.int64))
+    lab = np.arange(tasks_sel.shape[0], dtype=np.int64)
+
+    if tasks_sel.size:
+        # block pairs: consecutive members of each (block, rank) group
+        tb = ph.task_block[tasks_sel]
+        bt = tasks_sel[tb >= 0]
+        order = np.lexsort((bt, a[bt], ph.task_block[bt]))
+        bts = bt[order]
+        grp = ((ph.task_block[bts][1:] == ph.task_block[bts][:-1])
+               & (a[bts][1:] == a[bts][:-1])) if bts.size \
+            else np.zeros(0, bool)
+        # heavy same-rank edges: every qualifying edge is incident to a
+        # selected task (both endpoints share the — selected — rank).  The
+        # gather lists an edge once per selected endpoint; duplicate union
+        # pairs are harmless to min-label propagation, so no dedupe.
+        eids = state.csr.task_edges.gather(tasks_sel)
+        src, dst = ph.comm_src[eids], ph.comm_dst[eids]
+        hm = (a[src] == a[dst]) & (ph.comm_vol[eids] >= thresh)
+        u_g = np.concatenate([bts[:-1][grp], src[hm]])
+        v_g = np.concatenate([bts[1:][grp], dst[hm]])
+        lab = _propagate_min_labels(lab, np.searchsorted(tasks_sel, u_g),
+                                    np.searchsorted(tasks_sel, v_g))
+
+    def lab_of(tasks: np.ndarray) -> np.ndarray:
+        return lab[np.searchsorted(tasks_sel, tasks)]
+
+    return tasks_sel, lab, lab_of
 
 
 def build_clusters_reference(state: CCMState, heavy_quantile: float = 0.75,

@@ -1,4 +1,4 @@
-"""Vectorized CCM evaluation engine.
+"""Vectorized, incrementally-maintained CCM evaluation engine.
 
 The CCM-LB optimizer's cost at scale is NOT the model — it is the number of
 times the model is evaluated.  The seed evaluated each candidate cluster
@@ -9,6 +9,38 @@ moves of a lock event (and all stage-1 peer scores of a rank) in single
 vectorized passes over flat arrays — and, since PR 2, all candidate moves
 of SEVERAL disjoint lock events in one batched scoring pass that can run on
 the Pallas ``ccm_scorer`` kernel.
+
+Incremental state (PR 3)
+------------------------
+:class:`PhaseEngine` is a LONG-LIVED object that owns mutable per-rank
+state and keeps it current across transfers instead of re-deriving it per
+lock event:
+
+  * ``rank segments`` — each rank's member-task id array, sorted ascending
+    (bitwise what ``np.nonzero(assignment == r)[0]`` would return).  The
+    engine registers a transfer listener on the wrapped ``CCMState``
+    (:meth:`CCMState.add_transfer_listener`), so EVERY mutation — direct
+    ``try_transfer`` swaps, grant-chain handoffs, batched deferred flushes —
+    updates the segments in place in O(|segment| + |moved|); nothing is
+    re-gathered from the (num_tasks,) assignment on the per-event path.
+    ``rank_tasks(r)`` serves the segments to stage-2 flow assembly and to
+    ``build_clusters(only_ranks=..., rank_tasks=...)`` incremental rebuilds.
+  * ``cluster aggregates`` — per-cluster loads/mems/overheads and (block,
+    count) tables, cached per cluster-list identity and capped at the
+    caller's candidate limit (``ccm_lb`` only ever scores the first
+    ``max_candidates`` clusters, so the tail is never aggregated).
+  * per-rank block counters and shared/homing byte caches live on the
+    wrapped ``CCMState`` and were already incremental (update formulae).
+
+Invalidation contract: segments are invalidated by nothing (the listener
+keeps them exact); aggregate caches are invalidated by cluster-list
+IDENTITY (``ccm_lb`` installs a new list object when a rank's clusters are
+rebuilt after a transfer, so stale aggregates are unreachable); everything
+read from ``CCMState`` (vol/load/block_count/caches) is maintained by the
+update formulae themselves.  ``PhaseEngine(..., incremental=False)`` keeps
+the full re-gather path as the parity reference — tests/test_incremental.py
+asserts segments and end-to-end trajectories are bitwise-identical between
+the two.
 
 Contract with the scalar path
 -----------------------------
@@ -80,7 +112,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.ccm import CCMState, INF
-from repro.core.csr import CSR, PhaseCSR
+from repro.core.csr import CSR, PhaseCSR, rank_segments
 from repro.kernels.ccm_scorer import layout as L
 from repro.kernels.ccm_scorer import ops as scorer_ops
 
@@ -115,33 +147,32 @@ class ExchangeEvent:
     """One lock event to score: candidate cluster lists of a rank pair.
 
     ``cand_a[0]``/``cand_b[0]`` must be the empty cluster; ``pairs`` is the
-    (ia, ib) shortlist to return scores for.  ``agg_*`` are the cached
-    aggregates of the rank's FULL cluster lists (``cand_*[1:]`` must be a
-    prefix of them); omitted, they are computed on the fly.
+    (ia, ib) shortlist to return scores for — a (P, 2) int64 array (what
+    ``shortlist_pairs`` produces) or an equivalent sequence of tuples.
+    ``agg_*`` are the cached aggregates of the rank's cluster lists
+    (``cand_*[1:]`` must be a prefix of them; tables capped at the
+    candidate cut are sufficient); omitted, they are computed on the fly.
     """
 
     r_a: int
     r_b: int
     cand_a: Sequence[np.ndarray]
     cand_b: Sequence[np.ndarray]
-    pairs: Sequence[Tuple[int, int]]
+    pairs: Sequence  # (P, 2) int64 array or sequence of (ia, ib) tuples
     agg_a: Optional[ClusterAggregates] = None
     agg_b: Optional[ClusterAggregates] = None
-
-
-def _with_empty(x: np.ndarray) -> np.ndarray:
-    out = np.zeros(x.shape[0] + 1)
-    out[1:] = x
-    return out
 
 
 class PhaseEngine:
     """Batched (vectorizable, JAX-friendly) move scoring over a CCMState.
 
-    Holds only *phase-static* structure (the CSR view, reusable label
-    buffers) plus per-cluster-list aggregate caches validated by list
-    identity; all mutable state stays in the wrapped ``CCMState``, so the
-    engine remains valid across transfers.
+    Long-lived: owns phase-static structure (the CSR view, reusable label
+    buffers), per-cluster-list aggregate caches validated by list identity,
+    and — with ``incremental=True`` (default) — per-rank member-task
+    segments kept exact across transfers via a ``CCMState`` transfer
+    listener (see the module docstring for the invalidation contract).
+    ``incremental=False`` re-gathers rank membership from the assignment on
+    every use: the full-rebuild parity reference.
 
     ``backend`` selects the stage-2 tile scorer: ``"numpy"`` (the
     reference, repro/kernels/ccm_scorer/ref.py) or ``"pallas"`` (the
@@ -150,7 +181,7 @@ class PhaseEngine:
     """
 
     def __init__(self, state: CCMState, backend: str = "numpy",
-                 interpret: bool = True):
+                 interpret: bool = True, incremental: bool = True):
         if backend not in ("numpy", "pallas"):
             raise ValueError(f"unknown engine backend: {backend!r}")
         self.state = state
@@ -158,20 +189,57 @@ class PhaseEngine:
         self.csr: PhaseCSR = state.csr
         self.backend = backend
         self.interpret = interpret
+        self.incremental = incremental
         self._glab = np.zeros(self.phase.num_tasks, np.int64)
         self._elab = np.full(self.phase.num_tasks, -1, np.int64)
-        # rank -> (cluster list reference, aggregates); holding the list
-        # reference both validates the cache (ccm_lb installs a NEW list
-        # when a rank's clusters are rebuilt) and pins its id.
-        self._agg: Dict[int, Tuple[list, ClusterAggregates]] = {}
+        # rank -> (cluster list reference, aggregates, limit); holding the
+        # list reference both validates the cache (ccm_lb installs a NEW
+        # list when a rank's clusters are rebuilt) and pins its id.
+        self._agg: Dict[int, Tuple[list, ClusterAggregates,
+                                   Optional[int]]] = {}
+        self._segments: Optional[List[np.ndarray]] = None
+        if incremental:
+            segs = rank_segments(state.assignment, self.phase.num_ranks)
+            self._segments = [segs.row(r)
+                              for r in range(self.phase.num_ranks)]
+            state.add_transfer_listener(self._on_transfer)
 
-    def cluster_aggregates(self, r: int,
-                           clusters: List[np.ndarray]) -> ClusterAggregates:
+    # ------------------------------------------------- incremental segments
+    def _on_transfer(self, tasks: np.ndarray, r_from: int, r_to: int):
+        """Transfer hook: splice the moved ids out of ``r_from``'s segment
+        and merge them into ``r_to``'s, keeping both sorted — O(|segment| +
+        |moved|), vs the O(num_tasks) assignment scan it replaces."""
+        t = np.sort(np.asarray(tasks, np.int64))
+        seg = self._segments[r_from]
+        # every moved id is present in seg (transfer precondition), so the
+        # searchsorted positions are exactly the entries to drop
+        self._segments[r_from] = np.delete(seg, np.searchsorted(seg, t))
+        seg = self._segments[r_to]
+        self._segments[r_to] = np.insert(seg, np.searchsorted(seg, t), t)
+
+    def rank_tasks(self, r: int) -> np.ndarray:
+        """Member-task ids of rank ``r``, ascending — bitwise what
+        ``np.nonzero(assignment == r)[0]`` returns, served from the
+        incrementally-maintained segment (or gathered fresh when
+        ``incremental=False``).  Callers must not mutate the array."""
+        if self._segments is not None:
+            return self._segments[r]
+        return np.nonzero(self.state.assignment == r)[0]
+
+    def cluster_aggregates(self, r: int, clusters: List[np.ndarray],
+                           limit: Optional[int] = None) -> ClusterAggregates:
+        """Aggregates of ``clusters[:limit]`` (all of them when ``limit`` is
+        None), cached by cluster-list identity.  A cached full table serves
+        any limited request; a cached limited table serves requests up to
+        its limit and is recomputed otherwise."""
         cached = self._agg.get(r)
         if cached is not None and cached[0] is clusters:
-            return cached[1]
-        agg = self._compute_aggregates(clusters)
-        self._agg[r] = (clusters, agg)
+            have = cached[2]
+            if have is None or (limit is not None and have >= limit):
+                return cached[1]
+        agg = self._compute_aggregates(
+            clusters if limit is None else clusters[:limit])
+        self._agg[r] = (clusters, agg, limit)
         return agg
 
     def _compute_aggregates(self, clusters: List[np.ndarray]
@@ -181,25 +249,29 @@ class PhaseEngine:
         mems = np.array([ph.task_mem[c].sum() for c in clusters])
         overheads = np.array([ph.task_overhead[c].max() if len(c) else 0.0
                               for c in clusters])
-        ci_l, ids_l, cnt_l = [], [], []
-        blk_map: Dict[int, List[Tuple[int, int]]] = {}
-        for i, c in enumerate(clusters):
-            tb = ph.task_block[c]
-            tb = tb[tb >= 0]
-            if tb.size == 0:
-                continue
-            bs, cnts = np.unique(tb, return_counts=True)
-            ci_l.append(np.full(bs.shape[0], i, np.int64))
-            ids_l.append(bs)
-            cnt_l.append(cnts)
-            for blk, cnt in zip(bs, cnts):
-                blk_map.setdefault(int(blk), []).append((i, int(cnt)))
-        if ci_l:
-            blk_ci = np.concatenate(ci_l)
-            blk_ids = np.concatenate(ids_l)
-            blk_cnts = np.concatenate(cnt_l)
+        # (cluster, block, count) table in one lexsorted run-length pass —
+        # identical rows (ascending block within ascending cluster, integer
+        # counts) to the per-cluster np.unique loop it replaces
+        if clusters:
+            ci = np.repeat(np.arange(len(clusters), dtype=np.int64),
+                           [len(c) for c in clusters])
+            tb = ph.task_block[np.concatenate(clusters)]
+            has = tb >= 0
+            ci, tb = ci[has], tb[has]
+            order = np.lexsort((tb, ci))
+            ci, tb = ci[order], tb[order]
+            new = np.ones(ci.shape[0], bool)
+            new[1:] = (ci[1:] != ci[:-1]) | (tb[1:] != tb[:-1])
+            starts = np.nonzero(new)[0]
+            blk_ci = ci[starts]
+            blk_ids = tb[starts]
+            blk_cnts = np.diff(np.append(starts, ci.shape[0]))
         else:
             blk_ci = blk_ids = blk_cnts = np.zeros(0, np.int64)
+        blk_map: Dict[int, List[Tuple[int, int]]] = {}
+        for i, blk, cnt in zip(blk_ci.tolist(), blk_ids.tolist(),
+                               blk_cnts.tolist()):
+            blk_map.setdefault(blk, []).append((i, cnt))
         return ClusterAggregates(
             loads=loads, mems=mems, overheads=overheads,
             blk_ci=blk_ci, blk_ids=blk_ids, blk_cnts=blk_cnts,
@@ -276,9 +348,8 @@ class PhaseEngine:
 
         results = []
         for k, e in enumerate(events):
-            n_p = len(e.pairs)
-            ia = np.fromiter((q[0] for q in e.pairs), np.int64, n_p)
-            ib = np.fromiter((q[1] for q in e.pairs), np.int64, n_p)
+            p = np.asarray(e.pairs, np.int64).reshape(-1, 2)
+            ia, ib = p[:, 0], p[:, 1]
             results.append((w_a[k, ia, ib], w_b[k, ia, ib], feas[k, ia, ib]))
         return results
 
@@ -293,26 +364,25 @@ class PhaseEngine:
         group 0 ("other rank") through the event-id mask.
         """
         ph, g, ev = self.phase, self._glab, self._elab
-        assignment = self.state.assignment
-        metas = []      # (tasks_both, eids, G, offset)
+        metas = []      # (tasks_both, cand_flat, eids, G, offset)
         bins_l, w_l = [], []
         offset = 0
+
         def _reset_labels(upto):
-            for both_, ca_, cb_, _, _, _ in metas[:upto]:
+            # candidate ids are reset too: a direct caller may pass arrays
+            # with tasks no longer assigned to the event's ranks (a stale
+            # label here would corrupt every later evaluation)
+            for both_, cflat_, _, _, _ in metas[:upto]:
                 g[both_] = 0
                 ev[both_] = -1
-                for c in ca_:
-                    g[c] = 0
-                    ev[c] = -1
-                for c in cb_:
-                    g[c] = 0
-                    ev[c] = -1
+                g[cflat_] = 0
+                ev[cflat_] = -1
 
         for k, e in enumerate(events):
             na, nb = len(e.cand_a) - 1, len(e.cand_b) - 1
             G = 3 + na + nb
-            tasks_a = np.nonzero(assignment == e.r_a)[0]
-            tasks_b = np.nonzero(assignment == e.r_b)[0]
+            tasks_a = self.rank_tasks(e.r_a)
+            tasks_b = self.rank_tasks(e.r_b)
             both = np.concatenate([tasks_a, tasks_b])
             if (ev[both] != -1).any():
                 # detected BEFORE this event touches the buffers: roll back
@@ -322,19 +392,22 @@ class PhaseEngine:
                     "batched lock events must have pairwise-disjoint rank "
                     f"sets (event {k} on ranks ({e.r_a}, {e.r_b}) overlaps "
                     "an earlier event)")
+            cl = list(e.cand_a[1:]) + list(e.cand_b[1:])
+            if cl:
+                cflat = np.concatenate(cl)
+                cg = np.repeat(np.arange(3, 3 + na + nb, dtype=np.int64),
+                               [len(c) for c in cl])
+            else:
+                cflat = cg = np.zeros(0, np.int64)
             g[tasks_a] = 1
             g[tasks_b] = 2
             ev[both] = k
-            for i, c in enumerate(e.cand_a[1:]):
-                g[c] = 3 + i
-                ev[c] = k
-            for j, c in enumerate(e.cand_b[1:]):
-                g[c] = 3 + na + j
-                ev[c] = k
+            g[cflat] = cg       # duplicate ids resolve to the LAST write,
+            ev[cflat] = k       # matching the per-cluster loop order
             eids = np.unique(self.csr.task_edges.gather(both))
-            metas.append((both, e.cand_a[1:], e.cand_b[1:], eids, G, offset))
+            metas.append((both, cflat, eids, G, offset))
             offset += G * G
-        for k, (both, ca, cb, eids, G, off) in enumerate(metas):
+        for k, (both, cflat, eids, G, off) in enumerate(metas):
             src, dst = ph.comm_src[eids], ph.comm_dst[eids]
             gs = np.where(ev[src] == k, g[src], 0)
             gd = np.where(ev[dst] == k, g[dst], 0)
@@ -344,13 +417,9 @@ class PhaseEngine:
             np.concatenate(bins_l) if bins_l else np.zeros(0, np.int64),
             weights=np.concatenate(w_l) if w_l else None,
             minlength=offset)
-        # reset the shared buffers — including the candidate arrays, which
-        # a direct caller may pass with tasks no longer assigned to the
-        # event's ranks (a stale label here would corrupt every later
-        # evaluation)
         _reset_labels(len(metas))
         return [flat[off:off + G * G].reshape(G, G)
-                for _, _, _, _, G, off in metas]
+                for _, _, _, G, off in metas]
 
     def _event_features(self, e: ExchangeEvent, F: np.ndarray
                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
@@ -376,31 +445,33 @@ class PhaseEngine:
         ar = np.arange(sa, sb)
         br = np.arange(sb, G)
 
+        # column 0 is the empty candidate (stays zero); writes go straight
+        # into the [1:] slice
         av = np.zeros((L.N_AV, na + 1))
-        av[L.AV.intra] = _with_empty(F[ar, ar])
-        av[L.AV.out_own] = _with_empty(row_to_a[sa:sb])    # v(A -> Ra)
-        av[L.AV.in_own] = _with_empty(col_from_a[sa:sb])   # v(Ra -> A)
-        av[L.AV.out_peer] = _with_empty(row_to_b[sa:sb])   # v(A -> Rb)
-        av[L.AV.in_peer] = _with_empty(col_from_b[sa:sb])  # v(Rb -> A)
-        av[L.AV.out_other] = _with_empty(F[sa:sb, 0])
-        av[L.AV.in_other] = _with_empty(F[0, sa:sb])
-        av[L.AV.load] = _with_empty(agg_a.loads[:na])
-        av[L.AV.mem] = _with_empty(agg_a.mems[:na])
-        av[L.AV.ovh] = _with_empty(agg_a.overheads[:na])
+        av[L.AV.intra, 1:] = F[ar, ar]
+        av[L.AV.out_own, 1:] = row_to_a[sa:sb]    # v(A -> Ra)
+        av[L.AV.in_own, 1:] = col_from_a[sa:sb]   # v(Ra -> A)
+        av[L.AV.out_peer, 1:] = row_to_b[sa:sb]   # v(A -> Rb)
+        av[L.AV.in_peer, 1:] = col_from_b[sa:sb]  # v(Rb -> A)
+        av[L.AV.out_other, 1:] = F[sa:sb, 0]
+        av[L.AV.in_other, 1:] = F[0, sa:sb]
+        av[L.AV.load, 1:] = agg_a.loads[:na]
+        av[L.AV.mem, 1:] = agg_a.mems[:na]
+        av[L.AV.ovh, 1:] = agg_a.overheads[:na]
         (av[L.AV.s_rm], av[L.AV.h_rm], av[L.AV.s_add_peer],
          av[L.AV.h_add_peer]) = self._block_terms(agg_a, na, r_a, r_b)
 
         bv = np.zeros((L.N_AV, nb + 1))
-        bv[L.AV.intra] = _with_empty(F[br, br])
-        bv[L.AV.out_own] = _with_empty(row_to_b[sb:])
-        bv[L.AV.in_own] = _with_empty(col_from_b[sb:])
-        bv[L.AV.out_peer] = _with_empty(row_to_a[sb:])
-        bv[L.AV.in_peer] = _with_empty(col_from_a[sb:])
-        bv[L.AV.out_other] = _with_empty(F[sb:, 0])
-        bv[L.AV.in_other] = _with_empty(F[0, sb:])
-        bv[L.AV.load] = _with_empty(agg_b.loads[:nb])
-        bv[L.AV.mem] = _with_empty(agg_b.mems[:nb])
-        bv[L.AV.ovh] = _with_empty(agg_b.overheads[:nb])
+        bv[L.AV.intra, 1:] = F[br, br]
+        bv[L.AV.out_own, 1:] = row_to_b[sb:]
+        bv[L.AV.in_own, 1:] = col_from_b[sb:]
+        bv[L.AV.out_peer, 1:] = row_to_a[sb:]
+        bv[L.AV.in_peer, 1:] = col_from_a[sb:]
+        bv[L.AV.out_other, 1:] = F[sb:, 0]
+        bv[L.AV.in_other, 1:] = F[0, sb:]
+        bv[L.AV.load, 1:] = agg_b.loads[:nb]
+        bv[L.AV.mem, 1:] = agg_b.mems[:nb]
+        bv[L.AV.ovh, 1:] = agg_b.overheads[:nb]
         (bv[L.AV.s_rm], bv[L.AV.h_rm], bv[L.AV.s_add_peer],
          bv[L.AV.h_add_peer]) = self._block_terms(agg_b, nb, r_b, r_a)
 
@@ -432,42 +503,47 @@ class PhaseEngine:
                         if off_home_b:
                             pm[L.PM.ch_b, i + 1, j + 1] += size
 
-        sc = np.zeros(L.N_SC)
-        sc[L.SC.f_ab] = row_to_b[1] + row_to_b[sa:sb].sum()   # v(Ra -> Rb)
-        sc[L.SC.f_ba] = row_to_a[2] + row_to_a[sb:].sum()
-        sc[L.SC.f_aa] = row_to_a[1] + row_to_a[sa:sb].sum()
-        sc[L.SC.f_bb] = row_to_b[2] + row_to_b[sb:].sum()
-        sc[L.SC.f_ao] = F[1, 0] + F[sa:sb, 0].sum()
-        sc[L.SC.f_oa] = F[0, 1] + F[0, sa:sb].sum()
-        sc[L.SC.f_bo] = F[2, 0] + F[sb:, 0].sum()
-        sc[L.SC.f_ob] = F[0, 2] + F[0, sb:].sum()
-        # deltas are applied to the incrementally-maintained bases — mirrors
-        # the scalar path's base-plus-dvol structure so both paths share any
-        # drift in vol.
-        sc[L.SC.base_sent_a] = st.vol[r_a].sum() - st.vol[r_a, r_a]
-        sc[L.SC.base_recv_a] = st.vol[:, r_a].sum() - st.vol[r_a, r_a]
-        sc[L.SC.base_sent_b] = st.vol[r_b].sum() - st.vol[r_b, r_b]
-        sc[L.SC.base_recv_b] = st.vol[:, r_b].sum() - st.vol[r_b, r_b]
-        sc[L.SC.vol_aa] = st.vol[r_a, r_a]
-        sc[L.SC.vol_bb] = st.vol[r_b, r_b]
-        sc[L.SC.load_a] = st.load[r_a]
-        sc[L.SC.load_b] = st.load[r_b]
-        sc[L.SC.shared_a] = st.shared_cache[r_a]
-        sc[L.SC.shared_b] = st.shared_cache[r_b]
-        sc[L.SC.hom_a] = st.hom_cache[r_a]
-        sc[L.SC.hom_b] = st.hom_cache[r_b]
-        sc[L.SC.mem_base_a] = ph.rank_mem_base[r_a]
-        sc[L.SC.mem_task_a] = st.mem_task[r_a]
-        sc[L.SC.ovh_a] = st.mem_overhead_max[r_a]
-        sc[L.SC.mem_base_b] = ph.rank_mem_base[r_b]
-        sc[L.SC.mem_task_b] = st.mem_task[r_b]
-        sc[L.SC.ovh_b] = st.mem_overhead_max[r_b]
-        sc[L.SC.na] = float(na)
-        sc[L.SC.nb] = float(nb)
-        sc[L.SC.speed_a] = ph.rank_speed[r_a]
-        sc[L.SC.speed_b] = ph.rank_speed[r_b]
-        sc[L.SC.mem_cap_a] = ph.rank_mem_cap[r_a]
-        sc[L.SC.mem_cap_b] = ph.rank_mem_cap[r_b]
+        # one literal in layout.SC index order (0..31) — a single array
+        # construction instead of 32 scalar __setitem__ calls on the hot
+        # path; the deltas are applied to the incrementally-maintained
+        # bases, mirroring the scalar path's base-plus-dvol structure so
+        # both paths share any drift in vol.
+        vol_aa, vol_bb = st.vol[r_a, r_a], st.vol[r_b, r_b]
+        sc = np.array([
+            row_to_b[1] + row_to_b[sa:sb].sum(),   # f_ab: v(Ra -> Rb)
+            row_to_a[2] + row_to_a[sb:].sum(),     # f_ba
+            row_to_a[1] + row_to_a[sa:sb].sum(),   # f_aa
+            row_to_b[2] + row_to_b[sb:].sum(),     # f_bb
+            F[1, 0] + F[sa:sb, 0].sum(),           # f_ao
+            F[0, 1] + F[0, sa:sb].sum(),           # f_oa
+            F[2, 0] + F[sb:, 0].sum(),             # f_bo
+            F[0, 2] + F[0, sb:].sum(),             # f_ob
+            st.vol[r_a].sum() - vol_aa,            # base_sent_a
+            st.vol[:, r_a].sum() - vol_aa,         # base_recv_a
+            st.vol[r_b].sum() - vol_bb,            # base_sent_b
+            st.vol[:, r_b].sum() - vol_bb,         # base_recv_b
+            vol_aa,                                # vol_aa
+            vol_bb,                                # vol_bb
+            st.load[r_a],                          # load_a
+            st.load[r_b],                          # load_b
+            st.shared_cache[r_a],                  # shared_a
+            st.shared_cache[r_b],                  # shared_b
+            st.hom_cache[r_a],                     # hom_a
+            st.hom_cache[r_b],                     # hom_b
+            ph.rank_mem_base[r_a],                 # mem_base_a
+            st.mem_task[r_a],                      # mem_task_a
+            st.mem_overhead_max[r_a],              # ovh_a
+            ph.rank_mem_base[r_b],                 # mem_base_b
+            st.mem_task[r_b],                      # mem_task_b
+            st.mem_overhead_max[r_b],              # ovh_b
+            float(na),                             # na
+            float(nb),                             # nb
+            ph.rank_speed[r_a],                    # speed_a
+            ph.rank_speed[r_b],                    # speed_b
+            ph.rank_mem_cap[r_a],                  # mem_cap_a
+            ph.rank_mem_cap[r_b],                  # mem_cap_b
+        ])
+        assert sc.shape[0] == L.N_SC
         return av, bv, pm, sc
 
     def _block_terms(self, agg: ClusterAggregates, n: int, r_src: int,

@@ -10,6 +10,18 @@ in round k are delivered at round k+1; randomness is seeded per
 (iteration, rank, message) so runs are reproducible.  Payload entries are
 ``RankSummary`` objects (rank info + cluster summaries) — the augmentation
 over load-only gossip [22] that CCM requires.
+
+Delivery dedupe: the message count grows roughly ``fanout**k_rounds`` and
+most late-round deliveries carry only already-known summaries.  A delivery
+whose payload keys are a subset of the destination's ``info_known`` is
+dropped (no merge, no forward) — it cannot change the destination's
+knowledge, and any forward it would have generated carries exactly the
+destination's current knowledge, which the destination's OWN earlier
+forwards already propagate.  Forward payload snapshots are also shared
+across the fanout peers of one delivery (payloads are read-only once
+enqueued) instead of copied per peer.  This changes which peers end up
+known vs the seed's flood (fewer redundant paths), but stays a valid,
+deterministic epidemic under the same seed.
 """
 from __future__ import annotations
 
@@ -36,20 +48,23 @@ def build_peer_networks(summaries: Dict[int, RankSummary], *, k_rounds: int,
     msgs: List[tuple] = []
     for r in ranks:
         peers = _pick_peers(rng, n, r, fanout, visited={r})
+        snap = dict(info_known[r])      # shared: payloads are read-only
         for p in peers:
-            msgs.append((1, p, frozenset([r]) | {p}, dict(info_known[r])))
+            msgs.append((1, p, frozenset([r]) | {p}, snap))
 
     for _ in range(k_rounds):
         nxt: List[tuple] = []
         for rnd, dst, visited, payload in msgs:
             known = info_known[dst]
+            if payload.keys() <= known.keys():
+                continue    # dedupe: nothing new — skip merge AND forward
             for k, v in payload.items():
                 known.setdefault(k, v)
             if rnd < k_rounds:
                 peers = _pick_peers(rng, n, dst, fanout, visited=set(visited))
+                snap = dict(known)
                 for p in peers:
-                    nxt.append((rnd + 1, p, frozenset(visited) | {p},
-                                dict(known)))
+                    nxt.append((rnd + 1, p, frozenset(visited) | {p}, snap))
         msgs = nxt
     return info_known
 

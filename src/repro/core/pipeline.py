@@ -1,0 +1,221 @@
+"""Multi-phase CCM-LB orchestrator (paper §III-B, iterative executions).
+
+The paper's setting is an application that runs a SEQUENCE of phases and
+re-invokes the balancer each time — warm, not from scratch.  This module
+turns the single-phase :func:`repro.core.ccmlb.ccm_lb` into that loop:
+
+  * **warm-started assignments** — phase ``k+1`` starts from phase ``k``'s
+    balanced output, mapped through shared persistent task ids
+    (:func:`warm_start_assignment`).  Tasks present in both phases keep
+    their rank; new tasks fall back to the phase's initial-assignment rule.
+    On slowly-drifting workloads this leaves the balancer a near-balanced
+    start, so later phases converge in a fraction of the transfers.
+  * **amortized CSR builds** — consecutive phases whose adjacency topology
+    is unchanged (same comm endpoints, same task->block map;
+    :func:`same_topology`) share one frozen :class:`PhaseCSR` bundle
+    instead of rebuilding it per phase.  The bundle's content is identical
+    to a fresh build, so sharing cannot change results.
+  * **per-phase traces** — :class:`PipelineResult` keeps every phase's
+    :class:`CCMLBResult` plus orchestration metadata (warm-start coverage,
+    CSR reuse, wall-clock seconds).
+
+Parity contract: over phases run with ``warm_start=True`` the pipeline is
+trajectory-IDENTICAL to hand-chaining ``ccm_lb`` calls with each phase
+seeded ``seed + k`` and started from the previous result's assignment
+(tests/test_pipeline.py asserts it) — the orchestrator only removes
+redundant work, it never changes what the balancer computes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.ccmlb import CCMLBResult, ccm_lb
+from repro.core.csr import PhaseCSR
+from repro.core.problem import CCMParams, Phase, initial_assignment
+
+__all__ = ["PipelinePhase", "PhaseRun", "PipelineResult",
+           "ccm_lb_pipeline", "same_topology", "warm_start_assignment"]
+
+
+@dataclasses.dataclass
+class PipelinePhase:
+    """One phase of an iterative execution.
+
+    ``task_ids``: optional persistent GLOBAL id per task (shape
+    ``(num_tasks,)``, unique).  Two phases' tasks are matched by these ids
+    for warm starting; omitted, tasks are matched positionally (valid only
+    when consecutive phases have the same task count).
+    """
+
+    phase: Phase
+    task_ids: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        if self.task_ids is not None:
+            self.task_ids = np.asarray(self.task_ids, np.int64)
+            if self.task_ids.shape[0] != self.phase.num_tasks:
+                raise ValueError("task_ids must have one id per task")
+
+
+@dataclasses.dataclass
+class PhaseRun:
+    """One phase's balancing outcome plus orchestration metadata."""
+
+    result: CCMLBResult
+    warm_started: bool      # start mapped from the previous phase's output
+    csr_reused: bool        # PhaseCSR shared with the previous phase
+    carried_tasks: int      # tasks whose rank was carried over
+    seconds: float          # wall-clock of this phase's ccm_lb call
+
+
+@dataclasses.dataclass
+class PipelineResult:
+    """Per-phase results of one pipeline run (index = phase position)."""
+
+    runs: List[PhaseRun]
+
+    @property
+    def assignments(self) -> List[np.ndarray]:
+        return [r.result.assignment for r in self.runs]
+
+    @property
+    def final_assignment(self) -> np.ndarray:
+        return self.runs[-1].result.assignment
+
+    @property
+    def total_transfers(self) -> int:
+        return sum(r.result.transfers for r in self.runs)
+
+    @property
+    def total_seconds(self) -> float:
+        return sum(r.seconds for r in self.runs)
+
+    def max_work(self) -> List[List[float]]:
+        """Per-phase max-work traces (incl. each phase's initial point)."""
+        return [r.result.max_work for r in self.runs]
+
+
+def same_topology(a: Phase, b: Phase) -> bool:
+    """True iff the two phases share the adjacency structure a
+    :class:`PhaseCSR` encodes — same task/block counts, same comm edge
+    endpoints, same task->block map.  Loads, volumes, memory sizes and rank
+    parameters may differ freely (none of them enter the CSR)."""
+    if a is b:
+        return True
+    if (a.num_tasks != b.num_tasks or a.num_blocks != b.num_blocks
+            or a.num_comms != b.num_comms):
+        return False
+    return (np.array_equal(a.comm_src, b.comm_src)
+            and np.array_equal(a.comm_dst, b.comm_dst)
+            and np.array_equal(a.task_block, b.task_block))
+
+
+def warm_start_assignment(prev_phase: Phase, prev_assignment: np.ndarray,
+                          next_phase: Phase, *,
+                          prev_ids: Optional[np.ndarray] = None,
+                          next_ids: Optional[np.ndarray] = None,
+                          mode: str = "home") -> Tuple[np.ndarray, int]:
+    """Map a balanced assignment onto the next phase's task set.
+
+    Tasks matched between the phases (by persistent id, or positionally
+    when both id arrays are omitted and the counts agree) start on their
+    previous rank — clipped to ranks that exist in ``next_phase``;
+    unmatched tasks start from ``initial_assignment(next_phase, mode)``.
+    Returns ``(assignment, carried)`` where ``carried`` counts the matched
+    tasks.
+    """
+    prev_assignment = np.asarray(prev_assignment, np.int64)
+    base = initial_assignment(next_phase, mode)
+    if prev_ids is None and next_ids is None:
+        if prev_phase.num_tasks != next_phase.num_tasks:
+            return base, 0
+        ok = prev_assignment < next_phase.num_ranks
+        out = np.where(ok, prev_assignment, base).astype(np.int64)
+        return out, int(ok.sum())
+    if prev_ids is None:
+        prev_ids = np.arange(prev_phase.num_tasks, dtype=np.int64)
+    if next_ids is None:
+        next_ids = np.arange(next_phase.num_tasks, dtype=np.int64)
+    order = np.argsort(prev_ids, kind="stable")
+    sorted_ids = prev_ids[order]
+    if sorted_ids.size == 0:    # empty previous phase: nothing to carry
+        return base, 0
+    pos = np.searchsorted(sorted_ids, next_ids)
+    pos_c = np.minimum(pos, sorted_ids.shape[0] - 1)
+    hit = sorted_ids[pos_c] == next_ids
+    ranks = prev_assignment[order[pos_c]]
+    ok = hit & (ranks < next_phase.num_ranks)
+    out = np.where(ok, ranks, base).astype(np.int64)
+    return out, int(ok.sum())
+
+
+def ccm_lb_pipeline(phases: Sequence[Union[Phase, PipelinePhase]],
+                    params: Union[CCMParams, Sequence[CCMParams]], *,
+                    warm_start: bool = True,
+                    reuse_csr: bool = True,
+                    initial_mode: str = "home",
+                    a0: Optional[np.ndarray] = None,
+                    seed: int = 0,
+                    **lb_kwargs) -> PipelineResult:
+    """Balance a sequence of phases with warm-started assignments and
+    amortized CSR builds.
+
+    ``params`` is one :class:`CCMParams` shared by every phase, or a
+    sequence with one entry per phase (consumers that re-derive
+    coefficients per phase, e.g. a beta tracking the activation size).
+    ``a0`` overrides the derived start: with ``warm_start=True`` it seeds
+    the first phase (later phases warm-start from the previous output);
+    with ``warm_start=False`` — the cold reference — every phase of
+    matching task count starts from ``a0``, or from ``initial_mode`` when
+    ``a0`` is omitted.  Phase ``k`` runs with seed ``seed + k``.  Remaining keyword arguments (``n_iter``, ``fanout``,
+    ``use_engine``, ``backend``, ``batch_lock_events``, ...) pass through
+    to every :func:`ccm_lb` call.
+    """
+    if not phases:
+        raise ValueError("ccm_lb_pipeline needs at least one phase")
+    if isinstance(params, CCMParams):
+        params_seq: List[CCMParams] = [params] * len(phases)
+    else:
+        params_seq = list(params)
+        if len(params_seq) != len(phases):
+            raise ValueError("params sequence must match the phase count")
+    runs: List[PhaseRun] = []
+    prev: Optional[Tuple[Phase, np.ndarray, Optional[np.ndarray]]] = None
+    csr: Optional[PhaseCSR] = None
+    csr_phase: Optional[Phase] = None
+    for k, item in enumerate(phases):
+        pp = item if isinstance(item, PipelinePhase) else PipelinePhase(item)
+        ph = pp.phase
+        carried = 0
+        use_a0 = a0 is not None and (k == 0 or not warm_start) \
+            and np.asarray(a0).shape[0] == ph.num_tasks
+        if use_a0:
+            start = np.asarray(a0, np.int64).copy()
+        elif warm_start and prev is not None:
+            start, carried = warm_start_assignment(
+                prev[0], prev[1], ph, prev_ids=prev[2], next_ids=pp.task_ids,
+                mode=initial_mode)
+        else:
+            start = initial_assignment(ph, initial_mode)
+        # timer covers the CSR build too: a cold run (csr=None) pays it
+        # inside ccm_lb, so starting the clock here keeps cold/warm
+        # per-phase seconds comparable
+        t0 = time.perf_counter()
+        reused = csr is not None and same_topology(csr_phase, ph)
+        if not reused:
+            if not reuse_csr:
+                csr = None
+            else:
+                csr = PhaseCSR.from_phase(ph)
+                csr_phase = ph
+        res = ccm_lb(ph, start, params_seq[k], seed=seed + k, csr=csr,
+                     **lb_kwargs)
+        runs.append(PhaseRun(result=res, warm_started=carried > 0,
+                             csr_reused=reused, carried_tasks=carried,
+                             seconds=time.perf_counter() - t0))
+        prev = (ph, res.assignment, pp.task_ids)
+    return PipelineResult(runs)

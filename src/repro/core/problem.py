@@ -143,6 +143,8 @@ def initial_assignment(phase: Phase, mode: str = "home") -> np.ndarray:
     """Paper default: tasks start co-located with their block's home rank."""
     k = phase.num_tasks
     if mode == "home":
+        if phase.num_blocks == 0:   # blockless phase: nothing is homed
+            return (np.arange(k) % phase.num_ranks).astype(np.int64)
         a = np.where(phase.task_block >= 0,
                      phase.block_home[np.clip(phase.task_block, 0, None)],
                      np.arange(k) % phase.num_ranks)

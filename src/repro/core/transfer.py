@@ -103,20 +103,25 @@ def shortlist_pairs(state: CCMState, clusters_a: List[np.ndarray],
     shortlist of a lock event is invariant under transfers between OTHER
     (disjoint) rank pairs — the property batched lock events rest on.
 
-    Returns ``(cand_a, cand_b, pairs, agg_a, agg_b)``; the aggregates are
-    None on the scalar path.
+    Returns ``(cand_a, cand_b, pairs, agg_a, agg_b)`` with ``pairs`` a
+    (P, 2) int64 array of (ia, ib) rows; the aggregates are None on the
+    scalar path (and capped at ``max_candidates`` clusters on the engine
+    path — nothing past the candidate cut is ever scored).
     """
     empty = np.zeros((0,), np.int64)
     cand_a = [empty] + clusters_a[:max_candidates]
     cand_b = [empty] + clusters_b[:max_candidates]
     agg_a = agg_b = None
     if engine is not None:
-        agg_a = engine.cluster_aggregates(r_a, clusters_a)
-        agg_b = engine.cluster_aggregates(r_b, clusters_b)
+        agg_a = engine.cluster_aggregates(r_a, clusters_a,
+                                          limit=max_candidates)
+        agg_b = engine.cluster_aggregates(r_b, clusters_b,
+                                          limit=max_candidates)
 
-    pairs = [(ia, ib) for ia in range(len(cand_a))
-             for ib in range(len(cand_b)) if ia or ib]
-    if len(pairs) > shortlist:
+    n_a, n_b = len(cand_a), len(cand_b)
+    ia, ib = np.divmod(np.arange(1, n_a * n_b, dtype=np.int64), n_b)
+    pairs = np.stack([ia, ib], axis=1)          # (ia, ib) != (0, 0)
+    if pairs.shape[0] > shortlist:
         ph = state.phase
         if engine is not None:  # cached, bitwise-equal per-cluster sums
             la = np.concatenate([[0.0], agg_a.loads[:max_candidates]])
@@ -124,13 +129,11 @@ def shortlist_pairs(state: CCMState, clusters_a: List[np.ndarray],
         else:
             la = np.array([ph.task_load[c].sum() for c in cand_a])
             lb = np.array([ph.task_load[c].sum() for c in cand_b])
-        ia = np.array([p[0] for p in pairs])
-        ib = np.array([p[1] for p in pairs])
         after_a = (state.load[r_a] - la[ia] + lb[ib]) / ph.rank_speed[r_a]
         after_b = (state.load[r_b] + la[ia] - lb[ib]) / ph.rank_speed[r_b]
         score = np.maximum(after_a, after_b)
         order = np.argsort(score)[:shortlist]
-        pairs = [pairs[i] for i in order]
+        pairs = pairs[order]
     return cand_a, cand_b, pairs, agg_a, agg_b
 
 
@@ -138,16 +141,27 @@ def select_best(cand_a, cand_b, pairs, wa, wb, feas,
                 w_before: float) -> Optional[BestExchange]:
     """Selection rule over batched scores — shared by the engine path of
     ``find_best_exchange`` and ccm_lb's batched lock events, so deferred
-    scoring picks the exact same exchange."""
-    best: Optional[BestExchange] = None
-    for k, (ia, ib) in enumerate(pairs):
-        if not feas[k]:
-            continue
-        ev = ExchangeEval(float(wa[k]), float(wb[k]), True)
-        diff = w_before - ev.max_after
-        if diff > 1e-12 and (best is None or diff > best.work_diff):
-            best = BestExchange(cand_a[ia], cand_b[ib], float(diff), ev)
-    return best
+    scoring picks the exact same exchange.
+
+    Vectorized, selection-identical to the scalar scan it replaces: the
+    scan kept the FIRST pair (in ``pairs`` order) whose positive diff was
+    strictly greater than every earlier one — i.e. the first occurrence of
+    the maximum, which is what ``argmax`` returns.
+    """
+    pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
+    wa, wb = np.asarray(wa), np.asarray(wb)
+    ok = np.flatnonzero(np.asarray(feas, bool))  # before diff: infeasible
+    if ok.size == 0:                             # rows hold inf - inf = nan
+        return None
+    diff = w_before - np.maximum(wa[ok], wb[ok])
+    pos = np.flatnonzero(diff > 1e-12)
+    if pos.size == 0:
+        return None
+    j = pos[np.argmax(diff[pos])]
+    k = int(ok[j])
+    ia, ib = int(pairs[k, 0]), int(pairs[k, 1])
+    ev = ExchangeEval(float(wa[k]), float(wb[k]), True)
+    return BestExchange(cand_a[ia], cand_b[ib], float(diff[j]), ev)
 
 
 def find_best_exchange(state: CCMState, clusters_a: List[np.ndarray],

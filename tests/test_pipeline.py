@@ -1,0 +1,206 @@
+"""Multi-phase pipeline orchestrator (repro/core/pipeline.py).
+
+Parity: ``ccm_lb_pipeline`` over a phase sequence must be trajectory-
+IDENTICAL to hand-chaining ``ccm_lb`` (seed + k per phase, previous output
+as the next start) — CSR amortization and warm-start mapping may remove
+work but never change results.  Plus unit coverage of the topology check
+and the id-mapped warm start, and smoke coverage of the balance/ pipeline
+entry points.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (CCMParams, PipelinePhase, ccm_lb, ccm_lb_pipeline,
+                        random_phase, same_topology, warm_start_assignment)
+from repro.core.problem import Phase, initial_assignment
+
+PARAMS = CCMParams(delta=1e-9)
+
+
+def _drifting_phases(seed, n_phases, ranks=10, tasks=200, drift=0.06):
+    base = random_phase(seed, num_ranks=ranks, num_tasks=tasks,
+                        num_blocks=tasks // 8, num_comms=2 * tasks,
+                        mem_cap=5e8)
+    rng = np.random.default_rng(seed + 100)
+    phases = [base]
+    for _ in range(n_phases - 1):
+        prev = phases[-1]
+        phases.append(dataclasses.replace(
+            prev, task_load=prev.task_load
+            * rng.lognormal(0.0, drift, prev.num_tasks)))
+    return phases
+
+
+# ----------------------------------------------------------------- parity
+@pytest.mark.parametrize("seed", range(3))
+def test_pipeline_matches_manual_chaining(seed):
+    phases = _drifting_phases(seed, n_phases=3)
+    pipe = ccm_lb_pipeline(phases, PARAMS, n_iter=2, seed=seed)
+    a = initial_assignment(phases[0], "home")
+    for k, ph in enumerate(phases):
+        ref = ccm_lb(ph, a, PARAMS, n_iter=2, seed=seed + k)
+        run = pipe.runs[k]
+        np.testing.assert_array_equal(run.result.assignment, ref.assignment)
+        assert run.result.transfers == ref.transfers
+        assert run.result.max_work == ref.max_work
+        assert run.result.imbalance == ref.imbalance
+        a = ref.assignment
+    assert [r.csr_reused for r in pipe.runs] == [False, True, True]
+    assert [r.warm_started for r in pipe.runs] == [False, True, True]
+
+
+def test_pipeline_identical_repeated_phases_warm_start_is_noop_after_first():
+    """Identical repeated phases: phase k>0 starts at phase k-1's optimum,
+    so warm runs match per-phase ccm_lb chaining trajectory-exactly and
+    carry the full task set."""
+    base = _drifting_phases(7, n_phases=1)[0]
+    phases = [base] * 4
+    pipe = ccm_lb_pipeline(phases, PARAMS, n_iter=2, seed=0)
+    a = initial_assignment(base, "home")
+    for k in range(4):
+        ref = ccm_lb(base, a, PARAMS, n_iter=2, seed=k)
+        np.testing.assert_array_equal(pipe.runs[k].result.assignment,
+                                      ref.assignment)
+        assert pipe.runs[k].result.transfers == ref.transfers
+        a = ref.assignment
+    assert all(r.carried_tasks == base.num_tasks for r in pipe.runs[1:])
+    assert all(r.csr_reused for r in pipe.runs[1:])
+    # later phases need (far) fewer transfers than the first
+    assert pipe.runs[-1].result.transfers <= pipe.runs[0].result.transfers
+
+
+def test_pipeline_cold_mode_restarts_every_phase():
+    phases = _drifting_phases(2, n_phases=3)
+    cold = ccm_lb_pipeline(phases, PARAMS, n_iter=2, seed=5,
+                           warm_start=False, reuse_csr=False)
+    for k, (ph, run) in enumerate(zip(phases, cold.runs)):
+        ref = ccm_lb(ph, initial_assignment(ph, "home"), PARAMS, n_iter=2,
+                     seed=5 + k)
+        np.testing.assert_array_equal(run.result.assignment, ref.assignment)
+        assert not run.csr_reused and not run.warm_started
+
+
+def test_pipeline_per_phase_params():
+    phases = _drifting_phases(3, n_phases=2)
+    plist = [CCMParams(delta=1e-9), CCMParams(alpha=1.0, beta=2e-9,
+                                              delta=1e-9)]
+    pipe = ccm_lb_pipeline(phases, plist, n_iter=2, seed=1)
+    a = initial_assignment(phases[0], "home")
+    for k, (ph, p) in enumerate(zip(phases, plist)):
+        ref = ccm_lb(ph, a, p, n_iter=2, seed=1 + k)
+        np.testing.assert_array_equal(pipe.runs[k].result.assignment,
+                                      ref.assignment)
+        a = ref.assignment
+    with pytest.raises(ValueError, match="params sequence"):
+        ccm_lb_pipeline(phases, [PARAMS], n_iter=1)
+
+
+# ------------------------------------------------------------- unit pieces
+def test_same_topology():
+    a = _drifting_phases(4, n_phases=2)
+    assert same_topology(a[0], a[1])        # load drift keeps topology
+    assert same_topology(a[0], a[0])
+    b = dataclasses.replace(a[0], comm_vol=a[0].comm_vol * 2.0)
+    assert same_topology(a[0], b)           # volumes don't enter the CSR
+    c = dataclasses.replace(
+        a[0], comm_src=np.roll(a[0].comm_src, 1))
+    assert not same_topology(a[0], c)
+    d = dataclasses.replace(
+        a[0], task_block=np.where(a[0].task_block == 0, -1,
+                                  a[0].task_block))
+    assert not same_topology(a[0], d)
+
+
+def test_warm_start_assignment_positional_and_ids():
+    prev = _drifting_phases(5, n_phases=1, ranks=6, tasks=30)[0]
+    prev_assign = initial_assignment(prev, "round_robin")
+    # positional: same count -> carried verbatim
+    out, carried = warm_start_assignment(prev, prev_assign, prev)
+    np.testing.assert_array_equal(out, prev_assign)
+    assert carried == prev.num_tasks
+    # id-mapped: next phase keeps tasks 10..29 and adds 5 new ones
+    keep = np.arange(10, 30)
+    next_phase = dataclasses.replace(
+        prev,
+        task_load=np.concatenate([prev.task_load[keep], np.ones(5)]),
+        task_mem=np.concatenate([prev.task_mem[keep], np.zeros(5)]),
+        task_overhead=np.concatenate([prev.task_overhead[keep],
+                                      np.zeros(5)]),
+        task_block=np.concatenate([prev.task_block[keep],
+                                   np.full(5, -1, np.int64)]),
+        comm_src=np.zeros(0, np.int64), comm_dst=np.zeros(0, np.int64),
+        comm_vol=np.zeros(0))
+    prev_ids = np.arange(30)
+    next_ids = np.concatenate([keep, np.arange(100, 105)])
+    out, carried = warm_start_assignment(prev, prev_assign, next_phase,
+                                         prev_ids=prev_ids,
+                                         next_ids=next_ids)
+    assert carried == 20
+    np.testing.assert_array_equal(out[:20], prev_assign[keep])
+    base = initial_assignment(next_phase, "home")
+    np.testing.assert_array_equal(out[20:], base[20:])
+    # mismatched counts without ids: no carry
+    out, carried = warm_start_assignment(prev, prev_assign, next_phase)
+    assert carried == 0
+    # empty previous phase with ids: falls back to base instead of crashing
+    empty_prev = dataclasses.replace(
+        prev, task_load=np.zeros(0), task_mem=np.zeros(0),
+        task_overhead=np.zeros(0), task_block=np.zeros(0, np.int64),
+        comm_src=np.zeros(0, np.int64), comm_dst=np.zeros(0, np.int64),
+        comm_vol=np.zeros(0))
+    out, carried = warm_start_assignment(
+        empty_prev, np.zeros(0, np.int64), next_phase,
+        prev_ids=np.zeros(0, np.int64), next_ids=next_ids)
+    assert carried == 0
+    np.testing.assert_array_equal(out, initial_assignment(next_phase,
+                                                          "home"))
+
+
+def test_pipeline_phase_validates_ids():
+    ph = _drifting_phases(6, n_phases=1, tasks=20)[0]
+    with pytest.raises(ValueError, match="one id per task"):
+        PipelinePhase(ph, task_ids=np.arange(5))
+
+
+def test_initial_assignment_blockless_home_mode():
+    """Regression: 'home' mode on a blockless phase (pipeline-stage /
+    seqpack mappings) used to index an empty block_home array."""
+    k = 12
+    ph = Phase(task_load=np.ones(k), task_mem=np.zeros(k),
+               task_overhead=np.zeros(k),
+               task_block=np.full(k, -1, np.int64),
+               block_size=np.zeros(0), block_home=np.zeros(0, np.int64),
+               comm_src=np.zeros(0, np.int64), comm_dst=np.zeros(0, np.int64),
+               comm_vol=np.zeros(0), rank_mem_base=np.zeros(4),
+               rank_mem_cap=np.full(4, np.inf))
+    np.testing.assert_array_equal(initial_assignment(ph, "home"),
+                                  np.arange(k) % 4)
+
+
+# ------------------------------------------------- balance/ entry points
+def test_rebalance_sequences_stream_smoke():
+    from repro.balance import rebalance_sequences, rebalance_sequences_stream
+    rng = np.random.default_rng(0)
+    batches = [rng.lognormal(0.0, 0.8, 64) for _ in range(3)]
+    stream = rebalance_sequences_stream(batches, 8, seed=0)
+    assert len(stream) == 3
+    for r in stream:
+        assert r.imbalance_after <= r.imbalance_before + 1e-12
+    # first step == the single-batch planner (same seed, same start)
+    solo = rebalance_sequences(batches[0], 8, seed=0)
+    np.testing.assert_array_equal(stream[0].assignment, solo.assignment)
+
+
+def test_plan_pipeline_stages_schedule_smoke():
+    pytest.importorskip("jax")
+    from repro import configs
+    from repro.balance import plan_pipeline_stages_schedule
+    cfg = configs.get_config("tinyllama-1.1b")
+    plans = plan_pipeline_stages_schedule(cfg, 4, [1024, 2048, 4096],
+                                          seed=0)
+    assert len(plans) == 3
+    for p in plans:
+        assert p.assignment.shape[0] == len(cfg.layer_kinds())
+        assert np.bincount(p.assignment, minlength=4).min() >= 1
