@@ -9,7 +9,13 @@ from __future__ import annotations
 
 import os
 
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+if __name__ == "__main__":
+    # script-only: the 512-virtual-device mesh needs the flag set before
+    # JAX initializes.  Must NOT run on plain import — benchmarks.run
+    # auto-imports every benchmarks module, and leaking this flag would
+    # distort the other benches' timings (and their BENCH_*.json records)
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=512")
 
 import argparse  # noqa: E402
 import dataclasses  # noqa: E402

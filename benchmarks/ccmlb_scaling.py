@@ -1,18 +1,21 @@
 """§IV scalability: CCM-LB solve time + quality vs rank count / fanout /
 rounds (the paper reports <0.7 s at 14 ranks; we sweep up to 256).
 
-Each rank-count config runs four times — scalar reference path
+Each rank-count config runs six times — scalar reference path
 (``use_engine=False``), the engine with full per-event state re-gathering
 (``incremental=False``, the rebuild reference), the incremental engine
-(``use_engine=True``, the default), and the incremental engine with batched
-lock events (``batch_lock_events=BATCH_EVENTS``: up to that many disjoint
-rank pairs scored per flush through one block-diagonal flow assembly) —
-and the results land in ``BENCH_ccmlb_scaling.json`` so the perf trajectory
-(engine/batched speedups AND the incremental-vs-rebuild delta) is tracked
-from PR to PR.  Every run of a config is checked for assignment identity
-(recorded as ``identical_assignments`` and asserted here; see
-repro/core/engine.py for the contract), so the speedup columns are apples
-to apples.
+(``use_engine=True``, the default), the compiled bucketed-jit scorer
+(``backend="jit"``), and the batched variants of both engine backends
+(``batch_lock_events=BATCH_EVENTS``: up to that many disjoint rank pairs
+scored per flush through one block-diagonal flow assembly / one compiled
+launch) — and the results land in ``BENCH_ccmlb_scaling.json`` so the perf
+trajectory (engine/jit/batched speedups AND the incremental-vs-rebuild
+delta) is tracked from PR to PR.  The jit buckets are pre-compiled
+(``scorer_jit.warmup``) so the timed region is the steady-state runtime;
+XLA compile latency is reported separately as ``jit_warmup_seconds``.
+Every run of a config is checked for assignment identity (recorded as
+``identical_assignments`` and asserted here; see repro/core/engine.py for
+the contract), so the speedup columns are apples to apples.
 """
 from __future__ import annotations
 
@@ -24,10 +27,14 @@ import numpy as np
 
 from repro.core import CCMParams, CCMState, ccm_lb, random_phase
 from repro.core.problem import initial_assignment
+from repro.kernels.ccm_scorer import jit as scorer_jit
 
 JSON_PATH = os.environ.get("BENCH_CCMLB_JSON", "BENCH_ccmlb_scaling.json")
 N_ITER = 4
 BATCH_EVENTS = 8
+# PR 3's recorded largest-config numbers (likely a different machine; the
+# scalar config anchors the machine-speed comparison)
+PR3_RECORDED = {"scalar": 65.0, "engine": 12.96, "batched": 8.76}
 
 
 def run(report):
@@ -36,6 +43,11 @@ def run(report):
     speedup_largest = None
     batched_speedup_largest = None
     incremental_delta_largest = None
+    jit_seconds_largest = None
+    batched_jit_seconds_largest = None
+    t0 = time.perf_counter()
+    scorer_jit.warmup(max_batch=BATCH_EVENTS)
+    jit_warmup_seconds = time.perf_counter() - t0
     for ranks in (16, 64, 256):
         phase = random_phase(1, num_ranks=ranks, num_tasks=25 * ranks,
                              num_blocks=3 * ranks, num_comms=50 * ranks,
@@ -48,8 +60,11 @@ def run(report):
         configs = (("scalar", dict(use_engine=False)),
                    ("rebuild", dict(use_engine=True, incremental=False)),
                    ("engine", dict(use_engine=True)),
+                   ("jit", dict(use_engine=True, backend="jit")),
                    ("batched", dict(use_engine=True,
-                                    batch_lock_events=BATCH_EVENTS)))
+                                    batch_lock_events=BATCH_EVENTS)),
+                   ("batched_jit", dict(use_engine=True, backend="jit",
+                                        batch_lock_events=BATCH_EVENTS)))
         for tag, kw in configs:
             t0 = time.perf_counter()
             res = ccm_lb(phase, a0, params, n_iter=N_ITER, k_rounds=2,
@@ -67,6 +82,7 @@ def run(report):
                 "comms": phase.num_comms,
                 "n_iter": N_ITER,
                 "engine": kw.get("use_engine", True),
+                "backend": kw.get("backend", "numpy"),
                 "incremental": kw.get("incremental", True),
                 "batch_lock_events": kw.get("batch_lock_events", 1),
                 "seconds": dt,
@@ -77,23 +93,30 @@ def run(report):
             })
         # ratio goes in the derived column only — the us_per_call column
         # stays a call time so the CSV is uniformly parseable
+        others = ("rebuild", "engine", "jit", "batched", "batched_jit")
         identical = bool(all(
             np.array_equal(assignments[t], assignments["scalar"])
-            for t in ("rebuild", "engine", "batched")))
+            for t in others))
         assert identical, \
-            f"engine/batched/scalar trajectories diverged at {ranks} ranks"
+            f"engine/jit/batched/scalar trajectories diverged at {ranks}"
         speedup = times["scalar"] / times["engine"]
         batched_speedup = times["scalar"] / times["batched"]
         incr_delta = times["rebuild"] / times["engine"]
+        jit_speedup = times["scalar"] / times["jit"]
+        batched_jit_speedup = times["scalar"] / times["batched_jit"]
         report(f"ccmlb_ranks_{ranks}_speedup", 0.0,
-               f"engine {speedup:.2f}x, batched({BATCH_EVENTS}) "
-               f"{batched_speedup:.2f}x over scalar, incremental "
-               f"{incr_delta:.2f}x over rebuild, identical assignments")
-        for k in range(-4, 0):
+               f"engine {speedup:.2f}x, jit {jit_speedup:.2f}x, "
+               f"batched({BATCH_EVENTS}) {batched_speedup:.2f}x, "
+               f"batched_jit {batched_jit_speedup:.2f}x over scalar, "
+               f"incremental {incr_delta:.2f}x over rebuild, "
+               "identical assignments")
+        for k in range(-len(configs), 0):
             records[k]["identical_assignments"] = identical
         speedup_largest = speedup
         batched_speedup_largest = batched_speedup
         incremental_delta_largest = incr_delta
+        jit_seconds_largest = times["jit"]
+        batched_jit_seconds_largest = times["batched_jit"]
 
     # fanout/round sweep at 64 ranks (engine path — the default)
     phase = random_phase(2, num_ranks=64, num_tasks=1600, num_blocks=192,
@@ -121,7 +144,14 @@ def run(report):
         "engine_speedup_largest_config": speedup_largest,
         "batched_speedup_largest_config": batched_speedup_largest,
         "incremental_over_rebuild_largest_config": incremental_delta_largest,
+        "jit_seconds_largest_config": jit_seconds_largest,
+        "batched_jit_seconds_largest_config": batched_jit_seconds_largest,
+        "jit_warmup_seconds": jit_warmup_seconds,
+        "jit_buckets_compiled": scorer_jit.bucket_cache_size(),
         "batch_lock_events": BATCH_EVENTS,
+        # PR 3's recorded largest-config times; divide by this run's scalar
+        # time over PR3_RECORDED["scalar"] to normalize machine speed
+        "pr3_recorded_largest_config": PR3_RECORDED,
     }
     with open(JSON_PATH, "w") as f:
         json.dump(payload, f, indent=2)

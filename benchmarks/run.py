@@ -1,40 +1,109 @@
 """Benchmark harness: one module per paper table/figure (+ beyond-paper).
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Discovers every ``benchmarks/*.py`` module exposing a ``run(report)``
+callable (no hand-maintained registry — a new benchmark file is picked up
+automatically), prints ``name,us_per_call,derived`` CSV rows while running,
+and finishes with one summary table of every ``BENCH_*.json`` artifact in
+the working directory so the whole perf trajectory is visible in one
+place.
 
   PYTHONPATH=src python -m benchmarks.run            # all
-  PYTHONPATH=src python -m benchmarks.run fig4a      # filter by substring
+  PYTHONPATH=src python -m benchmarks.run ccmlb      # filter by substring
+  PYTHONPATH=src python -m benchmarks.run --summary  # just the table
 """
 from __future__ import annotations
 
+import glob
+import importlib
+import json
+import pkgutil
 import sys
 import traceback
 
-from benchmarks import (assembly_scaling, ccmlb_pipeline, ccmlb_scaling,
-                        costmodel_eval, delta_sweep, expert_placement,
-                        kernels_bench, milp_vs_ccmlb, roofline)
+import benchmarks
 
-MODULES = [
-    ("fig4a_milp_vs_ccmlb", milp_vs_ccmlb),
-    ("fig4b_delta_sweep", delta_sweep),
-    ("fig5_assembly_scaling", assembly_scaling),
-    ("costmodel", costmodel_eval),
-    ("ccmlb_scaling", ccmlb_scaling),
-    ("ccmlb_pipeline", ccmlb_pipeline),
-    ("kernels", kernels_bench),
-    ("expert_placement", expert_placement),
-    ("roofline", roofline),
-]
+# preferred display names (and run order) for the paper-figure modules;
+# discovered modules not listed here run afterwards in alphabetical order
+DISPLAY = {
+    "milp_vs_ccmlb": "fig4a_milp_vs_ccmlb",
+    "delta_sweep": "fig4b_delta_sweep",
+    "assembly_scaling": "fig5_assembly_scaling",
+    "costmodel_eval": "costmodel",
+    "kernels_bench": "kernels",
+}
+ORDER = ["milp_vs_ccmlb", "delta_sweep", "assembly_scaling", "costmodel_eval",
+         "ccmlb_scaling", "ccmlb_pipeline", "scorer_paths", "kernels_bench",
+         "expert_placement", "roofline"]
+
+
+def discover():
+    """(display_name, module) for every benchmarks submodule with run()."""
+    names = [m.name for m in pkgutil.iter_modules(benchmarks.__path__)
+             if m.name not in ("run", "render_experiments")]
+    names.sort(key=lambda n: (ORDER.index(n) if n in ORDER else len(ORDER), n))
+    out = []
+    for name in names:
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+        except Exception:
+            traceback.print_exc()
+            continue
+        if callable(getattr(mod, "run", None)):
+            out.append((DISPLAY.get(name, name), mod))
+    return out
+
+
+def _fmt(v) -> str:
+    if isinstance(v, bool):
+        return str(v)
+    if isinstance(v, float):
+        return f"{v:.3f}"
+    return str(v)
+
+
+def summarize_bench_json(out=print):
+    """One table over every BENCH_*.json: headline scalar fields per file."""
+    paths = sorted(glob.glob("BENCH_*.json"))
+    if not paths:
+        out("(no BENCH_*.json artifacts found)")
+        return
+    rows = []
+    for path in paths:
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except Exception as exc:  # unreadable artifact: surface, don't die
+            rows.append((path, [f"UNREADABLE: {exc}"]))
+            continue
+        fields = [f"{k}={_fmt(v)}" for k, v in payload.items()
+                  if isinstance(v, (int, float, bool))
+                  and not isinstance(v, str)]
+        n = len(payload.get("results", []))
+        if n:
+            fields.insert(0, f"records={n}")
+        rows.append((path, fields))
+    width = max(len(p) for p, _ in rows)
+    out("")
+    out("=" * 72)
+    out("BENCH_*.json summary")
+    out("=" * 72)
+    for path, fields in rows:
+        out(f"{path:<{width}}  {'; '.join(fields) if fields else '-'}")
+    out("=" * 72)
 
 
 def main() -> None:
-    filt = sys.argv[1] if len(sys.argv) > 1 else ""
+    args = [a for a in sys.argv[1:]]
+    if "--summary" in args:
+        summarize_bench_json()
+        return
+    filt = args[0] if args else ""
     print("name,us_per_call,derived")
 
     def report(name: str, us: float, derived: str = ""):
         print(f"{name},{us:.1f},{derived}", flush=True)
 
-    for name, mod in MODULES:
+    for name, mod in discover():
         if filt and filt not in name:
             continue
         try:
@@ -42,6 +111,7 @@ def main() -> None:
         except Exception:
             traceback.print_exc()
             report(f"{name}_FAILED", 0.0, "see stderr")
+    summarize_bench_json()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,144 @@
+"""Per-event scorer-path latency: numpy vs jit vs pallas-interpret vs
+pallas-compiled across candidate counts.
+
+One *event* is a (rank a, rank b) lock negotiation: an (na+1) x (nb+1)
+candidate-pair tile plus a 32-pair shortlist.  This benchmark times the
+whole per-event scoring round trip through the bucketed launcher
+(``jit.score_events``: pack -> score -> gather -> host combine) for each
+backend at candidate counts {8, 32, 128, 512} and writes
+``BENCH_scorer_paths.json``.
+
+What it shows (and the CI assertion): the numpy reference's cost grows
+with the tile area (~80 elementwise ops over (na+1)x(nb+1) lanes), while
+the compiled jit path pays a roughly flat dispatch+sync latency — on CPU
+the two cross between 8 and 32 candidates, so the jit path must beat
+numpy at every count >= 32 (asserted below).  At the default
+``max_candidates=12`` the two are near parity on CPU, which is why the
+engine keeps ``backend="numpy"`` as its default there; the pallas-compiled
+f32 path is the TPU deployment shape (B padded to 128 lanes) and runs here
+through its interpret fallback for layout validation, not speed.
+
+Usage:  PYTHONPATH=src python benchmarks/scorer_paths.py [--quick]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.core.problem import CCMParams
+from repro.kernels.ccm_scorer import jit as scorer_jit
+from repro.kernels.ccm_scorer.layout import N_AV, N_PM, N_SC, SC
+
+JSON_PATH = os.environ.get("BENCH_SCORER_PATHS_JSON",
+                           "BENCH_scorer_paths.json")
+COUNTS = (8, 32, 128, 512)
+QUICK_COUNTS = (8, 32)
+SHORTLIST = 32
+ASSERT_FROM = 32     # jit must beat numpy at every count >= this
+
+
+def _event(rng, n):
+    """Random feature tile of an event with na = nb = n candidates."""
+    av = rng.uniform(0.1, 2.0, (N_AV, n + 1))
+    bv = rng.uniform(0.1, 2.0, (N_AV, n + 1))
+    pm = rng.uniform(0.0, 1.0, (N_PM, n + 1, n + 1))
+    sc = rng.uniform(0.5, 3.0, N_SC)
+    sc[SC.na] = sc[SC.nb] = n
+    sc[SC.speed_a] = sc[SC.speed_b] = 1.0
+    sc[SC.mem_cap_a] = sc[SC.mem_cap_b] = 1e12
+    ia, ib = np.divmod(np.arange(1, SHORTLIST + 1, dtype=np.int64), n + 1)
+    pairs = np.stack([ia % (n + 1), ib], axis=1)
+    return (av, bv, pm, sc), pairs
+
+
+def _time_backend(feats, pairs, params, backend, reps):
+    call = lambda: scorer_jit.score_events(  # noqa: E731
+        [feats], [pairs], params, backend=backend)
+    call()                                   # warm (compiles its bucket)
+    best = np.inf
+    for _ in range(3):                       # best-of-3: shields the CI
+        t0 = time.perf_counter()             # assertion from load spikes
+        for _ in range(reps):
+            call()
+        best = min(best, (time.perf_counter() - t0) / reps * 1e6)
+    return best
+
+
+def run(report, quick: bool = False):
+    quick = quick or os.environ.get("BENCH_QUICK") == "1"
+    counts = QUICK_COUNTS if quick else COUNTS
+    params = CCMParams(delta=1e-9)
+    rng = np.random.default_rng(0)
+    records = []
+    violations = []
+    for n in counts:
+        feats, pairs = _event(rng, n)
+        # pallas interpret walks every lane in the Python interpreter —
+        # cap its reps so large tiles stay affordable
+        reps = {8: 200, 32: 100, 128: 30, 512: 10}.get(n, 20)
+        if quick:
+            reps = max(5, reps // 4)
+        per = {}
+        for backend in ("numpy", "jit", "pallas", "pallas_compiled"):
+            p_reps = reps if backend in ("numpy", "jit") else \
+                max(2, reps // 10)
+            per[backend] = _time_backend(feats, pairs, params, backend,
+                                         p_reps)
+            records.append({
+                "candidates": n,
+                "backend": backend,
+                "us_per_event": per[backend],
+                "speedup_vs_numpy": per["numpy"] / per[backend],
+            })
+            report(f"scorer_{backend}_n{n}", per[backend],
+                   f"{per['numpy'] / per[backend]:.2f}x vs numpy")
+        if n >= ASSERT_FROM and per["jit"] >= per["numpy"]:
+            # re-measure once with more reps before declaring a violation:
+            # at the crossover count the margin is real but small, and a
+            # shared-runner load spike can invert a single measurement
+            re_np = _time_backend(feats, pairs, params, "numpy", 2 * reps)
+            re_jit = _time_backend(feats, pairs, params, "jit", 2 * reps)
+            if re_jit >= re_np:
+                violations.append((n, re_np, re_jit))
+
+    payload = {
+        "benchmark": "scorer_paths",
+        "quick": quick,
+        "shortlist": SHORTLIST,
+        "pallas_compiled_fallback": scorer_jit.pallas_compiled_fallback(),
+        "jit_buckets_compiled": scorer_jit.bucket_cache_size(),
+        "results": records,
+        "jit_beats_numpy_from": ASSERT_FROM,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    report("scorer_paths_json", 0.0, f"written to {JSON_PATH}")
+    if violations and quick:
+        # quick mode runs on shared CI runners where a load spike spanning
+        # both measurements can invert the narrow n=32 margin — surface
+        # loudly, but only the full benchmark run enforces the bar
+        report("scorer_paths_WARN", 0.0,
+               f"jit did not beat numpy at (n, numpy_us, jit_us): "
+               f"{violations} (quick mode: warning only)")
+        return
+    assert not violations, (
+        "jit path must beat numpy per-event latency at every candidate "
+        f"count >= {ASSERT_FROM}; got (n, numpy_us, jit_us): {violations}")
+
+
+def main():
+    quick = "--quick" in sys.argv
+    print("name,us_per_call,derived")
+
+    def report(name, us, derived=""):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    run(report, quick=quick)
+
+
+if __name__ == "__main__":
+    main()

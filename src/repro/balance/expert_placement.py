@@ -110,8 +110,11 @@ def plan_expert_placement(counts: np.ndarray, cfg: ModelConfig,
     """Plan an expert placement with CCM-LB.  ``use_engine`` selects the
     vectorized evaluation engine (default; the scalar reference path gives
     identical plans — the knob exists for A/B benchmarking); ``backend``
-    and ``batch_lock_events`` tune the engine's stage-2 scorer (Pallas
-    kernel / deferred disjoint-pair batching, both trajectory-exact)."""
+    ({"numpy", "jit", "pallas", "pallas_compiled"} — the compiled
+    shape-bucketed jit runtime and the Pallas kernel are bitwise-equal to
+    numpy in f64, see kernels/ccm_scorer/README.md) and
+    ``batch_lock_events`` tune the engine's stage-2 scorer (deferred
+    disjoint-pair batching, trajectory-exact)."""
     l_n, e_n = counts.shape
     assert e_n % n_devices == 0
     phase = phase_from_router_stats(counts, cfg, n_devices,

@@ -118,6 +118,10 @@ def plan_pipeline_stages(cfg: ModelConfig, n_stages: int, *,
                          use_engine: bool = True,
                          backend: str = "numpy",
                          batch_lock_events: int = 1) -> StagePlan:
+    """``backend`` selects the engine's stage-2 scorer ("numpy"/"jit"/
+    "pallas"/"pallas_compiled" — the f64 tiers plan identically; see
+    kernels/ccm_scorer/README.md); ``batch_lock_events`` defers and
+    batches disjoint lock events, trajectory-exact."""
     phase = _stage_phase(cfg, n_stages, tokens_per_microbatch,
                          hbm_budget_bytes)
     l_n = phase.num_tasks

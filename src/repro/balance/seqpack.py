@@ -66,7 +66,11 @@ def rebalance_sequences(costs: np.ndarray, n_ranks: int, *,
                         use_engine: bool = True,
                         backend: str = "numpy",
                         batch_lock_events: int = 1) -> SeqPackResult:
-    """costs: (n_seqs,) predicted step-time contribution per sequence."""
+    """costs: (n_seqs,) predicted step-time contribution per sequence.
+
+    ``backend`` selects the engine's stage-2 scorer ("numpy"/"jit"/
+    "pallas"/"pallas_compiled"; the f64 tiers pack identically — see
+    kernels/ccm_scorer/README.md)."""
     k = costs.shape[0]
     phase = _seq_phase(costs, n_ranks, rank_speed, act_bytes, mem_cap)
     a0 = (np.arange(k) % n_ranks).astype(np.int64)

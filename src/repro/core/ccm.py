@@ -88,6 +88,12 @@ class CCMState:
         vectorized engine."""
         ph = self.phase
         self.csr = csr if csr is not None else PhaseCSR.from_phase(ph)
+        # monotonically increasing mutation counter: bumped by every
+        # apply_transfer, so derived-value caches (engine block terms, vol
+        # row sums, incident-edge sets, per-rank work) can validate with
+        # one int compare and recompute bitwise-identically on miss
+        self.version = 0
+        self._work_cache: Dict[int, Tuple[int, float]] = {}
         # transfer listeners: every mutation (apply_transfer/swap) is
         # reported AFTER the state is consistent, so long-lived observers
         # (PhaseEngine's incremental rank segments) can update in place
@@ -149,15 +155,23 @@ class CCMState:
         return self.max_memory(r) <= self.phase.rank_mem_cap[r] + 1e-6
 
     def work(self, r: int) -> float:
-        """W(r) (eq. 13)."""
+        """W(r) (eq. 13).  Cached per state version: the hot path asks for
+        the same rank's work several times between transfers (lock-event
+        w_before, stage traces), and a hit returns the float the recompute
+        produced — bitwise-neutral."""
+        hit = self._work_cache.get(r)
+        if hit is not None and hit[0] == self.version:
+            return hit[1]
         p = self.params
         if p.memory_constraint and not self.memory_feasible(r):
-            return INF
-        w = (p.alpha * self.load[r] / self.phase.rank_speed[r]
-             + p.beta * self.off_rank_volume(r)
-             + p.gamma * self.on_rank_volume(r)
-             + p.delta * self.homing_cost(r))
-        return float(w)
+            w = INF
+        else:
+            w = float(p.alpha * self.load[r] / self.phase.rank_speed[r]
+                      + p.beta * self.off_rank_volume(r)
+                      + p.gamma * self.on_rank_volume(r)
+                      + p.delta * self.homing_cost(r))
+        self._work_cache[r] = (self.version, w)
+        return w
 
     def all_work(self) -> np.ndarray:
         return np.array([self.work(r) for r in range(self.phase.num_ranks)])
@@ -178,6 +192,7 @@ class CCMState:
     def apply_transfer(self, tasks: Sequence[int], r_from: int, r_to: int):
         """Mutate state: move tasks from r_from to r_to (update formulae)."""
         ph = self.phase
+        self.version += 1
         tasks = np.asarray(list(tasks), np.int64)
         assert (self.assignment[tasks] == r_from).all()
         self.assignment[tasks] = r_to

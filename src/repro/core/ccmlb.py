@@ -34,8 +34,12 @@ scan returns (parity guarantee: tests/test_incremental.py asserts segments
 and end-to-end trajectories against ``incremental=False``, the full
 re-gather reference that remains available for A/B benchmarking).
 
-``backend`` selects the engine's stage-4 tile scorer ("numpy" or the
-Pallas ``ccm_scorer`` kernel, bitwise-equal in interpret mode).
+``backend`` selects the engine's stage-4 tile scorer: ``"numpy"`` (the
+reference), ``"jit"`` (the shape-bucketed compiled runtime — scores are
+bitwise-equal to numpy, one XLA compile per shape bucket), ``"pallas"``
+(the kernel in interpret mode, bitwise-equal) or ``"pallas_compiled"``
+(f32 tiles on the 128-lane boundary; assignment-identity parity tier).
+See repro/kernels/ccm_scorer/README.md for the backend matrix.
 
 Batched lock events: ``batch_lock_events=k`` defers the scoring of up to
 ``k`` executable lock events whose rank pairs are pairwise disjoint, then

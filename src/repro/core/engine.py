@@ -66,12 +66,18 @@ batched scorer computes exactly the same model:
     same order — so the degenerate comm-free instances where ties actually
     occur (equal integer-ish loads, beta=gamma=delta=0) stay in lockstep;
     with continuous comm volumes, sub-ulp near-ties have measure zero.
-  * the two engine backends (``backend="numpy"`` and ``backend="pallas"``
-    in interpret mode) are BITWISE-equal on scores and feasibility: both
-    consume the same packed feature tiles (built here, reductions on the
-    host) and evaluate the same multiplication-free expression tree (see
-    repro/kernels/ccm_scorer), then share one host-side work combine.
-    tests/test_ccm_scorer.py asserts it.
+  * the f64 engine backends (``backend="numpy"``, ``backend="jit"`` — the
+    bucketed compiled pipeline — and ``backend="pallas"`` in interpret
+    mode) are BITWISE-equal on scores and feasibility: all consume the
+    same packed feature tiles (built here, reductions on the host) and
+    evaluate the same multiplication-free expression tree (see
+    repro/kernels/ccm_scorer; the numpy and jit paths literally share it
+    via ``ref.score_tiles_xp``), then share one host-side work combine
+    applied to the gathered shortlist pairs (``ops.combine_work_pairs`` —
+    elementwise, so gather-then-combine equals combine-then-gather bit for
+    bit).  tests/test_ccm_scorer.py and tests/test_scorer_jit.py assert
+    it.  ``backend="pallas_compiled"`` scores in f32 on 128-lane tiles and
+    sits in the weaker assignment-identity parity tier.
 
 Stage-2 decomposition
 ---------------------
@@ -113,6 +119,7 @@ import numpy as np
 
 from repro.core.ccm import CCMState, INF
 from repro.core.csr import CSR, PhaseCSR, rank_segments
+from repro.kernels.ccm_scorer import jit as scorer_jit
 from repro.kernels.ccm_scorer import layout as L
 from repro.kernels.ccm_scorer import ops as scorer_ops
 
@@ -174,15 +181,21 @@ class PhaseEngine:
     ``incremental=False`` re-gathers rank membership from the assignment on
     every use: the full-rebuild parity reference.
 
-    ``backend`` selects the stage-2 tile scorer: ``"numpy"`` (the
-    reference, repro/kernels/ccm_scorer/ref.py) or ``"pallas"`` (the
-    kernel; ``interpret=True`` runs it through the Pallas interpreter on
-    CPU, where it is bitwise-equal to numpy — the CI-exercised path).
+    ``backend`` selects the stage-2 tile scorer (all four route through the
+    shape-bucketed launcher, repro/kernels/ccm_scorer/jit.py):
+    ``"numpy"`` (the reference, repro/kernels/ccm_scorer/ref.py), ``"jit"``
+    (bucketed compiled f64 pipeline — one XLA compile per shape bucket,
+    bitwise-equal to numpy on every score), ``"pallas"`` (the kernel;
+    ``interpret=True`` runs it through the Pallas interpreter on CPU, where
+    it is bitwise-equal to numpy — the CI-exercised path) and
+    ``"pallas_compiled"`` (f32 tiles on the 128-lane boundary,
+    ``interpret=False`` where a compile target exists, f32-interpret
+    fallback otherwise; assignment-identity parity tier, not bitwise).
     """
 
     def __init__(self, state: CCMState, backend: str = "numpy",
                  interpret: bool = True, incremental: bool = True):
-        if backend not in ("numpy", "pallas"):
+        if backend not in scorer_ops.BACKENDS:
             raise ValueError(f"unknown engine backend: {backend!r}")
         self.state = state
         self.phase = state.phase
@@ -197,6 +210,13 @@ class PhaseEngine:
         # list when a rank's clusters are rebuilt) and pins its id.
         self._agg: Dict[int, Tuple[list, ClusterAggregates,
                                    Optional[int]]] = {}
+        # version-validated caches of per-event quantities that only change
+        # when a transfer mutates the state: cached values are the arrays a
+        # recompute would return (same inputs, same ops), so hits are
+        # bitwise-neutral.  Keyed by state.version (one int compare).
+        self._blk_cache: Dict[Tuple[int, int], tuple] = {}
+        self._vol_cache: Dict[int, Tuple[int, float, float]] = {}
+        self._edge_cache: Dict[Tuple[int, int], tuple] = {}
         self._segments: Optional[List[np.ndarray]] = None
         if incremental:
             segs = rank_segments(state.assignment, self.phase.num_ranks)
@@ -318,40 +338,11 @@ class PhaseEngine:
             for e in events]
         flows = self._flow_matrices(events)
         feats = [self._event_features(e, F) for e, F in zip(events, flows)]
-
-        a_pad = max(f[0].shape[1] for f in feats)
-        b_pad = max(f[1].shape[1] for f in feats)
-        if self.backend == "pallas":
-            a_pad = max(8, -(-a_pad // 8) * 8)   # tile hygiene for the kernel
-            b_pad = max(8, -(-b_pad // 8) * 8)
-        e_n = len(events)
-        if e_n == 1 and feats[0][0].shape[1] == a_pad \
-                and feats[0][1].shape[1] == b_pad:
-            # solo event, no padding needed: score the feature views directly
-            av, bv, pm = (f[None] for f in feats[0][:3])
-            sc = feats[0][3][None]
-        else:
-            av = np.zeros((e_n, L.N_AV, a_pad))
-            bv = np.zeros((e_n, L.N_AV, b_pad))
-            pm = np.zeros((e_n, L.N_PM, a_pad, b_pad))
-            sc = np.zeros((e_n, L.N_SC))
-            for k, (av_k, bv_k, pm_k, sc_k) in enumerate(feats):
-                av[k, :, :av_k.shape[1]] = av_k
-                bv[k, :, :bv_k.shape[1]] = bv_k
-                pm[k, :, :pm_k.shape[1], :pm_k.shape[2]] = pm_k
-                sc[k] = sc_k
-
-        out = scorer_ops.ccm_score_tiles(av, bv, pm, sc,
-                                         backend=self.backend,
-                                         interpret=self.interpret)
-        w_a, w_b, feas = scorer_ops.combine_work(out, sc, self.state.params)
-
-        results = []
-        for k, e in enumerate(events):
-            p = np.asarray(e.pairs, np.int64).reshape(-1, 2)
-            ia, ib = p[:, 0], p[:, 1]
-            results.append((w_a[k, ia, ib], w_b[k, ia, ib], feas[k, ia, ib]))
-        return results
+        pairs_list = [np.asarray(e.pairs, np.int64).reshape(-1, 2)
+                      for e in events]
+        return scorer_jit.score_events(feats, pairs_list, self.state.params,
+                                       backend=self.backend,
+                                       interpret=self.interpret)
 
     def _flow_matrices(self, events: Sequence[ExchangeEvent]
                        ) -> List[np.ndarray]:
@@ -381,9 +372,16 @@ class PhaseEngine:
         for k, e in enumerate(events):
             na, nb = len(e.cand_a) - 1, len(e.cand_b) - 1
             G = 3 + na + nb
-            tasks_a = self.rank_tasks(e.r_a)
-            tasks_b = self.rank_tasks(e.r_b)
-            both = np.concatenate([tasks_a, tasks_b])
+            cached = self._edge_cache.get((e.r_a, e.r_b))
+            if cached is not None and cached[0] == self.state.version:
+                both, n_a, eids = cached[1], cached[2], cached[3]
+            else:
+                tasks_a = self.rank_tasks(e.r_a)
+                n_a = tasks_a.shape[0]
+                both = np.concatenate([tasks_a, self.rank_tasks(e.r_b)])
+                eids = np.unique(self.csr.task_edges.gather(both))
+                self._edge_cache[(e.r_a, e.r_b)] = \
+                    (self.state.version, both, n_a, eids)
             if (ev[both] != -1).any():
                 # detected BEFORE this event touches the buffers: roll back
                 # the earlier events' labels so the engine stays usable
@@ -399,12 +397,11 @@ class PhaseEngine:
                                [len(c) for c in cl])
             else:
                 cflat = cg = np.zeros(0, np.int64)
-            g[tasks_a] = 1
-            g[tasks_b] = 2
+            g[both[:n_a]] = 1
+            g[both[n_a:]] = 2
             ev[both] = k
             g[cflat] = cg       # duplicate ids resolve to the LAST write,
             ev[cflat] = k       # matching the per-cluster loop order
-            eids = np.unique(self.csr.task_edges.gather(both))
             metas.append((both, cflat, eids, G, offset))
             offset += G * G
         for k, (both, cflat, eids, G, off) in enumerate(metas):
@@ -509,6 +506,8 @@ class PhaseEngine:
         # bases, mirroring the scalar path's base-plus-dvol structure so
         # both paths share any drift in vol.
         vol_aa, vol_bb = st.vol[r_a, r_a], st.vol[r_b, r_b]
+        row_a, col_a = self._vol_sums(r_a)
+        row_b, col_b = self._vol_sums(r_b)
         sc = np.array([
             row_to_b[1] + row_to_b[sa:sb].sum(),   # f_ab: v(Ra -> Rb)
             row_to_a[2] + row_to_a[sb:].sum(),     # f_ba
@@ -518,10 +517,10 @@ class PhaseEngine:
             F[0, 1] + F[0, sa:sb].sum(),           # f_oa
             F[2, 0] + F[sb:, 0].sum(),             # f_bo
             F[0, 2] + F[0, sb:].sum(),             # f_ob
-            st.vol[r_a].sum() - vol_aa,            # base_sent_a
-            st.vol[:, r_a].sum() - vol_aa,         # base_recv_a
-            st.vol[r_b].sum() - vol_bb,            # base_sent_b
-            st.vol[:, r_b].sum() - vol_bb,         # base_recv_b
+            row_a - vol_aa,                        # base_sent_a
+            col_a - vol_aa,                        # base_recv_a
+            row_b - vol_bb,                        # base_sent_b
+            col_b - vol_bb,                        # base_recv_b
             vol_aa,                                # vol_aa
             vol_bb,                                # vol_bb
             st.load[r_a],                          # load_a
@@ -546,14 +545,34 @@ class PhaseEngine:
         assert sc.shape[0] == L.N_SC
         return av, bv, pm, sc
 
+    def _vol_sums(self, r: int) -> Tuple[float, float]:
+        """(row sum, column sum) of the vol matrix for rank ``r``, cached
+        per state version — transfers between ANY ranks relabel entries of
+        third ranks' rows/columns, so the cache is version-global; a hit
+        returns exactly what the two ``np.sum`` calls produced."""
+        st = self.state
+        hit = self._vol_cache.get(r)
+        if hit is not None and hit[0] == st.version:
+            return hit[1], hit[2]
+        row, col = st.vol[r].sum(), st.vol[:, r].sum()
+        self._vol_cache[r] = (st.version, row, col)
+        return row, col
+
     def _block_terms(self, agg: ClusterAggregates, n: int, r_src: int,
                      r_dst: int):
         """Independent (one-sided) block transition terms for the first
         ``n`` clusters: bytes leaving ``r_src``'s shared/homing caches and
         arriving at ``r_dst``'s (index 0 = empty candidate).  Uses the
-        CURRENT block counters, so it must run per lock event even though
-        the (block, count) pairs themselves are cached."""
+        CURRENT block counters — cached per (src, dst) direction and
+        invalidated by the state version, so repeat events between
+        transfers skip the recompute (the cached arrays ARE what the
+        recompute would return)."""
         st = self.state
+        key = (r_src, r_dst)
+        hit = self._blk_cache.get(key)
+        if hit is not None and hit[0] == st.version and hit[1] is agg \
+                and hit[2] == n:
+            return hit[3]
         hi = np.searchsorted(agg.blk_ci, n)  # blk_ci ascending -> prefix
         ci = agg.blk_ci[:hi] + 1
         ids = agg.blk_ids[:hi]
@@ -568,7 +587,9 @@ class PhaseEngine:
         h_add = np.bincount(
             ci, weights=sizes * (arrives & (agg.blk_home[:hi] != r_dst)),
             minlength=n + 1)
-        return s_rm, h_rm, s_add, h_add
+        terms = (s_rm, h_rm, s_add, h_add)
+        self._blk_cache[key] = (st.version, agg, n, terms)
+        return terms
 
 
 # ---------------------------------------------------------------- stage 1

@@ -171,9 +171,12 @@ def ccm_lb_pipeline(phases: Sequence[Union[Phase, PipelinePhase]],
     the first phase (later phases warm-start from the previous output);
     with ``warm_start=False`` — the cold reference — every phase of
     matching task count starts from ``a0``, or from ``initial_mode`` when
-    ``a0`` is omitted.  Phase ``k`` runs with seed ``seed + k``.  Remaining keyword arguments (``n_iter``, ``fanout``,
-    ``use_engine``, ``backend``, ``batch_lock_events``, ...) pass through
-    to every :func:`ccm_lb` call.
+    ``a0`` is omitted.  Phase ``k`` runs with seed ``seed + k``.
+    Remaining keyword arguments (``n_iter``, ``fanout``, ``use_engine``,
+    ``backend`` — including the compiled ``"jit"`` scorer runtime, whose
+    shape buckets persist across phases so a long stream compiles exactly
+    once — ``batch_lock_events``, ...) pass through to every
+    :func:`ccm_lb` call.
     """
     if not phases:
         raise ValueError("ccm_lb_pipeline needs at least one phase")

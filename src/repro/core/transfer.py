@@ -88,6 +88,24 @@ class BestExchange:
     eval: ExchangeEval
 
 
+_PAIRS_CACHE: dict = {}
+
+
+def _pairs_template(n_a: int, n_b: int) -> np.ndarray:
+    """The full (n_a * n_b - 1, 2) candidate-pair index grid, cached per
+    shape.  The grid is hot-path-invariant and the cached array is marked
+    read-only, so sharing it is safe: consumers only read it, and the one
+    mutation-shaped use (``pairs[order]`` fancy indexing) copies.  Anyone
+    needing a writable grid must copy explicitly."""
+    pairs = _PAIRS_CACHE.get((n_a, n_b))
+    if pairs is None:
+        ia, ib = np.divmod(np.arange(1, n_a * n_b, dtype=np.int64), n_b)
+        pairs = np.stack([ia, ib], axis=1)
+        pairs.setflags(write=False)
+        _PAIRS_CACHE[(n_a, n_b)] = pairs
+    return pairs
+
+
 def shortlist_pairs(state: CCMState, clusters_a: List[np.ndarray],
                     clusters_b: List[np.ndarray], r_a: int, r_b: int,
                     max_candidates: int = 12, shortlist: int = 32,
@@ -119,8 +137,7 @@ def shortlist_pairs(state: CCMState, clusters_a: List[np.ndarray],
                                           limit=max_candidates)
 
     n_a, n_b = len(cand_a), len(cand_b)
-    ia, ib = np.divmod(np.arange(1, n_a * n_b, dtype=np.int64), n_b)
-    pairs = np.stack([ia, ib], axis=1)          # (ia, ib) != (0, 0)
+    pairs = _pairs_template(n_a, n_b)           # (ia, ib) != (0, 0)
     if pairs.shape[0] > shortlist:
         ph = state.phase
         if engine is not None:  # cached, bitwise-equal per-cluster sums
@@ -129,6 +146,7 @@ def shortlist_pairs(state: CCMState, clusters_a: List[np.ndarray],
         else:
             la = np.array([ph.task_load[c].sum() for c in cand_a])
             lb = np.array([ph.task_load[c].sum() for c in cand_b])
+        ia, ib = pairs[:, 0], pairs[:, 1]
         after_a = (state.load[r_a] - la[ia] + lb[ib]) / ph.rank_speed[r_a]
         after_b = (state.load[r_b] + la[ia] - lb[ib]) / ph.rank_speed[r_b]
         score = np.maximum(after_a, after_b)

@@ -1,4 +1,7 @@
+from repro.kernels.ccm_scorer import jit  # noqa: F401
 from repro.kernels.ccm_scorer.layout import (AV, N_AV, N_OUT, N_PM,  # noqa: F401
                                              N_SC, OUT, PM, SC)
-from repro.kernels.ccm_scorer.ops import ccm_score_tiles, combine_work  # noqa: F401
-from repro.kernels.ccm_scorer.ref import score_tiles  # noqa: F401
+from repro.kernels.ccm_scorer.ops import (BACKENDS, ccm_score_tiles,  # noqa: F401
+                                          combine_work, combine_work_pairs)
+from repro.kernels.ccm_scorer.ref import (score_pairs_xp,  # noqa: F401
+                                          score_tiles, score_tiles_xp)

@@ -1,0 +1,461 @@
+"""Compiled shape-bucketed scorer runtime: the jitted event pipeline.
+
+Why buckets
+-----------
+``jax.jit`` specializes on input shapes: every distinct (E, A, B, P)
+quadruple triggers a fresh trace + XLA compile.  Lock-event tiles are small
+but their shapes churn (candidate counts vary per rank pair, shortlists
+vary per event), so naive jitting would re-trace on the hot path — worse
+than the numpy dispatch it replaces.  The launcher therefore pads every
+tile into a small, fixed grid of *shape buckets*:
+
+  * lane dims A/B (padded candidate counts): powers of two in
+    [8, 128], then multiples of 128 — ``bucket_lanes``.  128 is the TPU
+    lane boundary, so a bucket that reaches it stops specializing and
+    grows in whole lanes instead.
+  * the event dim E and the shortlist dim P: powers of two
+    (``bucket_events`` / ``bucket_pairs``; P additionally floors at 32,
+    the default shortlist cap, so one P bucket serves every
+    normally-sized event).
+
+With ``max_candidates=12`` and ``shortlist=32`` a whole CCM-LB trajectory
+touches a handful of buckets; each compiles exactly once
+(tests/test_scorer_jit.py guards the recompile count via
+:func:`trace_count`).
+
+What is fused
+-------------
+One jitted function per bucket evaluates the full scorer expression tree
+(ref.score_tiles_xp traced with ``xp=jax.numpy`` — the SAME source
+expressions as the numpy backend) and gathers the shortlisted (ia, ib)
+pairs, so the host receives (E, P, N_OUT) instead of (E, N_OUT, A, B).
+Padding is invariant by construction: every op in the tree is elementwise
+over the (A, B) tile, so padded lanes cannot perturb real ones, and the
+f64 outputs on real lanes are BITWISE-equal to the unpadded numpy backend
+(adds/subs/maxima/selects only — nothing XLA can re-round).
+
+The affine work combine stays on the host (ops.combine_work_pairs, shared
+by every backend) for the same reason it is not in the Pallas kernel:
+XLA:CPU compiles with ``FPOpFusion::Fast`` at instruction selection, so any
+``mul`` feeding an ``add`` becomes an FMA **regardless of IR-level
+fast-math flags** — measured on this tree: ``jit(0.37*x + 0.21*y)`` equals
+``fma(0.37, x, 0.21*y)``, and neither ``lax.optimization_barrier`` nor
+bitcast round-trips survive the simplifier to block it.  A fused combine
+therefore cannot meet the bitwise f64 parity bar on CPU; combining on the
+(P,)-gathered host side costs ~10 tiny numpy ops per event and keeps the
+contract exact.
+
+The f32 compiled path
+---------------------
+``backend="pallas_compiled"`` packs the same tiles in float32 with B padded
+to the 128-lane boundary (A to the 8-sublane boundary) and launches the
+Pallas kernel with ``interpret=False``.  On hosts without a Pallas compile
+target (CPU CI) the launcher transparently falls back to f32 interpret mode
+— same dtype, same layout, same masked tail — and records it in
+:func:`pallas_compiled_fallback`.  The f32 path's parity bar is
+*assignment identity* on well-separated instances (scores differ from f64
+by ulps of f32), not bitwise equality; tests/test_scorer_jit.py implements
+the bar and reports the ulp budget on adversarial tiles.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.kernels.ccm_scorer import ref
+from repro.kernels.ccm_scorer.layout import N_AV, N_OUT, N_PM, N_SC, OUT, SC
+
+__all__ = ["bucket_lanes", "bucket_events", "bucket_pairs", "score_events",
+           "score_tiles_jit", "score_tiles_f32", "trace_count",
+           "bucket_cache_size", "pallas_compiled_supported",
+           "pallas_compiled_fallback", "LANE_CAP"]
+
+LANE_CAP = 128      # TPU lane boundary: buckets stop doubling here
+_LANE_FLOOR = 8     # sublane quantum; also the smallest useful tile
+
+_TRACE_COUNT = 0          # incremented inside every traced body
+_FN_CACHE: dict = {}      # bucket key -> compiled callable
+_COMPILED_OK: Optional[bool] = None
+_COMPILED_FALLBACK = False
+
+
+# ------------------------------------------------------------- bucket grid
+def bucket_lanes(n: int, *, floor: int = _LANE_FLOOR,
+                 cap: int = LANE_CAP) -> int:
+    """Round a lane count up to the bucket grid: powers of two in
+    [floor, cap], multiples of ``cap`` beyond it."""
+    n = max(int(n), 1)
+    if n <= floor:
+        return floor
+    if n >= cap:
+        return -(-n // cap) * cap
+    return 1 << (n - 1).bit_length()
+
+
+def bucket_events(e: int) -> int:
+    """Event-axis bucket: next power of two (E is small — the
+    ``batch_lock_events`` cap)."""
+    e = max(int(e), 1)
+    return 1 << (e - 1).bit_length()
+
+
+def bucket_pairs(p: int) -> int:
+    """Shortlist-axis bucket: powers of two with a floor of 32 (the default
+    shortlist cap) — one bucket serves every normally-sized event, so P
+    churn cannot multiply the compile count."""
+    p = max(int(p), 1)
+    return max(32, 1 << (p - 1).bit_length())
+
+
+def trace_count() -> int:
+    """How many times a bucketed scorer body has been TRACED (== compiled,
+    barring jax's persistent cache).  The recompile-count guard asserts this
+    stays bounded by the number of distinct buckets."""
+    return _TRACE_COUNT
+
+
+def bucket_cache_size() -> int:
+    return len(_FN_CACHE)
+
+
+# --------------------------------------------------------- compiled bodies
+def _pair_offsets(p: int) -> Tuple[int, ...]:
+    """Cumulative offsets of [avp | bvp | pmp | sc | iaf | ibf | coeffs]
+    in one flat per-event row of the pair-gathered layout (coeffs =
+    alpha/beta/gamma/delta).  A single input array keeps the host->device
+    transfer to ONE numpy conversion per launch — with several separate
+    small arrays the per-array ingest dominates the whole dispatch
+    (~30 us each on CPU)."""
+    o_av = N_AV * p
+    o_bv = o_av + N_AV * p
+    o_pm = o_bv + N_PM * p
+    o_sc = o_pm + N_SC
+    o_ia = o_sc + p
+    o_ib = o_ia + p
+    o_cf = o_ib + 4
+    return o_av, o_bv, o_pm, o_sc, o_ia, o_ib, o_cf
+
+
+def _get_fn(key):
+    """Per-bucket compiled function.  key = (kind, *static shape info)."""
+    fn = _FN_CACHE.get(key)
+    if fn is None:
+        import jax
+        import jax.numpy as jnp
+
+        kind = key[0]
+        if kind == "pairs":
+            # the hot path: pair-gathered scoring.  Tiles are gathered at
+            # the shortlist on the host, so the compiled work is O(P) per
+            # event — independent of the candidate counts — and the bucket
+            # grid collapses to (E, P) keys.  The combine's multiplies and
+            # divides also run here: a lone mul whose result feeds an
+            # OUTPUT (not an add) cannot be FMA-contracted, so the bits
+            # match the host products exactly; only the adds (which XLA
+            # would contract) remain on the host (ops.combine_terms).
+            _, e_n, p_n = key
+            o_av, o_bv, o_pm, o_sc, o_ia, o_ib, o_cf = _pair_offsets(p_n)
+
+            def body(buf):
+                global _TRACE_COUNT
+                _TRACE_COUNT += 1           # runs at trace time only
+                avp = buf[:, :o_av].reshape(e_n, N_AV, p_n)
+                bvp = buf[:, o_av:o_bv].reshape(e_n, N_AV, p_n)
+                pmp = buf[:, o_bv:o_pm].reshape(e_n, N_PM, p_n)
+                sc = buf[:, o_pm:o_sc]
+                iaf = buf[:, o_sc:o_ia]
+                ibf = buf[:, o_ia:o_ib]
+                out = ref.score_pairs_xp(avp, bvp, pmp, sc, iaf, ibf,
+                                         xp=jnp)     # (E, N_OUT, P)
+                al = buf[:, o_ib + 0, None]
+                be = buf[:, o_ib + 1, None]
+                ga = buf[:, o_ib + 2, None]
+                de = buf[:, o_ib + 3, None]
+                terms = [
+                    al * out[:, OUT.load_a] / sc[:, SC.speed_a, None],
+                    be * out[:, OUT.off_a],
+                    ga * out[:, OUT.on_a],
+                    de * out[:, OUT.hom_a],
+                    al * out[:, OUT.load_b] / sc[:, SC.speed_b, None],
+                    be * out[:, OUT.off_b],
+                    ga * out[:, OUT.on_b],
+                    de * out[:, OUT.hom_b],
+                    out[:, OUT.mem_a],
+                    out[:, OUT.mem_b],
+                ]
+                return jnp.stack(terms, axis=1)      # (E, 10, P)
+        elif kind == "full":
+            def body(av, bv, pm, sc):
+                global _TRACE_COUNT
+                _TRACE_COUNT += 1
+                return ref.score_tiles_xp(av, bv, pm, sc, xp=jnp)
+        else:                               # pragma: no cover
+            raise ValueError(f"unknown bucketed fn kind: {kind!r}")
+        fn = jax.jit(body)
+        _FN_CACHE[key] = fn
+    return fn
+
+
+def _x64():
+    import jax
+    return jax.experimental.enable_x64()
+
+
+# -------------------------------------------------------------- f32 Pallas
+def pallas_compiled_supported() -> bool:
+    """True when this host can lower a Pallas kernel with
+    ``interpret=False`` (TPU/GPU build); probed once, lazily."""
+    global _COMPILED_OK
+    if _COMPILED_OK is None:
+        try:
+            import jax
+            import jax.numpy as jnp
+            from jax.experimental import pallas as pl
+
+            def k(x_ref, o_ref):
+                o_ref[...] = x_ref[...] + 1.0
+            pl.pallas_call(
+                k, out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+                interpret=False)(jnp.zeros((8, 128), jnp.float32))
+            _COMPILED_OK = True
+        except Exception:
+            _COMPILED_OK = False
+    return _COMPILED_OK
+
+
+def pallas_compiled_fallback() -> bool:
+    """True when a ``pallas_compiled`` launch has fallen back to f32
+    interpret mode on this host (no compile target)."""
+    return _COMPILED_FALLBACK
+
+
+def _pallas_score(av, bv, pm, sc, *, interpret: bool):
+    import jax
+
+    from repro.kernels.ccm_scorer.kernel import score_tiles_fwd
+    if av.dtype == np.float64:
+        with _x64():
+            return np.asarray(score_tiles_fwd(av, bv, pm, sc,
+                                              interpret=interpret))
+    return np.asarray(score_tiles_fwd(av, bv, pm, sc, interpret=interpret))
+
+
+def _f32_pads(a_n: int, b_n: int) -> Tuple[int, int]:
+    """The f32 deployment tile rounding: A to the 8-sublane boundary, B to
+    the 128-lane boundary — ONE definition for both f32 entry points (the
+    launcher and the raw full-tile API), so the layout contract the README
+    documents cannot fork."""
+    return (bucket_lanes(a_n, floor=_LANE_FLOOR, cap=_LANE_FLOOR),
+            bucket_lanes(b_n, floor=LANE_CAP, cap=LANE_CAP))
+
+
+def _pallas_compiled_score(av32, bv32, pm32, sc32):
+    global _COMPILED_FALLBACK
+    if pallas_compiled_supported():
+        return _pallas_score(av32, bv32, pm32, sc32, interpret=False)
+    _COMPILED_FALLBACK = True
+    return _pallas_score(av32, bv32, pm32, sc32, interpret=True)
+
+
+# ------------------------------------------------------------ tile packing
+def _pack(feats, a_pad: int, b_pad: int, e_pad: int, dtype) -> Tuple:
+    av = np.zeros((e_pad, N_AV, a_pad), dtype)
+    bv = np.zeros((e_pad, N_AV, b_pad), dtype)
+    pm = np.zeros((e_pad, N_PM, a_pad, b_pad), dtype)
+    sc = np.zeros((e_pad, N_SC), dtype)
+    for k, (av_k, bv_k, pm_k, sc_k) in enumerate(feats):
+        av[k, :, :av_k.shape[1]] = av_k
+        bv[k, :, :bv_k.shape[1]] = bv_k
+        pm[k, :, :pm_k.shape[1], :pm_k.shape[2]] = pm_k
+        sc[k] = sc_k
+    # pad events are never returned (the launcher slices to real events)
+    # and their na = nb = 0 mask leaves only the (0, 0) lane live; give
+    # them unit speeds so a full-tile combine doesn't divide by zero
+    if len(feats) < e_pad:
+        sc[len(feats):, SC.speed_a] = 1.0
+        sc[len(feats):, SC.speed_b] = 1.0
+    return av, bv, pm, sc
+
+
+# ------------------------------------------------------------ full tiles
+def score_tiles_jit(av: np.ndarray, bv: np.ndarray, pm: np.ndarray,
+                    sc: np.ndarray) -> np.ndarray:
+    """Full-tile f64 scoring through the bucketed compiled path: pads the
+    tiles into their shape bucket, scores, and slices back to the caller's
+    shape.  Bitwise-equal to ``ref.score_tiles`` on every returned lane."""
+    e_n, _, a_n = av.shape
+    b_n = bv.shape[2]
+    a_pad, b_pad = bucket_lanes(a_n), bucket_lanes(b_n)
+    e_pad = bucket_events(e_n) if e_n else 1
+    feats = [(av[k], bv[k], pm[k], sc[k]) for k in range(e_n)]
+    avp, bvp, pmp, scp = _pack(feats, a_pad, b_pad, e_pad, np.float64)
+    fn = _get_fn(("full", e_pad, a_pad, b_pad))
+    with _x64():
+        out = np.asarray(fn(avp, bvp, pmp, scp))
+    return out[:e_n, :, :a_n, :b_n]
+
+
+def score_tiles_f32(av: np.ndarray, bv: np.ndarray, pm: np.ndarray,
+                    sc: np.ndarray) -> np.ndarray:
+    """Full-tile scoring through the f32 compiled-Pallas path (B padded to
+    the 128-lane boundary, A to the sublane boundary; interpret fallback on
+    hosts without a compile target).  Returns float64 holding the exact f32
+    values (upcast is lossless)."""
+    e_n, _, a_n = av.shape
+    b_n = bv.shape[2]
+    a_pad, b_pad = _f32_pads(a_n, b_n)
+    e_pad = bucket_events(e_n) if e_n else 1
+    feats = [(av[k], bv[k], pm[k], sc[k]) for k in range(e_n)]
+    avp, bvp, pmp, scp = _pack(feats, a_pad, b_pad, e_pad, np.float32)
+    out = _pallas_compiled_score(avp, bvp, pmp, scp)
+    return np.asarray(out[:e_n, :, :a_n, :b_n], np.float64)
+
+
+def warmup(max_candidates: int = 12, shortlist: int = 32,
+           max_batch: int = 1) -> int:
+    """Pre-compile the jit buckets a CCM-LB run with these knobs can touch
+    (the shortlist P bucket and the event buckets up to ``max_batch``; the
+    pair-gathered hot path is lane-free, so candidate counts do not add
+    buckets).  Benchmarks call this so the timed region measures the
+    steady-state runtime, not one-off XLA compiles; a persistent jax
+    compilation cache (CI) makes even the first warmup cheap.  Returns the
+    number of buckets now compiled."""
+    del max_candidates      # lane-free: kept for call-site readability
+    p_pad = bucket_pairs(shortlist)
+    e = 1
+    e_buckets = []
+    while e <= bucket_events(max_batch):
+        e_buckets.append(e)
+        e *= 2
+    import jax
+
+    # the throwaway warm inputs are meaningless, and XLA's speculative
+    # evaluation can surface transient NaNs from them that the real hot
+    # path never produces — mask the nan checker for the warm calls only
+    debug_nans = jax.config.jax_debug_nans
+    jax.config.update("jax_debug_nans", False)
+    try:
+        with _x64():
+            for e_pad in e_buckets:
+                fn = _get_fn(("pairs", e_pad, p_pad))
+                o_pm = _pair_offsets(p_pad)[2]       # sc row starts here
+                buf = np.zeros((e_pad, _pair_offsets(p_pad)[-1]))
+                buf[:, o_pm + SC.speed_a] = 1.0      # no 0/0 lanes
+                buf[:, o_pm + SC.speed_b] = 1.0
+                fn(buf)
+    finally:
+        jax.config.update("jax_debug_nans", debug_nans)
+    return bucket_cache_size()
+
+
+# -------------------------------------------------------- the event launcher
+def score_events(feats: Sequence[Tuple], pairs_list: Sequence[np.ndarray],
+                 params, *, backend: str = "numpy", interpret: bool = True,
+                 ) -> List[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+    """Score a batch of lock events through one backend launch.
+
+    ``feats``: per-event unpadded feature tuples ``(av, bv, pm, sc)`` as
+    built by ``PhaseEngine._event_features`` (av: (N_AV, na+1), ...);
+    ``pairs_list``: per-event (P, 2) int64 shortlists.  Returns per-event
+    ``(w_a, w_b, feasible)`` aligned with each event's pairs.  The combine
+    finishes on the host either way: ``ops.combine_work_pairs`` for the
+    tile backends, ``ops.combine_terms`` for the jit path (whose products
+    were already computed, contraction-safe, in the compiled region) —
+    bitwise-identical results.
+
+    Backends: ``numpy`` (reference tiles, exact shapes), ``jit`` (bucketed
+    f64 compiled pipeline, bitwise-equal to numpy), ``pallas`` (interpret
+    kernel, bitwise-equal), ``pallas_compiled`` (f32, 128-lane tiles,
+    assignment-identity bar).
+    """
+    from repro.kernels.ccm_scorer import ops as scorer_ops
+
+    e_n = len(feats)
+    if e_n == 0:
+        return []
+    results: List[Optional[Tuple]] = [None] * e_n
+    live = [k for k in range(e_n) if pairs_list[k].shape[0]]
+    for k in range(e_n):
+        if pairs_list[k].shape[0] == 0:
+            z = np.zeros(0)
+            results[k] = (z, z, np.zeros(0, bool))
+    if not live:
+        return results
+
+    lf = [feats[k] for k in live]
+
+    if backend == "jit":
+        e_pad = bucket_events(len(lf))
+        p_pad = bucket_pairs(max(pairs_list[k].shape[0] for k in live))
+        o_av, o_bv, o_pm, o_sc, o_ia, o_ib, o_cf = _pair_offsets(p_pad)
+        buf = np.zeros((e_pad, o_cf))
+        coeffs = (params.alpha, params.beta, params.gamma, params.delta)
+        for j, k in enumerate(live):
+            av_k, bv_k, pm_k, sc_k = feats[k]
+            pr = pairs_list[k]                      # pad rows read (0, 0)
+            p = pr.shape[0]
+            ia, ib = pr[:, 0], pr[:, 1]
+            buf[j, :o_av].reshape(N_AV, p_pad)[:, :p] = av_k[:, ia]
+            buf[j, o_av:o_bv].reshape(N_AV, p_pad)[:, :p] = bv_k[:, ib]
+            buf[j, o_bv:o_pm].reshape(N_PM, p_pad)[:, :p] = pm_k[:, ia, ib]
+            buf[j, o_pm:o_sc] = sc_k
+            buf[j, o_sc:o_sc + p] = ia
+            buf[j, o_ia:o_ia + p] = ib
+            buf[j, o_ib:o_cf] = coeffs
+        # pad event rows: unit speeds so the in-jit load/speed divide
+        # cannot produce 0/0 NaNs (results are discarded, but
+        # jax_debug_nans would trip on them; mirrors _pack's guard)
+        buf[len(lf):, o_pm + SC.speed_a] = 1.0
+        buf[len(lf):, o_pm + SC.speed_b] = 1.0
+        fn = _get_fn(("pairs", e_pad, p_pad))
+        with _x64():
+            terms = np.asarray(fn(buf))             # (E, 10, P)
+        for j, k in enumerate(live):
+            p = pairs_list[k].shape[0]
+            results[k] = scorer_ops.combine_terms(
+                terms[j, :, :p], feats[k][3], params)
+        return results
+
+    a_max = max(f[0].shape[1] for f in lf)
+    b_max = max(f[1].shape[1] for f in lf)
+    if backend == "numpy":
+        if len(lf) == 1:
+            av, bv, pm = (f[None] for f in lf[0][:3])
+            sc = lf[0][3][None]
+        else:
+            av, bv, pm, sc = _pack(lf, a_max, b_max, len(lf), np.float64)
+        out = ref.score_tiles(av, bv, pm, sc)
+    elif backend == "pallas":
+        # bucket the interpret path too: score_tiles_fwd is jitted, so
+        # shape-stable launches avoid per-event retracing just like "jit"
+        a_pad, b_pad = bucket_lanes(a_max), bucket_lanes(b_max)
+        av, bv, pm, sc = _pack(lf, a_pad, b_pad, bucket_events(len(lf)),
+                               np.float64)
+        out = _pallas_score(av, bv, pm, sc, interpret=interpret)
+    elif backend == "pallas_compiled":
+        a_pad, b_pad = _f32_pads(a_max, b_max)
+        av, bv, pm, sc = _pack(lf, a_pad, b_pad, bucket_events(len(lf)),
+                               np.float32)
+        out = _pallas_compiled_score(av, bv, pm, sc)
+    else:
+        raise ValueError(f"unknown ccm_scorer backend: {backend!r}")
+
+    if out.dtype != np.float64:
+        out = np.asarray(out, np.float64)       # f32 path: lossless upcast
+    if len(live) == 1:
+        # solo event: combine only the gathered shortlist lanes
+        p = pairs_list[live[0]]
+        outp = out[0][:, p[:, 0], p[:, 1]]              # (N_OUT, P)
+        results[live[0]] = scorer_ops.combine_work_pairs(
+            outp, feats[live[0]][3], params)
+        return results
+    # batched flush: ONE full-tile combine for all events amortizes the
+    # numpy op dispatch (gather-then-combine per event would multiply it
+    # by E); combine-then-gather is bitwise-identical per pair
+    w_a, w_b, feas = scorer_ops.combine_work(out, sc, params)
+    for j, k in enumerate(live):
+        p = pairs_list[k]
+        ia, ib = p[:, 0], p[:, 1]
+        results[k] = (w_a[j, ia, ib], w_b[j, ia, ib], feas[j, ia, ib])
+    return results

@@ -36,7 +36,15 @@ coefficients is a separate, backend-shared host step:
   ``combine_work``: W = alpha*L/speed + beta*Voff + gamma*Von + delta*M_H,
   feasibility from the memory planes vs the per-event caps (eq. 9), and
   infeasible pairs forced to +inf — the exact expression the scalar
-  reference evaluates, applied to whole tiles at once.
+  reference evaluates, applied to whole tiles at once (``combine_work``)
+  or to the (N_OUT, P) planes gathered at one event's shortlisted pairs
+  (``combine_work_pairs`` — the hot path; elementwise ops commute with
+  the gather, so the two are bitwise-interchangeable).
+
+The per-event dispatch itself (shape-bucket padding, the compiled f64
+pipeline, the f32 128-lane path, pair gathering) lives in jit.py; this
+module keeps the raw full-tile API and the shared combine.  See README.md
+for the backend matrix and the two parity tiers.
 """
 from __future__ import annotations
 
@@ -48,22 +56,33 @@ from repro.kernels.ccm_scorer import ref
 from repro.kernels.ccm_scorer.layout import (AV, N_AV, N_OUT, N_PM, N_SC,
                                              OUT, PM, SC)
 
-__all__ = ["ccm_score_tiles", "combine_work", "AV", "PM", "SC", "OUT",
-           "N_AV", "N_PM", "N_SC", "N_OUT"]
+__all__ = ["ccm_score_tiles", "combine_work", "combine_work_pairs", "AV",
+           "PM", "SC", "OUT", "N_AV", "N_PM", "N_SC", "N_OUT", "BACKENDS"]
 
 INF = float("inf")
+
+#: the scorer backend matrix (see kernels/ccm_scorer/README.md):
+#: f64-bitwise tier: numpy / jit / pallas (interpret);
+#: f32 assignment-identity tier: pallas_compiled.
+BACKENDS = ("numpy", "jit", "pallas", "pallas_compiled")
 
 
 def ccm_score_tiles(av: np.ndarray, bv: np.ndarray, pm: np.ndarray,
                     sc: np.ndarray, *, backend: str = "numpy",
                     interpret: bool = True) -> np.ndarray:
-    """Dispatch packed tiles to the NumPy reference or the Pallas kernel.
+    """Dispatch packed tiles to a scorer backend (full-tile API).
 
-    Both return (E, N_OUT, A, B) float64 and agree bitwise when the kernel
-    runs in interpret mode (the compiled TPU path is f32 and approximate).
+    ``numpy`` (the reference), ``jit`` (bucketed compiled f64) and
+    ``pallas`` (interpret mode) return (E, N_OUT, A, B) float64 and agree
+    BITWISE.  ``pallas_compiled`` scores in f32 on 128-lane tiles
+    (interpret fallback off-TPU) and returns the exact f32 values upcast
+    to float64 — ulp-level approximate, assignment-identity parity tier.
     """
     if backend == "numpy":
         return ref.score_tiles(av, bv, pm, sc)
+    if backend == "jit":
+        from repro.kernels.ccm_scorer import jit as scorer_jit
+        return scorer_jit.score_tiles_jit(av, bv, pm, sc)
     if backend == "pallas":
         import jax  # deferred: the numpy path must not require jax
 
@@ -71,6 +90,9 @@ def ccm_score_tiles(av: np.ndarray, bv: np.ndarray, pm: np.ndarray,
         with jax.experimental.enable_x64():
             out = score_tiles_fwd(av, bv, pm, sc, interpret=interpret)
         return np.asarray(out)
+    if backend == "pallas_compiled":
+        from repro.kernels.ccm_scorer import jit as scorer_jit
+        return scorer_jit.score_tiles_f32(av, bv, pm, sc)
     raise ValueError(f"unknown ccm_scorer backend: {backend!r}")
 
 
@@ -98,6 +120,52 @@ def combine_work(out: np.ndarray, sc: np.ndarray, params,
            + params.beta * out[:, OUT.off_b]
            + params.gamma * out[:, OUT.on_b]
            + params.delta * out[:, OUT.hom_b])
+    w_a = np.where(feas, w_a, INF)
+    w_b = np.where(feas, w_b, INF)
+    return w_a, w_b, feas
+
+
+def combine_terms(terms: np.ndarray, sc_row: np.ndarray, params,
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host tail of the combine when the products were computed in the
+    compiled region (jit pairs path): ``terms`` is (10, P) — the eight
+    coefficient-scaled work terms (a: load/off/on/hom, then b) followed by
+    the two memory planes.  Only ADDS happen here (XLA:CPU would
+    FMA-contract them; lone muls in the compiled region are safe), in the
+    exact association order of ``combine_work``, so the results are
+    bitwise-identical to the all-host combine."""
+    if params.memory_constraint:
+        feas = ((terms[8] <= sc_row[SC.mem_cap_a] + 1e-6)
+                & (terms[9] <= sc_row[SC.mem_cap_b] + 1e-6))
+    else:
+        feas = np.ones(terms.shape[1], bool)
+    w_a = terms[0] + terms[1] + terms[2] + terms[3]
+    w_b = terms[4] + terms[5] + terms[6] + terms[7]
+    w_a = np.where(feas, w_a, INF)
+    w_b = np.where(feas, w_b, INF)
+    return w_a, w_b, feas
+
+
+def combine_work_pairs(outp: np.ndarray, sc_row: np.ndarray, params,
+                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Work combine on (N_OUT, P) planes already gathered at one event's
+    shortlisted pairs.  Elementwise ops commute with the gather, so this is
+    bitwise-identical per pair to ``combine_work`` on the full tile followed
+    by the gather — the hot path just skips combining lanes it will never
+    read.  ``sc_row`` is the event's (N_SC,) scalar row."""
+    if params.memory_constraint:
+        feas = ((outp[OUT.mem_a] <= sc_row[SC.mem_cap_a] + 1e-6)
+                & (outp[OUT.mem_b] <= sc_row[SC.mem_cap_b] + 1e-6))
+    else:
+        feas = np.ones(outp.shape[1], bool)
+    w_a = (params.alpha * outp[OUT.load_a] / sc_row[SC.speed_a]
+           + params.beta * outp[OUT.off_a]
+           + params.gamma * outp[OUT.on_a]
+           + params.delta * outp[OUT.hom_a])
+    w_b = (params.alpha * outp[OUT.load_b] / sc_row[SC.speed_b]
+           + params.beta * outp[OUT.off_b]
+           + params.gamma * outp[OUT.on_b]
+           + params.delta * outp[OUT.hom_b])
     w_a = np.where(feas, w_a, INF)
     w_b = np.where(feas, w_b, INF)
     return w_a, w_b, feas

@@ -1,12 +1,21 @@
 """Pure-NumPy reference for the CCM stage-2 scorer tiles.
 
 This IS the evaluation engine's ``backend="numpy"`` implementation as well
-as the oracle the Pallas kernel (kernel.py) is held bitwise-equal to: both
-compute the identical expression tree over the packed feature tiles (see
-ops.py for the layout), using only additions, subtractions, maxima and
-selects — the operations XLA cannot re-round — so interpret-mode kernel
-outputs and this function agree bit for bit.  Keep the expression structure
-in the two files in lockstep; tests/test_ccm_scorer.py enforces it.
+as the oracle the Pallas kernel (kernel.py) and the bucketed jit launcher
+(jit.py) are held bitwise-equal to.  All of them compute the identical
+expression tree over the packed feature tiles (see ops.py for the layout),
+using only additions, subtractions, maxima and selects — the operations
+XLA cannot re-round (no multiply means no FMA contraction, no divide means
+no reciprocal rewrite) — so interpret-mode kernel outputs, compiled-XLA
+f64 outputs and this function agree bit for bit.
+
+To keep the tree in ONE place for the NumPy and jit paths, the body is
+parametrized over the array namespace: :func:`score_tiles_xp` evaluates the
+same source expressions with ``xp=numpy`` (the reference) or ``xp=jax.numpy``
+(traced by jit.py into the per-bucket compiled functions) — identical
+syntax trees by construction, so the two cannot drift apart.  The Pallas
+kernel body (kernel.py) remains a hand-kept copy because it reads from
+Refs; tests/test_ccm_scorer.py enforces its lockstep.
 
 Every expression below mirrors the original per-event broadcast section of
 ``PhaseEngine.batch_exchange_eval`` (repro/core/engine.py), re-rooted at the
@@ -31,68 +40,64 @@ def score_tiles(av: np.ndarray, bv: np.ndarray, pm: np.ndarray,
     Returns (E, N_OUT, A, B); the tail beyond (na+1, nb+1) is masked to 0
     (flow/load/homing planes) or +inf (memory planes).
     """
-    e_n, _, a_n = av.shape
-    b_n = bv.shape[2]
+    return score_tiles_xp(av, bv, pm, sc, xp=np)
 
-    def col(i):
-        return av[:, i, :, None]
 
-    def row(i):
-        return bv[:, i, None, :]
+def score_planes(col, row, scal, pmp, xp):
+    """The scorer expression tree, abstracted over index helpers.
 
-    def colv(v):
-        return v[:, :, None]
+    ``col(i)``/``row(i)`` read per-a-/per-b-candidate feature rows,
+    ``scal(i)`` a per-event scalar, ``pmp(i)`` a pairwise plane — each
+    returning arrays that broadcast against one another.  Two layouts feed
+    this core:
 
-    def rowv(v):
-        return v[:, None, :]
+      * *tile* (:func:`score_tiles_xp`): col -> (E, A, 1), row ->
+        (E, 1, B), pmp -> (E, A, B); the result planes are (E, A, B).
+      * *pairs* (:func:`score_pairs_xp`): all helpers return (E, P) arrays
+        already gathered at a pair shortlist; the result planes are (E, P).
 
-    def scal(i):
-        return sc[:, i, None, None]
-
-    x_ab, x_ba = pm[:, PM.x_ab], pm[:, PM.x_ba]
-    cs_a, ch_a = pm[:, PM.cs_a], pm[:, PM.ch_a]
-    cs_b, ch_b = pm[:, PM.cs_b], pm[:, PM.ch_b]
+    Both evaluate the identical per-lane expression DAG (broadcasting
+    never changes a lane's operand values or operation order), so tile
+    scoring followed by a pair gather is bitwise-equal to pair scoring —
+    the property the compiled hot path rests on.  Returns the N_OUT planes
+    in ``layout.OUT`` order, *before* tail masking.
+    """
+    x_ab, x_ba = pmp(PM.x_ab), pmp(PM.x_ba)
+    cs_a, ch_a = pmp(PM.cs_a), pmp(PM.ch_a)
+    cs_b, ch_b = pmp(PM.cs_b), pmp(PM.ch_b)
 
     # --- flows after the exchange (same expression tree as the engine) ---
-    sent_a = (x_ba + rowv(bv[:, AV.out_own] - bv[:, AV.intra]
-                          + bv[:, AV.out_other])
-              + colv(av[:, AV.in_own] - av[:, AV.intra])
+    sent_a = (x_ba + (row(AV.out_own) - row(AV.intra) + row(AV.out_other))
+              + (col(AV.in_own) - col(AV.intra))
               + (scal(SC.f_ab) - col(AV.out_peer) - row(AV.in_peer) + x_ab)
               + (scal(SC.f_ao) - col(AV.out_other)))
-    recv_a = (x_ab + rowv(bv[:, AV.in_own] - bv[:, AV.intra]
-                          + bv[:, AV.in_other])
-              + colv(av[:, AV.out_own] - av[:, AV.intra])
+    recv_a = (x_ab + (row(AV.in_own) - row(AV.intra) + row(AV.in_other))
+              + (col(AV.out_own) - col(AV.intra))
               + (scal(SC.f_ba) - row(AV.out_peer) - col(AV.in_peer) + x_ba)
               + (scal(SC.f_oa) - col(AV.in_other)))
     on_a = (row(AV.intra) + (row(AV.out_peer) - x_ba)
             + (row(AV.in_peer) - x_ab)
-            + (scal(SC.f_aa) - colv(av[:, AV.out_own] + av[:, AV.in_own]
-                                    - av[:, AV.intra])))
-    sent_b = (x_ab + colv(av[:, AV.out_own] - av[:, AV.intra]
-                          + av[:, AV.out_other])
-              + rowv(bv[:, AV.in_own] - bv[:, AV.intra])
+            + (scal(SC.f_aa) - (col(AV.out_own) + col(AV.in_own)
+                                - col(AV.intra))))
+    sent_b = (x_ab + (col(AV.out_own) - col(AV.intra) + col(AV.out_other))
+              + (row(AV.in_own) - row(AV.intra))
               + (scal(SC.f_ba) - row(AV.out_peer) - col(AV.in_peer) + x_ba)
               + (scal(SC.f_bo) - row(AV.out_other)))
-    recv_b = (x_ba + colv(av[:, AV.in_own] - av[:, AV.intra]
-                          + av[:, AV.in_other])
-              + rowv(bv[:, AV.out_own] - bv[:, AV.intra])
+    recv_b = (x_ba + (col(AV.in_own) - col(AV.intra) + col(AV.in_other))
+              + (row(AV.out_own) - row(AV.intra))
               + (scal(SC.f_ab) - col(AV.out_peer) - row(AV.in_peer) + x_ab)
               + (scal(SC.f_ob) - row(AV.in_other)))
     on_b = (col(AV.intra) + (col(AV.out_peer) - x_ab)
             + (col(AV.in_peer) - x_ba)
-            + (scal(SC.f_bb) - rowv(bv[:, AV.out_own] + bv[:, AV.in_own]
-                                    - bv[:, AV.intra])))
+            + (scal(SC.f_bb) - (row(AV.out_own) + row(AV.in_own)
+                                - row(AV.intra))))
 
-    off_a = np.maximum(
-        scal(SC.base_sent_a) + (sent_a - (sc[:, SC.f_ab, None, None]
-                                          + sc[:, SC.f_ao, None, None])),
-        scal(SC.base_recv_a) + (recv_a - (sc[:, SC.f_ba, None, None]
-                                          + sc[:, SC.f_oa, None, None])))
-    off_b = np.maximum(
-        scal(SC.base_sent_b) + (sent_b - (sc[:, SC.f_ba, None, None]
-                                          + sc[:, SC.f_bo, None, None])),
-        scal(SC.base_recv_b) + (recv_b - (sc[:, SC.f_ab, None, None]
-                                          + sc[:, SC.f_ob, None, None])))
+    off_a = xp.maximum(
+        scal(SC.base_sent_a) + (sent_a - (scal(SC.f_ab) + scal(SC.f_ao))),
+        scal(SC.base_recv_a) + (recv_a - (scal(SC.f_ba) + scal(SC.f_oa))))
+    off_b = xp.maximum(
+        scal(SC.base_sent_b) + (sent_b - (scal(SC.f_ba) + scal(SC.f_bo))),
+        scal(SC.base_recv_b) + (recv_b - (scal(SC.f_ab) + scal(SC.f_ob))))
     on_a = scal(SC.vol_aa) + (on_a - scal(SC.f_aa))
     on_b = scal(SC.vol_bb) + (on_b - scal(SC.f_bb))
 
@@ -108,26 +113,76 @@ def score_tiles(av: np.ndarray, bv: np.ndarray, pm: np.ndarray,
     # --- memory (eq. 9 inputs) ------------------------------------------
     mem_a = (scal(SC.mem_base_a) + scal(SC.mem_task_a) - col(AV.mem)
              + row(AV.mem) + shared_a
-             + np.maximum(scal(SC.ovh_a), row(AV.ovh)))
+             + xp.maximum(scal(SC.ovh_a), row(AV.ovh)))
     mem_b = (scal(SC.mem_base_b) + scal(SC.mem_task_b) + col(AV.mem)
              - row(AV.mem) + shared_b
-             + np.maximum(scal(SC.ovh_b), col(AV.ovh)))
+             + xp.maximum(scal(SC.ovh_b), col(AV.ovh)))
 
-    # --- masked tail -----------------------------------------------------
-    ia = np.arange(a_n, dtype=np.float64)[None, :, None]
-    ib = np.arange(b_n, dtype=np.float64)[None, None, :]
+    planes = [None] * N_OUT
+    planes[OUT.load_a] = load_a
+    planes[OUT.load_b] = load_b
+    planes[OUT.off_a] = off_a
+    planes[OUT.off_b] = off_b
+    planes[OUT.on_a] = on_a
+    planes[OUT.on_b] = on_b
+    planes[OUT.hom_a] = hom_a
+    planes[OUT.hom_b] = hom_b
+    planes[OUT.mem_a] = mem_a
+    planes[OUT.mem_b] = mem_b
+    return planes
+
+
+def _mask_planes(planes, mask, dt, xp):
+    """Masked tail: flow/load/homing planes -> 0, memory planes -> +inf
+    (so padded pairs can never look feasible).  Plane order = layout.OUT."""
+    zero = xp.zeros((), dt)
+    inf = xp.full((), xp.inf, dt)
+    out = [xp.where(mask, p, inf if i in (OUT.mem_a, OUT.mem_b) else zero)
+           for i, p in enumerate(planes)]
+    return xp.stack(out, axis=1)
+
+
+def score_tiles_xp(av, bv, pm, sc, *, xp=np):
+    """Full-tile layout of the expression tree (see :func:`score_planes`).
+
+    ``xp=numpy`` is the production reference; ``xp=jax.numpy`` is traced by
+    the bucketed jit launcher.  Output lane (ia, ib) depends only on
+    ``av[:, :, ia]``, ``bv[:, :, ib]``, ``pm[:, :, ia, ib]`` and ``sc`` —
+    every op is elementwise over the (A, B) tile — which is what makes
+    bucket padding invariant: padded lanes cannot perturb real ones.
+    """
+    a_n = av.shape[2]
+    b_n = bv.shape[2]
+
+    planes = score_planes(
+        col=lambda i: av[:, i, :, None],
+        row=lambda i: bv[:, i, None, :],
+        scal=lambda i: sc[:, i, None, None],
+        pmp=lambda i: pm[:, i],
+        xp=xp)
+
+    dt = av.dtype
+    ia = xp.arange(a_n, dtype=dt)[None, :, None]
+    ib = xp.arange(b_n, dtype=dt)[None, None, :]
     mask = (ia <= sc[:, SC.na, None, None]) & (ib <= sc[:, SC.nb, None, None])
+    return _mask_planes(planes, mask, dt, xp)
 
-    out = np.empty((e_n, N_OUT, a_n, b_n), np.float64)
-    zero, inf = np.float64(0.0), np.float64(np.inf)
-    out[:, OUT.load_a] = np.where(mask, load_a, zero)
-    out[:, OUT.load_b] = np.where(mask, load_b, zero)
-    out[:, OUT.off_a] = np.where(mask, off_a, zero)
-    out[:, OUT.off_b] = np.where(mask, off_b, zero)
-    out[:, OUT.on_a] = np.where(mask, on_a, zero)
-    out[:, OUT.on_b] = np.where(mask, on_b, zero)
-    out[:, OUT.hom_a] = np.where(mask, hom_a, zero)
-    out[:, OUT.hom_b] = np.where(mask, hom_b, zero)
-    out[:, OUT.mem_a] = np.where(mask, mem_a, inf)
-    out[:, OUT.mem_b] = np.where(mask, mem_b, inf)
-    return out
+
+def score_pairs_xp(avp, bvp, pmp, sc, iaf, ibf, *, xp=np):
+    """Pair-gathered layout: score only a shortlist of candidate pairs.
+
+    ``avp``/``bvp``: (E, N_AV, P) feature rows gathered at the pairs' a-/
+    b-candidate indices, ``pmp``: (E, N_PM, P) pairwise planes gathered at
+    the pairs, ``iaf``/``ibf``: (E, P) pair indices as floats (mask bound
+    compare only).  Returns (E, N_OUT, P) — bitwise-equal to full-tile
+    scoring followed by the same gather, at O(P) instead of O(A*B) lanes.
+    """
+    planes = score_planes(
+        col=lambda i: avp[:, i],
+        row=lambda i: bvp[:, i],
+        scal=lambda i: sc[:, i, None],
+        pmp=lambda i: pmp[:, i],
+        xp=xp)
+    dt = avp.dtype
+    mask = (iaf <= sc[:, SC.na, None]) & (ibf <= sc[:, SC.nb, None])
+    return _mask_planes(planes, mask, dt, xp)

@@ -43,7 +43,7 @@ def test_kernel_masked_tail():
     av, bv, pm, sc = _random_tiles(7, e_n=2, a_n=8, b_n=8)
     sc[:, SC.na] = [2, 0]
     sc[:, SC.nb] = [3, 0]
-    for backend in ("numpy", "pallas"):
+    for backend in ("numpy", "pallas", "jit"):
         out = ops.ccm_score_tiles(av, bv, pm, sc, backend=backend)
         for e, (na, nb) in enumerate(((2, 3), (0, 0))):
             tail = np.ones((8, 8), bool)
@@ -95,7 +95,7 @@ def test_engine_backends_empty_candidates():
     state = CCMState.build(phase, initial_assignment(phase, "home"), PARAMS)
     empty = np.zeros(0, np.int64)
     events = [ExchangeEvent(0, 1, [empty], [empty], [])]
-    for backend in ("numpy", "pallas"):
+    for backend in ("numpy", "pallas", "jit", "pallas_compiled"):
         [(wa, wb, fe)] = PhaseEngine(state, backend=backend) \
             .batch_exchange_eval_multi(events)
         assert wa.shape == wb.shape == fe.shape == (0,)
@@ -134,17 +134,18 @@ def test_engine_backends_single_task_phase():
 
 # ------------------------------------------------------------ end to end
 @pytest.mark.parametrize("batch", [1, 4])
-def test_ccmlb_pallas_backend_identical_assignments(batch):
-    """Acceptance: Pallas (interpret) and NumPy engine backends produce
-    bitwise-identical CCM-LB assignments (small phase — interpret mode
-    launches one pallas_call per flush)."""
+@pytest.mark.parametrize("backend", ["pallas", "jit"])
+def test_ccmlb_f64_backends_identical_assignments(backend, batch):
+    """Acceptance: the f64-bitwise backends (Pallas interpret, bucketed
+    jit) and the NumPy engine produce bitwise-identical CCM-LB
+    assignments (small phase — one launch per flush)."""
     phase = random_phase(11, num_ranks=6, num_tasks=90, num_blocks=12,
                         num_comms=200, mem_cap=5e8)
     params = CCMParams(delta=1e-9)
     a0 = initial_assignment(phase)
     ref_run = ccm_lb(phase, a0, params, n_iter=2, seed=1, backend="numpy",
                      batch_lock_events=batch)
-    got = ccm_lb(phase, a0, params, n_iter=2, seed=1, backend="pallas",
+    got = ccm_lb(phase, a0, params, n_iter=2, seed=1, backend=backend,
                  batch_lock_events=batch)
     np.testing.assert_array_equal(got.assignment, ref_run.assignment)
     assert got.max_work == ref_run.max_work

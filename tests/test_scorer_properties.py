@@ -57,11 +57,17 @@ def test_scorer_paths_agree_on_random_phases(seed, ranks, tasks, tight_mem,
         .batch_exchange_eval_multi(events)
     res_pl = PhaseEngine(state, backend="pallas") \
         .batch_exchange_eval_multi(events)
-    for e, (wa, wb, fe), (wa2, wb2, fe2) in zip(events, res_np, res_pl):
-        # engine backends: bitwise
+    res_jit = PhaseEngine(state, backend="jit") \
+        .batch_exchange_eval_multi(events)
+    for e, (wa, wb, fe), (wa2, wb2, fe2), (wa3, wb3, fe3) in zip(
+            events, res_np, res_pl, res_jit):
+        # f64 engine backends: bitwise
         np.testing.assert_array_equal(wa, wa2)
         np.testing.assert_array_equal(wb, wb2)
         np.testing.assert_array_equal(fe, fe2)
+        np.testing.assert_array_equal(wa, wa3)
+        np.testing.assert_array_equal(wb, wb3)
+        np.testing.assert_array_equal(fe, fe3)
         # engine vs scalar reference: documented 1e-9, feasibility exact
         for k, (ia, ib) in enumerate(e.pairs):
             ev = exchange_eval(state, e.cand_a[ia], e.cand_b[ib],
@@ -91,6 +97,8 @@ def test_ccmlb_end_to_end_assignment_parity(seed, batch):
                           batch_lock_events=batch),
         "pallas": ccm_lb(phase, a0, params, n_iter=2, seed=seed,
                          backend="pallas", batch_lock_events=batch),
+        "jit": ccm_lb(phase, a0, params, n_iter=2, seed=seed,
+                      backend="jit", batch_lock_events=batch),
     }
     base = runs["scalar"]
     for name, run in runs.items():
