@@ -1,0 +1,190 @@
+"""Async event-loop driver: latency/fanout sweep + the parity/contention
+bars (§IV-B made load-bearing).
+
+Per rank count this runs the ccmlb_scaling instance through
+
+  * ``sync``        — the synchronous reference (``ccm_lb``, engine path);
+  * ``async_zero``  — the event-loop driver at zero latency, ASSERTED
+    bitwise-identical to ``sync`` (assignment + transfer sequence + work
+    traces): the serialized-schedule parity bar;
+  * ``async_const`` / ``async_uniform`` — contended interleavings under a
+    constant and a uniform message-latency distribution: the §IV-B
+    conflict/yield/grant-chain counters become nonzero, and the JSON
+    records them next to quality (final imbalance, Wmax/mean) and cost
+    (wall seconds, simulated time, delivered messages);
+
+then a *contended* configuration (half the ranks start empty, so many
+loaded ranks race for the same underloaded peers) on which the run MUST
+produce ``lock_conflicts > 0`` and a grant chain >= 2 — the same coverage
+pin tests/test_async_protocol.py enforces — and a fanout sweep under
+latency (message volume vs achieved balance).
+
+Results land in ``BENCH_ccmlb_async.json``.
+
+Standalone:  PYTHONPATH=src python benchmarks/ccmlb_async.py [--quick]
+(--quick runs the 16-rank configs for CI; also wired into
+benchmarks/run.py as ``ccmlb_async``.)
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.core import CCMParams, ccm_lb, ccm_lb_async
+from repro.core.problem import initial_assignment, scaling_phase
+
+JSON_PATH = os.environ.get("BENCH_CCMLB_ASYNC_JSON", "BENCH_ccmlb_async.json")
+N_ITER = 4
+LATENCIES = (("async_zero", 0.0),
+             ("async_const", 0.5),
+             ("async_uniform", ("uniform", 0.5, 1.5)))
+
+
+_instance = scaling_phase    # the parity bar is defined on THESE instances
+
+
+def _record(records, tag, ranks, phase, res, seconds, parity=None, **extra):
+    mean = phase.task_load.sum() / ranks
+    records.append({
+        "config": tag,
+        "ranks": ranks,
+        "tasks": phase.num_tasks,
+        "comms": phase.num_comms,
+        "n_iter": N_ITER,
+        "seconds": seconds,
+        "imbalance_after": float(res.imbalance[-1]),
+        "max_work_over_mean": float(res.max_work[-1] / mean),
+        "transfers": int(res.transfers),
+        "lock_conflicts": int(res.lock_conflicts),
+        "yields": int(res.yields),
+        "grant_chains": int(res.grant_chains),
+        "max_grant_chain": int(res.max_grant_chain),
+        "messages": int(res.messages),
+        "sim_time": float(res.sim_time),
+        **({} if parity is None else {"bitwise_identical_to_sync": parity}),
+        **extra,
+    })
+
+
+def _sweep_ranks(report, records, ranks: int):
+    phase = _instance(ranks)
+    a0 = initial_assignment(phase)
+    lb = dict(n_iter=N_ITER, k_rounds=2, fanout=4, seed=0)
+
+    t0 = time.perf_counter()
+    ref = ccm_lb(phase, a0, CCMParams(delta=1e-9), **lb)
+    sync_s = time.perf_counter() - t0
+    _record(records, "sync", ranks, phase, ref, sync_s)
+    report(f"ccmlb_async_ranks_{ranks}_sync", sync_s * 1e6,
+           f"imb_after={ref.imbalance[-1]:.4f} transfers={ref.transfers}")
+
+    for tag, latency in LATENCIES:
+        t0 = time.perf_counter()
+        res = ccm_lb_async(phase, a0, CCMParams(delta=1e-9), latency=latency,
+                           **lb)
+        dt = time.perf_counter() - t0
+        parity = None
+        if tag == "async_zero":
+            # acceptance bar: serialized zero-latency async == sync,
+            # assignment AND transfer sequence AND work traces
+            parity = bool(np.array_equal(res.assignment, ref.assignment)
+                          and res.transfer_log == ref.transfer_log
+                          and res.max_work == ref.max_work)
+            assert parity, f"zero-latency async diverged from sync @{ranks}"
+        _record(records, tag, ranks, phase, res, dt, parity=parity)
+        report(f"ccmlb_async_ranks_{ranks}_{tag}", dt * 1e6,
+               f"imb_after={res.imbalance[-1]:.4f} "
+               f"conflicts={res.lock_conflicts} yields={res.yields} "
+               f"max_chain={res.max_grant_chain} msgs={res.messages}"
+               + (" bitwise==sync" if parity else ""))
+
+
+def _contended(report, records, ranks: int):
+    """Half the ranks start empty: stage 1 points many loaded ranks at the
+    same underloaded peers, latency overlaps their requests — the §IV-B
+    branches must fire (asserted; the bench-level coverage pin)."""
+    phase = _instance(ranks)
+    a0 = (np.arange(phase.num_tasks) % (ranks // 2)).astype(np.int64)
+    t0 = time.perf_counter()
+    res = ccm_lb_async(phase, a0, CCMParams(delta=1e-9), n_iter=N_ITER,
+                       seed=3, fanout=6, latency=("uniform", 0.5, 1.5))
+    dt = time.perf_counter() - t0
+    assert res.lock_conflicts > 0, "contended run produced no conflicts"
+    assert res.max_grant_chain >= 2, "contended run produced no chain >= 2"
+    _record(records, "contended_uniform", ranks, phase, res, dt,
+            initial="half_empty")
+    report(f"ccmlb_async_contended_{ranks}", dt * 1e6,
+           f"conflicts={res.lock_conflicts} yields={res.yields} "
+           f"chains={res.grant_chains} max_chain={res.max_grant_chain} "
+           f"imb {res.imbalance[0]:.2f}->{res.imbalance[-1]:.4f}")
+
+
+def _fanout_sweep(report, records, ranks: int):
+    phase = _instance(ranks)
+    a0 = initial_assignment(phase)
+    for fanout in (2, 4, 8):
+        t0 = time.perf_counter()
+        res = ccm_lb_async(phase, a0, CCMParams(delta=1e-9), n_iter=3,
+                           k_rounds=2, fanout=fanout, seed=0,
+                           latency=("uniform", 0.5, 1.5))
+        dt = time.perf_counter() - t0
+        _record(records, f"fanout_{fanout}", ranks, phase, res, dt,
+                fanout=fanout)
+        report(f"ccmlb_async_f{fanout}_ranks_{ranks}", dt * 1e6,
+               f"msgs={res.messages} imb_after={res.imbalance[-1]:.4f} "
+               f"conflicts={res.lock_conflicts}")
+
+
+def run(report, quick: bool = False):
+    records = []
+    for ranks in ((16,) if quick else (16, 64, 256)):
+        _sweep_ranks(report, records, ranks)
+    for ranks in ((16,) if quick else (16, 64)):
+        _contended(report, records, ranks)
+    _fanout_sweep(report, records, 16 if quick else 64)
+
+    contended = [r for r in records if r["config"] == "contended_uniform"]
+    payload = {
+        "benchmark": "ccmlb_async",
+        "quick": quick,
+        "numpy": np.__version__,
+        "n_iter": N_ITER,
+        "results": records,
+        "parity_configs_ok": all(
+            r.get("bitwise_identical_to_sync", True) for r in records),
+        "max_conflicts": max(r["lock_conflicts"] for r in records),
+        "max_grant_chain": max(r["max_grant_chain"] for r in records),
+        "contended_conflicts_largest": contended[-1]["lock_conflicts"],
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    report("ccmlb_async_json", 0.0, f"written to {JSON_PATH}")
+
+
+def main():
+    quick = "--quick" in sys.argv
+    print("name,us_per_call,derived")
+
+    def report(name, us, derived=""):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    run(report, quick=quick)
+    # CI smoke assertions over the emitted JSON (parity is asserted
+    # in-bench; these pin the protocol-coverage and quality floors)
+    with open(JSON_PATH) as f:
+        payload = json.load(f)
+    assert payload["parity_configs_ok"]
+    assert payload["max_conflicts"] > 0
+    assert payload["max_grant_chain"] >= 2
+    for rec in payload["results"]:
+        assert rec["imbalance_after"] < 0.5, rec
+    print("ccmlb_async_ok,0.0,parity+coverage+quality checks passed",
+          flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -26,7 +26,7 @@ import time
 import numpy as np
 
 from repro.core import CCMParams, CCMState, ccm_lb, random_phase
-from repro.core.problem import initial_assignment
+from repro.core.problem import initial_assignment, scaling_phase
 from repro.kernels.ccm_scorer import jit as scorer_jit
 
 JSON_PATH = os.environ.get("BENCH_CCMLB_JSON", "BENCH_ccmlb_scaling.json")
@@ -49,9 +49,7 @@ def run(report):
     scorer_jit.warmup(max_batch=BATCH_EVENTS)
     jit_warmup_seconds = time.perf_counter() - t0
     for ranks in (16, 64, 256):
-        phase = random_phase(1, num_ranks=ranks, num_tasks=25 * ranks,
-                             num_blocks=3 * ranks, num_comms=50 * ranks,
-                             mem_cap=1e12)
+        phase = scaling_phase(ranks)
         a0 = initial_assignment(phase)
         st0 = CCMState.build(phase, a0, params)
         mean = phase.task_load.sum() / ranks

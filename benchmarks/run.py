@@ -32,8 +32,8 @@ DISPLAY = {
     "kernels_bench": "kernels",
 }
 ORDER = ["milp_vs_ccmlb", "delta_sweep", "assembly_scaling", "costmodel_eval",
-         "ccmlb_scaling", "ccmlb_pipeline", "scorer_paths", "kernels_bench",
-         "expert_placement", "roofline"]
+         "ccmlb_scaling", "ccmlb_pipeline", "ccmlb_async", "scorer_paths",
+         "kernels_bench", "expert_placement", "roofline"]
 
 
 def discover():

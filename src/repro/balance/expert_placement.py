@@ -25,7 +25,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import CCMParams, ccm_lb, ccm_lb_pipeline
+from repro.core import CCMParams, ccm_lb_pipeline, run_ccm_lb
 from repro.core.problem import Phase
 
 
@@ -106,7 +106,10 @@ def plan_expert_placement(counts: np.ndarray, cfg: ModelConfig,
                           seed: int = 0,
                           use_engine: bool = True,
                           backend: str = "numpy",
-                          batch_lock_events: int = 1) -> PlacementPlan:
+                          batch_lock_events: int = 1,
+                          async_mode: bool = False,
+                          latency=0.0,
+                          gossip_timeout=None) -> PlacementPlan:
     """Plan an expert placement with CCM-LB.  ``use_engine`` selects the
     vectorized evaluation engine (default; the scalar reference path gives
     identical plans — the knob exists for A/B benchmarking); ``backend``
@@ -114,7 +117,10 @@ def plan_expert_placement(counts: np.ndarray, cfg: ModelConfig,
     shape-bucketed jit runtime and the Pallas kernel are bitwise-equal to
     numpy in f64, see kernels/ccm_scorer/README.md) and
     ``batch_lock_events`` tune the engine's stage-2 scorer (deferred
-    disjoint-pair batching, trajectory-exact)."""
+    disjoint-pair batching, trajectory-exact).  ``async_mode`` plans
+    through the distributed event-loop simulator instead (``latency`` /
+    ``gossip_timeout`` as in repro/core/async_sim.py; at the default zero
+    latency the plan is identical to the synchronous one)."""
     l_n, e_n = counts.shape
     assert e_n % n_devices == 0
     phase = phase_from_router_stats(counts, cfg, n_devices,
@@ -122,9 +128,11 @@ def plan_expert_placement(counts: np.ndarray, cfg: ModelConfig,
                                     rank_speed=rank_speed)
     ccm = params or CCMParams(alpha=1.0, beta=2e-11, gamma=1e-13, delta=1e-12)
     a0 = phase.block_home.copy()  # tasks start at their expert's device
-    res = ccm_lb(phase, a0, ccm, n_iter=n_iter, fanout=fanout, seed=seed,
-                 use_engine=use_engine, backend=backend,
-                 batch_lock_events=batch_lock_events)
+    res = run_ccm_lb(phase, a0, ccm, n_iter=n_iter, fanout=fanout, seed=seed,
+                     use_engine=use_engine, backend=backend,
+                     batch_lock_events=batch_lock_events,
+                     async_mode=async_mode, latency=latency,
+                     gossip_timeout=gossip_timeout)
     return _project_plan(counts, res, n_devices)
 
 

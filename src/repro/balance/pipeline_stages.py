@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.configs.base import (BLOCK_ATTN, BLOCK_LOCAL, BLOCK_MOE, BLOCK_REC,
                                 BLOCK_RWKV, ModelConfig)
-from repro.core import CCMParams, ccm_lb, ccm_lb_pipeline
+from repro.core import CCMParams, ccm_lb_pipeline, run_ccm_lb
 from repro.core.problem import Phase
 
 
@@ -117,20 +117,28 @@ def plan_pipeline_stages(cfg: ModelConfig, n_stages: int, *,
                          seed: int = 0,
                          use_engine: bool = True,
                          backend: str = "numpy",
-                         batch_lock_events: int = 1) -> StagePlan:
+                         batch_lock_events: int = 1,
+                         async_mode: bool = False,
+                         latency=0.0,
+                         gossip_timeout=None) -> StagePlan:
     """``backend`` selects the engine's stage-2 scorer ("numpy"/"jit"/
     "pallas"/"pallas_compiled" — the f64 tiers plan identically; see
     kernels/ccm_scorer/README.md); ``batch_lock_events`` defers and
-    batches disjoint lock events, trajectory-exact."""
+    batches disjoint lock events, trajectory-exact.  ``async_mode`` plans
+    through the distributed event-loop simulator (``latency`` /
+    ``gossip_timeout`` per repro/core/async_sim.py; zero latency plans
+    identically to the synchronous driver)."""
     phase = _stage_phase(cfg, n_stages, tokens_per_microbatch,
                          hbm_budget_bytes)
     l_n = phase.num_tasks
     # initial: contiguous equal-count split
     a0 = np.minimum((np.arange(l_n) * n_stages) // l_n, n_stages - 1)
-    res = ccm_lb(phase, a0, _stage_params(phase), n_iter=4,
-                 fanout=min(4, n_stages - 1), seed=seed,
-                 use_engine=use_engine, backend=backend,
-                 batch_lock_events=batch_lock_events)
+    res = run_ccm_lb(phase, a0, _stage_params(phase), n_iter=4,
+                     fanout=min(4, n_stages - 1), seed=seed,
+                     use_engine=use_engine, backend=backend,
+                     batch_lock_events=batch_lock_events,
+                     async_mode=async_mode, latency=latency,
+                     gossip_timeout=gossip_timeout)
     return _stage_plan(phase, res, n_stages)
 
 

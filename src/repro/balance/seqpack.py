@@ -15,7 +15,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from repro.core import CCMParams, ccm_lb, ccm_lb_pipeline
+from repro.core import CCMParams, ccm_lb_pipeline, run_ccm_lb
 from repro.core.problem import Phase
 
 
@@ -65,20 +65,27 @@ def rebalance_sequences(costs: np.ndarray, n_ranks: int, *,
                         n_iter: int = 3,
                         use_engine: bool = True,
                         backend: str = "numpy",
-                        batch_lock_events: int = 1) -> SeqPackResult:
+                        batch_lock_events: int = 1,
+                        async_mode: bool = False,
+                        latency=0.0,
+                        gossip_timeout=None) -> SeqPackResult:
     """costs: (n_seqs,) predicted step-time contribution per sequence.
 
     ``backend`` selects the engine's stage-2 scorer ("numpy"/"jit"/
     "pallas"/"pallas_compiled"; the f64 tiers pack identically — see
-    kernels/ccm_scorer/README.md)."""
+    kernels/ccm_scorer/README.md).  ``async_mode`` packs through the
+    distributed event-loop simulator (``latency``/``gossip_timeout`` per
+    repro/core/async_sim.py; zero latency packs identically)."""
     k = costs.shape[0]
     phase = _seq_phase(costs, n_ranks, rank_speed, act_bytes, mem_cap)
     a0 = (np.arange(k) % n_ranks).astype(np.int64)
     params = CCMParams(alpha=1.0, beta=0.0, gamma=0.0, delta=0.0,
                        memory_constraint=np.isfinite(mem_cap))
-    res = ccm_lb(phase, a0, params, n_iter=n_iter, fanout=4, seed=seed,
-                 use_engine=use_engine, backend=backend,
-                 batch_lock_events=batch_lock_events)
+    res = run_ccm_lb(phase, a0, params, n_iter=n_iter, fanout=4, seed=seed,
+                     use_engine=use_engine, backend=backend,
+                     batch_lock_events=batch_lock_events,
+                     async_mode=async_mode, latency=latency,
+                     gossip_timeout=gossip_timeout)
     return _seq_result(res)
 
 

@@ -1,0 +1,420 @@
+"""Asynchronous distributed event-loop simulator for CCM-LB (paper §IV-B).
+
+Why this exists: the synchronous driver in :mod:`repro.core.ccmlb` runs
+the lock/transfer stage as a round-robin loop in which every lock is
+released within the turn that took it — lock conflicts, deadlock-avoidance
+yields and grant chains are structurally unreachable there, so the §IV-B
+protocol machinery was only ever exercised by direct unit tests.  This
+module drives the SAME shared handlers (``lock_request`` / ``note_yield``
+/ ``lock_release`` / ``execute_transfer`` — see "two drivers, one
+protocol" in repro/core/ccmlb.py) through a seeded discrete-event
+simulation with per-rank mailboxes and a configurable message-latency
+distribution, in the spirit of asynchronous diffusion-style balancers on
+arbitrary networks (arXiv:1308.0148): concurrent lock requests collide,
+``must_yield`` fires, queued requests drain through real grant chains,
+and gossip arrives in latency-permuted (optionally deadline-dropped,
+i.e. stale) order.
+
+Event <-> paper mapping (§IV, Fig. 1)
+-------------------------------------
+  ``GOSSIP``    lines 24–30 (BuildPeerNetwork): a rank's accumulated
+                ``info_known`` snapshot in flight to a fanout peer; the
+                recipient merges it (dedupe: repro/core/gossip.py) and,
+                below ``k_rounds``, forwards to peers the message has not
+                visited.  Same messages, same rng, same merge rule as the
+                synchronous epidemic — only the delivery schedule differs.
+  ``DECIDE``    line 41's while-loop head: the rank's local scheduler pops
+                the best remaining peer off its stage-1 work list and
+                issues a lock request.  Not a network message (priority
+                class LOCAL, see below).
+  ``LOCK_REQ``  line 42 (requestLock): arrives at the target's mailbox;
+                a free target locks itself to the requester and answers
+                with ``GRANT``; a busy target queues the request FIFO —
+                one *lock conflict*.
+  ``GRANT``     line 43: the lock is held from the moment the target
+                granted it (REQ receipt or release handoff) until the
+                holder's ``RELEASE`` arrives back.  A grant arriving at a
+                rank that is itself locked by ``r_x <= target`` triggers
+                the line-45 deadlock-avoidance *yield*: release unused,
+                re-queue the attempt (bounded by ``max_retries``).
+  transfer      lines 46–48 (recvUpdate / TryTransfer / sendUpdate): the
+                holder evaluates exactly with fresh info at grant-receipt
+                time and executes the best positive exchange.
+  ``RELEASE``   line 49 (releaseLock): frees the target; a queued
+                requester is granted next — consecutive handoffs on one
+                target form a *grant chain* (lengths are accounted in
+                ``ProtocolStats`` / ``CCMLBResult.max_grant_chain``).
+
+Determinism and the zero-latency parity bar
+-------------------------------------------
+All scheduling runs through one binary heap keyed ``(time, class, seq)``:
+``seq`` is a global creation counter, so ties at equal time break
+deterministically in creation order, and message events (class 0) always
+precede local DECIDE timers (class 1) at the same timestamp.  Latency
+draws come from a dedicated seeded stream, gossip peer picks from the
+same per-iteration stream the synchronous driver uses — the whole run is
+a pure function of ``(phase, params, seed, latency, ...)`` (determinism
+asserted in tests/test_async_protocol.py).
+
+With zero latency this schedule *serializes*: a DECIDE's entire
+REQ→GRANT→transfer→RELEASE cascade lands at the same timestamp and class
+0, so it drains before the next rank's DECIDE — exactly the synchronous
+driver's round-robin turn order.  No lock then ever outlives a turn, no
+conflict/yield/chain fires, and the trajectory (assignment, transfer
+sequence, traces) is bitwise-identical to ``ccm_lb`` (asserted in
+tests/test_async_sim.py and benchmarks/ccmlb_async.py).  Under nonzero
+latency the interleaving is arbitrary-but-seeded; safety and liveness
+invariants are property-tested in tests/test_async_protocol.py.
+
+Differences from the synchronous driver, by design:
+
+  * a requester whose LOCK_REQ is queued WAITS for the eventual grant
+    (the sync loop re-queues a halved-priority retry instead — it gets
+    an immediate boolean answer, a message protocol does not);
+  * a yield re-queues the attempt at most ``max_retries`` times, bounding
+    total work (the sync loop re-queues unboundedly; its yield branch is
+    unreachable so termination never depended on it);
+  * ``batch_lock_events`` stays a synchronous-driver knob: deferred
+    disjoint-event scoring relies on the turn order being independent of
+    scoring outcomes, which no longer holds once grants interleave.
+"""
+from __future__ import annotations
+
+import heapq
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.ccm import CCMState
+from repro.core.ccmlb import (CCMLBResult, ProtocolStats, build_work_lists,
+                              ccm_lb, execute_transfer, iteration_summaries,
+                              lock_release, lock_request, note_yield)
+from repro.core.engine import PhaseEngine
+from repro.core.gossip import gossip_deliver, pick_peers
+from repro.core.locks import LockManager
+from repro.core.problem import CCMParams, Phase
+
+__all__ = ["ccm_lb_async", "run_ccm_lb", "make_latency", "EVENT_KINDS"]
+
+# event kinds (values appear in traces; names in EVENT_KINDS)
+GOSSIP, LOCK_REQ, GRANT, RELEASE, DECIDE = range(5)
+EVENT_KINDS = ("GOSSIP", "LOCK_REQ", "GRANT", "RELEASE", "DECIDE")
+
+# priority classes: messages always beat same-time local DECIDE timers —
+# this is what serializes the zero-latency schedule into sync turn order
+_MSG, _LOCAL = 0, 1
+
+
+def make_latency(spec) -> Callable:
+    """Normalize a latency spec into ``fn(rng, src, dst) -> float``.
+
+    Accepted specs: ``None``/``0``/``"zero"`` (the serialized schedule),
+    a non-negative float (constant), ``("uniform", lo, hi)``,
+    ``("exp", scale)``, or a callable ``(rng, src, dst) -> float``.
+    """
+    if spec is None or spec == "zero":
+        return lambda rng, s, d: 0.0
+    if callable(spec):
+        return spec
+    if isinstance(spec, (int, float)):
+        v = float(spec)
+        if v < 0:
+            raise ValueError(f"latency must be >= 0, got {v}")
+        return lambda rng, s, d: v
+    if isinstance(spec, (tuple, list)) and spec:
+        if spec[0] == "uniform" and len(spec) == 3:
+            lo, hi = float(spec[1]), float(spec[2])
+            if not 0 <= lo <= hi:
+                raise ValueError(f"bad uniform latency bounds: {spec!r}")
+            return lambda rng, s, d: float(rng.uniform(lo, hi))
+        if spec[0] == "exp" and len(spec) == 2:
+            scale = float(spec[1])
+            if scale < 0:
+                raise ValueError(f"bad exp latency scale: {spec!r}")
+            return lambda rng, s, d: float(rng.exponential(scale))
+    raise ValueError(f"unknown latency spec: {spec!r}")
+
+
+class _Sim:
+    """The event queue + clock: per-rank mailboxes collapse into one heap
+    because an entry's ``dst`` IS the mailbox.  Latencies are drawn per
+    message, so messages may overtake each other both across AND within a
+    link — e.g. a rank's retry LOCK_REQ to ``p`` can arrive before its
+    own earlier RELEASE of ``p``, in which case the requester queues
+    behind itself and is later granted via its own release; the handlers
+    tolerate this, and the protocol must stay safe under any such
+    interleaving (the property suite's job).  Only constant latency gives
+    per-link FIFO delivery (equal delays + ``(time, class, seq)``
+    tie-break in send order)."""
+
+    def __init__(self, latency_fn, rng, max_events: int,
+                 trace: Optional[list]):
+        self.heap: list = []
+        self.seq = 0
+        self.now = 0.0
+        self.messages = 0          # delivered network messages
+        self.processed = 0
+        self.max_events = max_events
+        self.latency = latency_fn
+        self.rng = rng
+        self.trace = trace
+
+    def push(self, time: float, klass: int, kind: int, src: int, dst: int,
+             data=None) -> None:
+        heapq.heappush(self.heap, (time, klass, self.seq, kind, src, dst,
+                                   data))
+        self.seq += 1
+
+    def send(self, kind: int, src: int, dst: int, data=None) -> None:
+        """Network send: delivery at now + one seeded latency draw."""
+        self.push(self.now + self.latency(self.rng, src, dst), _MSG, kind,
+                  src, dst, data)
+
+    def pop(self):
+        time, klass, seq, kind, src, dst, data = heapq.heappop(self.heap)
+        self.now = time
+        self.processed += 1
+        if self.processed > self.max_events:
+            raise RuntimeError(
+                f"async sim exceeded {self.max_events} events — "
+                "protocol liveness bug (a message loop that never drains)")
+        if klass == _MSG:
+            self.messages += 1
+        if self.trace is not None:
+            self.trace.append((time, seq, EVENT_KINDS[kind], src, dst))
+        return time, kind, src, dst, data
+
+
+def _run_gossip(sim: _Sim, summaries, info, *, k_rounds: int, fanout: int,
+                seed: int, deadline: Optional[float]) -> int:
+    """Stage 1a: the augmented-inform epidemic as latency-delayed messages.
+
+    Same message set, rng stream and merge/dedupe rule as the synchronous
+    ``build_peer_networks(seed=...)`` — at zero latency the heap pops in
+    creation order, which IS the synchronous round order, so the resulting
+    ``info`` maps are identical.  Nonzero latency permutes delivery (and
+    therefore the forward peer picks); a ``deadline`` drops deliveries
+    that arrive too late to inform this iteration's scoring — stale
+    gossip made observable.  Returns the number of dropped deliveries.
+    """
+    n = len(summaries)
+    rng = np.random.default_rng(seed)
+    dropped = 0
+    if k_rounds >= 1:
+        for r in range(n):
+            peers = pick_peers(rng, n, r, fanout, visited={r})
+            snap = dict(info[r])        # shared: payloads are read-only
+            for p in peers:
+                sim.send(GOSSIP, r, int(p),
+                         (1, frozenset([r]) | {int(p)}, snap))
+    while sim.heap:
+        time, kind, src, dst, data = sim.pop()
+        assert kind == GOSSIP
+        rnd, visited, payload = data
+        if deadline is not None and time > deadline:
+            dropped += 1                # arrived stale: no merge, no forward
+            continue
+        if not gossip_deliver(info[dst], payload):
+            continue
+        if rnd < k_rounds:
+            peers = pick_peers(rng, n, dst, fanout, visited=set(visited))
+            snap = dict(info[dst])
+            for p in peers:
+                sim.send(GOSSIP, dst, int(p),
+                         (rnd + 1, frozenset(visited) | {int(p)}, snap))
+    return dropped
+
+
+def _run_stage2(sim: _Sim, phase, state, clusters, work_lists, engine,
+                locks: LockManager, stats: ProtocolStats, *,
+                max_candidates: int, max_clusters_per_rank,
+                max_retries: int, on_event) -> None:
+    """Stage 2: the lock/transfer protocol as mailbox events (see the
+    module docstring for the event <-> Fig. 1 mapping)."""
+    n = phase.num_ranks
+    waiting = [False] * n        # sent LOCK_REQ, grant not yet received
+    attempt: List[Optional[tuple]] = [None] * n   # (diff, p) in flight
+    retries: List[Dict[int, int]] = [dict() for _ in range(n)]
+    spins = 0
+    max_spins = 50 * n + 1000    # mirrors the sync driver's turn cap
+
+    for r in range(n):
+        if work_lists[r]:
+            sim.push(sim.now, _LOCAL, DECIDE, r, r)
+
+    while sim.heap:
+        time, kind, src, dst, data = sim.pop()
+        if kind == DECIDE:
+            r = dst
+            assert not waiting[r], f"rank {r} decided while awaiting a grant"
+            if spins >= max_spins or not work_lists[r]:
+                continue
+            spins += 1
+            diff, p = work_lists[r].popleft()
+            waiting[r] = True
+            attempt[r] = (diff, p)
+            sim.send(LOCK_REQ, r, p)
+        elif kind == LOCK_REQ:
+            r, p = src, dst
+            if lock_request(locks, stats, r, p):
+                sim.send(GRANT, p, r)
+            # else: queued FIFO at p — the grant arrives on a release
+        elif kind == GRANT:
+            p, r = src, dst
+            assert waiting[r], f"rank {r} granted without an open request"
+            waiting[r] = False
+            diff, p_req = attempt[r]
+            attempt[r] = None
+            assert p_req == p
+            if locks.must_yield(r, p):
+                # Fig. 1 line 45: release unused, retry later (bounded —
+                # unlike the sync driver's unbounded re-queue, so a yield
+                # storm cannot stall termination)
+                note_yield(stats)
+                cnt = retries[r].get(p, 0)
+                if cnt < max_retries:
+                    retries[r][p] = cnt + 1
+                    work_lists[r].append((diff, p))
+            else:
+                # mutation under mutual exclusion: r must be p's holder of
+                # record for the whole (instantaneous) evaluation
+                assert locks.locked_by[p] == r
+                execute_transfer(state, clusters, engine, stats, r, p,
+                                 max_candidates, max_clusters_per_rank)
+            sim.send(RELEASE, r, p)
+            if work_lists[r]:
+                sim.push(sim.now, _LOCAL, DECIDE, r, r)
+        elif kind == RELEASE:
+            r, p = src, dst
+            nxt = lock_release(locks, stats, r, p)
+            if nxt is not None:
+                sim.send(GRANT, p, nxt)
+        else:  # pragma: no cover - defensive
+            raise AssertionError(f"unknown event kind {kind}")
+        if on_event is not None:
+            on_event(time, kind, src, dst, locks, state)
+
+    # liveness at termination: every request answered, every lock released
+    assert not any(waiting), "rank still awaiting a grant at termination"
+    assert locks.quiescent(), "locks/queues not drained at termination"
+
+
+def ccm_lb_async(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
+                 n_iter: int = 4, k_rounds: int = 2, fanout: int = 4,
+                 seed: int = 0, latency=0.0,
+                 gossip_timeout: Optional[float] = None,
+                 max_retries: int = 4, max_candidates: int = 12,
+                 max_clusters_per_rank: Optional[int] = None,
+                 use_engine: bool = True, backend: str = "numpy",
+                 incremental: bool = True, csr=None,
+                 collect_trace: bool = False,
+                 max_events: Optional[int] = None,
+                 on_event=None) -> CCMLBResult:
+    """CCM-LB through the asynchronous event-loop driver.
+
+    Same optimization knobs as :func:`repro.core.ccmlb.ccm_lb` (engine /
+    backend / incremental / csr), plus the simulation knobs:
+
+    ``latency``         message-latency spec (see :func:`make_latency`).
+                        The default ``0.0`` is the serialized schedule —
+                        bitwise-identical trajectories to ``ccm_lb``.
+    ``gossip_timeout``  per-iteration gossip deadline in sim-time units;
+                        deliveries past it are dropped (stale).  ``None``
+                        drains the epidemic fully.
+    ``max_retries``     per-(rank, peer) bound on yield re-queues.
+    ``collect_trace``   record the ``(time, seq, kind, src, dst)`` event
+                        trace into ``CCMLBResult.events``.
+    ``on_event``        optional hook ``(time, kind, src, dst, locks,
+                        state)`` called after every stage-2 event — the
+                        protocol-safety suite's invariant probe.
+
+    Iterations stay globally synchronized (the paper's outer loop);
+    asynchrony lives inside each iteration's gossip and lock/transfer
+    stages.  ``CCMLBResult.lock_conflicts`` / ``yields`` /
+    ``grant_chains`` / ``max_grant_chain`` are meaningful here, and
+    ``transfer_log`` replays onto the initial assignment to the returned
+    one exactly.
+    """
+    state = CCMState.build(phase, assignment, params, csr=csr)
+    engine = (PhaseEngine(state, backend=backend, incremental=incremental)
+              if use_engine else None)
+    transfer_log: list = []
+    state.add_transfer_listener(
+        lambda t, a, b: transfer_log.append(
+            (tuple(int(x) for x in t), int(a), int(b))))
+
+    latency_fn = make_latency(latency)
+    rng_lat = np.random.default_rng([seed, 0x51D])   # latency-draw stream
+    if max_events is None:
+        # DECIDEs are spin-capped, each spawns <= 3 protocol messages,
+        # gossip is <= n * fanout**k_rounds per iteration; x8 headroom
+        max_events = 8 * n_iter * (
+            4 * (50 * phase.num_ranks + 1000)
+            + phase.num_ranks * max(fanout, 1) ** max(k_rounds, 1))
+    trace: Optional[list] = [] if collect_trace else None
+    sim = _Sim(latency_fn, rng_lat, max_events, trace)
+    stats = ProtocolStats()
+    gossip_dropped = 0
+
+    trace_max = [state.max_work()]
+    trace_tot = [state.total_work()]
+    trace_imb = [state.imbalance()]
+
+    for it in range(n_iter):
+        clusters, summaries = iteration_summaries(state, phase,
+                                                  max_clusters_per_rank)
+        info = {r: {r: summaries[r]} for r in range(phase.num_ranks)}
+        deadline = (None if gossip_timeout is None
+                    else sim.now + gossip_timeout)
+        gossip_dropped += _run_gossip(
+            sim, summaries, info, k_rounds=k_rounds, fanout=fanout,
+            seed=seed * 1000 + it, deadline=deadline)
+        work_lists = build_work_lists(phase, summaries, info, params, engine)
+        locks = LockManager(phase.num_ranks)
+        _run_stage2(sim, phase, state, clusters, work_lists, engine, locks,
+                    stats, max_candidates=max_candidates,
+                    max_clusters_per_rank=max_clusters_per_rank,
+                    max_retries=max_retries, on_event=on_event)
+
+        trace_max.append(state.max_work())
+        trace_tot.append(state.total_work())
+        trace_imb.append(state.imbalance())
+
+    return CCMLBResult(state.assignment.copy(), state, trace_max, trace_tot,
+                       trace_imb, stats.transfers, stats.conflicts,
+                       engine_used=engine is not None, yields=stats.yields,
+                       grant_chains=stats.grant_chains,
+                       max_grant_chain=stats.max_grant_chain,
+                       messages=sim.messages, sim_time=sim.now,
+                       gossip_dropped=gossip_dropped, events=trace,
+                       transfer_log=transfer_log)
+
+
+def run_ccm_lb(phase, a0, params, *, async_mode: bool = False, latency=0.0,
+               gossip_timeout=None, batch_lock_events: int = 1,
+               **kw) -> CCMLBResult:
+    """Dispatch one balancing run to the synchronous driver or — with
+    ``async_mode=True`` — to this module's event-loop simulator, which
+    models message latency and makes the §IV-B conflict/yield/chain
+    counters on the returned ``CCMLBResult`` meaningful.  Used by the
+    ``repro.balance`` planners to expose the async knobs uniformly.
+    ``batch_lock_events`` is a synchronous-driver knob (the async turn
+    order depends on grant interleavings, so deferred disjoint-event
+    batching does not apply there); conversely ``latency`` /
+    ``gossip_timeout`` only exist under ``async_mode=True`` — either
+    inconsistency raises instead of silently dropping the knob."""
+    if not async_mode:
+        if not (latency is None or latency == 0.0 or latency == "zero"):
+            raise ValueError("latency is an async-driver knob; pass "
+                             "async_mode=True to simulate message latency")
+        if gossip_timeout is not None:
+            raise ValueError("gossip_timeout is an async-driver knob; pass "
+                             "async_mode=True")
+        return ccm_lb(phase, a0, params, batch_lock_events=batch_lock_events,
+                      **kw)
+    if batch_lock_events != 1:
+        raise ValueError("batch_lock_events is a synchronous-driver knob; "
+                         "unsupported with async_mode=True")
+    return ccm_lb_async(phase, a0, params, latency=latency,
+                        gossip_timeout=gossip_timeout, **kw)

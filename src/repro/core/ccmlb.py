@@ -66,6 +66,30 @@ window could in principle flip the selected exchange.
 tests/test_engine.py and the scaling benchmark assert identical
 trajectories empirically (they hold on every tested instance).
 
+Two drivers, one protocol
+-------------------------
+The §IV-B lock/grant machinery is shared between TWO drivers:
+
+  * this module's synchronous round-robin loops (``_stage2`` /
+    ``_stage2_batched``) — every lock is requested, used and released
+    within the turn that took it, so lock conflicts, deadlock-avoidance
+    yields and grant chains are STRUCTURALLY UNREACHABLE here
+    (``CCMLBResult.lock_conflicts`` is zero by construction on this
+    driver; see :class:`ProtocolStats`);
+  * the asynchronous discrete-event simulator
+    (:func:`repro.core.async_sim.ccm_lb_async`) — lock requests, grants,
+    yields and releases travel as messages with latency, so concurrent
+    requests collide, ``must_yield`` fires and queued requests drain
+    through real grant chains.
+
+Both drivers call the same handler functions (:func:`lock_request`,
+:func:`note_yield`, :func:`lock_release`, :func:`execute_transfer`) over
+the same :class:`~repro.core.locks.LockManager`, score stage 1 through the
+same :func:`build_work_lists`, and account protocol events uniformly in
+one :class:`ProtocolStats` — with zero latency the async event loop
+serializes into exactly this module's round-robin turn order and the two
+trajectories are bitwise-identical (tests/test_async_sim.py).
+
 Returns the improved assignment plus a trace (max work, imbalance, transfers
 per iteration) used by tests and benchmarks.
 """
@@ -99,6 +123,155 @@ class CCMLBResult:
     transfers: int
     lock_conflicts: int
     engine_used: bool = True
+    # §IV-B protocol counters (uniform accounting via ProtocolStats; all of
+    # them — lock_conflicts included — are structurally zero on the
+    # synchronous drivers and only become meaningful under the async
+    # event-loop driver, repro/core/async_sim.py)
+    yields: int = 0
+    grant_chains: int = 0
+    max_grant_chain: int = 0
+    # async-only observability (zero / None on the synchronous drivers)
+    messages: int = 0              # protocol + gossip messages delivered
+    sim_time: float = 0.0          # final simulated clock
+    gossip_dropped: int = 0        # deliveries past the gossip deadline
+    events: Optional[list] = None  # (time, seq, kind, src, dst) event trace
+    # every state mutation in execution order: (task-id tuple, r_from,
+    # r_to); replaying it onto the initial assignment reproduces
+    # ``assignment`` exactly (asserted by the async protocol-safety suite)
+    transfer_log: Optional[list] = None
+
+
+@dataclasses.dataclass
+class ProtocolStats:
+    """Uniform accounting of the §IV-B lock protocol, shared by the
+    synchronous round-robin drivers and the async event-loop driver.
+
+    On the synchronous drivers every lock is released within the turn that
+    took it, so ``conflicts`` / ``yields`` / chain counters can only ever
+    be zero THERE — by construction, not because the branches are tested
+    to be dead (the async driver reaches all of them; the coverage test in
+    tests/test_async_protocol.py pins that down).  ``conflicts`` counts
+    both queued lock requests and deadlock-avoidance yields, matching the
+    seed's synchronous accounting; ``yields`` separates the Fig. 1 line 45
+    releases.  A *grant chain* is a maximal run of queue handoffs on one
+    target (release -> grant to next queued requester); ``max_grant_chain``
+    is the longest such run's handoff count.
+    """
+
+    conflicts: int = 0
+    yields: int = 0
+    grant_chains: int = 0
+    max_grant_chain: int = 0
+    transfers: int = 0
+    # target -> current consecutive queue-handoff count (internal)
+    _chain_run: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+
+# --------------------------------------------------------------------------
+# Shared §IV-B protocol handlers — the ONLY code paths through which either
+# driver touches the lock manager or executes a transfer, so the two
+# drivers cannot drift apart in semantics or accounting.
+
+def lock_request(locks: LockManager, stats: ProtocolStats, r: int,
+                 p: int) -> bool:
+    """Fig. 1 line 42: rank ``r`` requests ``p``'s lock.  A busy target
+    queues the request FIFO (granted later through a release handoff) and
+    counts one conflict."""
+    granted = locks.request(r, p)
+    if not granted:
+        stats.conflicts += 1
+    return granted
+
+
+def note_yield(stats: ProtocolStats) -> None:
+    """Fig. 1 line 45 fired: the holder is itself locked by r_x <= target,
+    so it releases the lock unused and retries later."""
+    stats.conflicts += 1
+    stats.yields += 1
+
+
+def lock_release(locks: LockManager, stats: ProtocolStats, holder: int,
+                 target: int) -> Optional[int]:
+    """Fig. 1 line 49: release ``target``; a queued requester (returned)
+    receives the lock — one handoff link of ``target``'s grant chain."""
+    nxt = locks.release(holder, target)
+    if nxt is None:
+        stats._chain_run.pop(target, None)     # chain episode over
+    else:
+        run = stats._chain_run.get(target, 0) + 1
+        stats._chain_run[target] = run
+        if run == 1:
+            stats.grant_chains += 1
+        if run > stats.max_grant_chain:
+            stats.max_grant_chain = run
+    return nxt
+
+
+def execute_transfer(state, clusters, engine, stats: ProtocolStats, r: int,
+                     p: int, max_candidates: int,
+                     max_clusters_per_rank) -> bool:
+    """Fig. 1 lines 46–48 (recvUpdate / TryTransfer / sendUpdate): exact
+    evaluation with fresh info, execute the best positive exchange, rebuild
+    the two touched ranks' clusters.  Returns True iff a transfer ran."""
+    best = try_transfer(state, clusters[r], clusters[p], r, p,
+                        max_candidates, engine=engine)
+    if best is None:
+        return False
+    stats.transfers += 1
+    _rebuild_local(state, clusters, engine, max_clusters_per_rank, r, p)
+    return True
+
+
+def iteration_summaries(state, phase, max_clusters_per_rank):
+    """Per-iteration prologue shared by both drivers: cluster every rank
+    and summarize (rank + cluster summaries are this iteration's gossip
+    payloads)."""
+    clusters = build_clusters(state,
+                              max_clusters_per_rank=max_clusters_per_rank)
+    csum = summarize_clusters(state, clusters)
+    summaries = {r: summarize_rank(state, r, csum[r])
+                 for r in range(phase.num_ranks)}
+    return clusters, summaries
+
+
+def build_work_lists(phase, summaries, info, params,
+                     engine) -> Dict[int, deque]:
+    """Stage 1 (Fig. 1 lines 31–40): every rank scores its gossip-known
+    peers with the stale-info approximation and sorts a best-first work
+    list (ties broken by peer id, so the lists depend only on the known-
+    peer SETS, not dict insertion order).  Shared by both drivers — the
+    async zero-latency parity bar starts from identical lists.
+
+    The batched path reads the global summary tables — valid because
+    gossip payloads are references to this iteration's summary objects, so
+    only the known-peer SETS are stale, never the values (see
+    batch_peer_diffs).
+    """
+    work_lists: Dict[int, deque] = {}
+    tables = (build_summary_tables(summaries, params)
+              if engine is not None else None)
+    for r in range(phase.num_ranks):
+        scored: List[Tuple[float, int]] = []
+        if engine is not None:
+            peers = np.array([p for p in info[r] if p != r], np.int64)
+            # the tables are valid stand-ins for the gossip payloads
+            # only while payloads alias this iteration's summaries
+            assert all(info[r][int(p)] is summaries[int(p)]
+                       for p in peers), \
+                "gossip payloads must alias current summaries"
+            diffs = batch_peer_diffs(tables, r, peers, params)
+            scored = [(float(d), int(p)) for d, p in zip(diffs, peers)
+                      if d > 0]
+        else:
+            for p, psum in info[r].items():
+                if p == r:
+                    continue
+                diff = approx_best_diff(summaries[r], psum, params)
+                if diff > 0:
+                    scored.append((diff, p))
+        scored.sort(key=lambda t: (-t[0], t[1]))
+        work_lists[r] = deque(scored)
+    return work_lists
 
 
 def ccm_lb(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
@@ -119,68 +292,41 @@ def ccm_lb(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
     state = CCMState.build(phase, assignment, params, csr=csr)
     engine = (PhaseEngine(state, backend=backend, incremental=incremental)
               if use_engine else None)
+    transfer_log: list = []
+    state.add_transfer_listener(
+        lambda t, a, b: transfer_log.append(
+            (tuple(int(x) for x in t), int(a), int(b))))
     trace_max = [state.max_work()]
     trace_tot = [state.total_work()]
     trace_imb = [state.imbalance()]
-    transfers = 0
-    conflicts = 0
+    stats = ProtocolStats()
 
     for it in range(n_iter):
-        clusters = build_clusters(state,
-                                  max_clusters_per_rank=max_clusters_per_rank)
-        csum = summarize_clusters(state, clusters)
-        summaries = {r: summarize_rank(state, r, csum[r])
-                     for r in range(phase.num_ranks)}
+        clusters, summaries = iteration_summaries(state, phase,
+                                                  max_clusters_per_rank)
         info = build_peer_networks(summaries, k_rounds=k_rounds,
                                    fanout=fanout, seed=seed * 1000 + it)
-
-        # stage 1: score peers from (stale) gossip info.  The batched path
-        # reads the global summary tables — valid because gossip payloads
-        # are references to this iteration's summary objects, so only the
-        # known-peer SETS are stale, never the values (see batch_peer_diffs)
-        work_lists: Dict[int, deque] = {}
-        if engine is not None:
-            tables = build_summary_tables(summaries, params)
-        for r in range(phase.num_ranks):
-            scored: List[Tuple[float, int]] = []
-            if engine is not None:
-                peers = np.array([p for p in info[r] if p != r], np.int64)
-                # the tables are valid stand-ins for the gossip payloads
-                # only while payloads alias this iteration's summaries
-                assert all(info[r][int(p)] is summaries[int(p)]
-                           for p in peers), \
-                    "gossip payloads must alias current summaries"
-                diffs = batch_peer_diffs(tables, r, peers, params)
-                scored = [(float(d), int(p)) for d, p in zip(diffs, peers)
-                          if d > 0]
-            else:
-                for p, psum in info[r].items():
-                    if p == r:
-                        continue
-                    diff = approx_best_diff(summaries[r], psum, params)
-                    if diff > 0:
-                        scored.append((diff, p))
-            scored.sort(key=lambda t: (-t[0], t[1]))
-            work_lists[r] = deque(scored)
+        work_lists = build_work_lists(phase, summaries, info, params, engine)
 
         # stage 2: lock/transfer event loop
         if batch_lock_events > 1:
-            dt, dc = _stage2_batched(phase, state, clusters, work_lists,
-                                     engine, max_candidates,
-                                     max_clusters_per_rank, batch_lock_events)
+            _stage2_batched(phase, state, clusters, work_lists, engine,
+                            max_candidates, max_clusters_per_rank,
+                            batch_lock_events, stats)
         else:
-            dt, dc = _stage2(phase, state, clusters, work_lists, engine,
-                             max_candidates, max_clusters_per_rank)
-        transfers += dt
-        conflicts += dc
+            _stage2(phase, state, clusters, work_lists, engine,
+                    max_candidates, max_clusters_per_rank, stats)
 
         trace_max.append(state.max_work())
         trace_tot.append(state.total_work())
         trace_imb.append(state.imbalance())
 
     return CCMLBResult(state.assignment.copy(), state, trace_max, trace_tot,
-                       trace_imb, transfers, conflicts,
-                       engine_used=engine is not None)
+                       trace_imb, stats.transfers, stats.conflicts,
+                       engine_used=engine is not None, yields=stats.yields,
+                       grant_chains=stats.grant_chains,
+                       max_grant_chain=stats.max_grant_chain,
+                       transfer_log=transfer_log)
 
 
 def _rebuild_local(state, clusters, engine, max_clusters_per_rank, r, p):
@@ -195,9 +341,15 @@ def _rebuild_local(state, clusters, engine, max_clusters_per_rank, r, p):
 
 
 def _stage2(phase, state, clusters, work_lists, engine, max_candidates,
-            max_clusters_per_rank) -> Tuple[int, int]:
-    """One-event-at-a-time lock/transfer loop (the reference event order)."""
-    transfers = conflicts = 0
+            max_clusters_per_rank, stats: ProtocolStats) -> None:
+    """One-event-at-a-time lock/transfer loop (the reference event order).
+
+    Every lock taken here is released before the turn ends and queued
+    requests are drained synchronously on release (_handle_grant), so the
+    not-granted and must-yield branches are structurally unreachable
+    through this driver — they exist for protocol fidelity and are
+    load-bearing under the async driver, which shares the handlers.
+    """
     locks = LockManager(phase.num_ranks)
     # round-robin over ranks for fairness; each "turn" a rank either
     # requests its best remaining peer or is idle.  Queued lock requests
@@ -212,9 +364,7 @@ def _stage2(phase, state, clusters, work_lists, engine, max_candidates,
         if not work_lists[r]:
             continue
         diff, p = work_lists[r].popleft()
-        granted = locks.request(r, p)
-        if not granted:
-            conflicts += 1
+        if not lock_request(locks, stats, r, p):
             # re-queue the attempt at the back (retry later)
             work_lists[r].append((diff * 0.5, p))
             if work_lists[r]:
@@ -222,31 +372,25 @@ def _stage2(phase, state, clusters, work_lists, engine, max_candidates,
             continue
         # granted: deadlock-avoidance check (Fig.1 line 45)
         if locks.must_yield(r, p):
-            conflicts += 1
-            nxt = locks.release(r, p)
+            note_yield(stats)
+            nxt = lock_release(locks, stats, r, p)
             work_lists[r].append((diff, p))
             active.append(r)
             if nxt is not None:
-                transfers += _handle_grant(
-                    nxt, p, state, clusters, locks, work_lists, active,
-                    max_candidates, max_clusters_per_rank, engine)
+                _handle_grant(nxt, p, state, clusters, locks, work_lists,
+                              active, max_candidates, max_clusters_per_rank,
+                              engine, stats)
             continue
         # fresh info exchange + exact transfer (recvUpdate/TryTransfer)
-        best = try_transfer(state, clusters[r], clusters[p], r, p,
-                            max_candidates, engine=engine)
-        if best is not None:
-            transfers += 1
-            # cluster membership changed on r and p: rebuild locally
-            _rebuild_local(state, clusters, engine, max_clusters_per_rank,
-                           r, p)
-        nxt = locks.release(r, p)
+        execute_transfer(state, clusters, engine, stats, r, p,
+                         max_candidates, max_clusters_per_rank)
+        nxt = lock_release(locks, stats, r, p)
         if nxt is not None:
-            transfers += _handle_grant(
-                nxt, p, state, clusters, locks, work_lists, active,
-                max_candidates, max_clusters_per_rank, engine)
+            _handle_grant(nxt, p, state, clusters, locks, work_lists, active,
+                          max_candidates, max_clusters_per_rank, engine,
+                          stats)
         if work_lists[r]:
             active.append(r)
-    return transfers, conflicts
 
 
 @dataclasses.dataclass
@@ -265,7 +409,7 @@ class _PendingEvent:
 
 def _stage2_batched(phase, state, clusters, work_lists, engine,
                     max_candidates, max_clusters_per_rank,
-                    batch: int) -> Tuple[int, int]:
+                    batch: int, stats: ProtocolStats) -> None:
     """Lock/transfer loop with deferred, batched event scoring.
 
     Identical turn order to :func:`_stage2` (lock state never outlives a
@@ -281,14 +425,12 @@ def _stage2_batched(phase, state, clusters, work_lists, engine,
     a flush before the next chain element scores), so chains ride the same
     deferred-scoring machinery with the same trajectory argument.
     """
-    transfers = conflicts = 0
     locks = LockManager(phase.num_ranks)
     active = deque(r for r in range(phase.num_ranks) if work_lists[r])
     pending: List[_PendingEvent] = []
     busy: set = set()
 
     def flush():
-        nonlocal transfers
         if not pending:
             return
         results = engine.batch_exchange_eval_multi([
@@ -299,7 +441,7 @@ def _stage2_batched(phase, state, clusters, work_lists, engine,
                                e.w_before)
             if best is not None:
                 state.swap(best.tasks_ab, e.r, best.tasks_ba, e.p)
-                transfers += 1
+                stats.transfers += 1
                 _rebuild_local(state, clusters, engine,
                                max_clusters_per_rank, e.r, e.p)
         pending.clear()
@@ -328,35 +470,33 @@ def _stage2_batched(phase, state, clusters, work_lists, engine,
         if r in busy or work_lists[r][0][1] in busy:
             flush()     # this turn reads/mutates a deferred rank
         diff, p = work_lists[r].popleft()
-        granted = locks.request(r, p)
-        if not granted:
-            conflicts += 1
+        if not lock_request(locks, stats, r, p):
             work_lists[r].append((diff * 0.5, p))
             if work_lists[r]:
                 active.append(r)
             continue
         if locks.must_yield(r, p):
-            conflicts += 1
-            nxt = locks.release(r, p)
+            note_yield(stats)
+            nxt = lock_release(locks, stats, r, p)
             work_lists[r].append((diff, p))
             active.append(r)
             if nxt is not None:
                 _handle_grant_deferred(nxt, p, state, locks, work_lists,
-                                       active, busy, defer, flush)
+                                       active, busy, defer, flush, stats)
             continue
         defer(r, p)
-        nxt = locks.release(r, p)
+        nxt = lock_release(locks, stats, r, p)
         if nxt is not None:
             _handle_grant_deferred(nxt, p, state, locks, work_lists, active,
-                                   busy, defer, flush)
+                                   busy, defer, flush, stats)
         if work_lists[r]:
             active.append(r)
     flush()
-    return transfers, conflicts
 
 
 def _handle_grant_deferred(r: int, p: int, state, locks, work_lists, active,
-                           busy, defer, flush) -> None:
+                           busy, defer, flush,
+                           stats: ProtocolStats) -> None:
     """Grant-chain drain for the batched path: chain events are deferred
     through the same single-flush machinery instead of scored scalarly.
 
@@ -372,14 +512,15 @@ def _handle_grant_deferred(r: int, p: int, state, locks, work_lists, active,
     cur: Optional[int] = r
     while cur is not None:
         if locks.must_yield(cur, p):
-            nxt = locks.release(cur, p)
+            note_yield(stats)
+            nxt = lock_release(locks, stats, cur, p)
             active.append(cur)
             cur = nxt
             continue
         if cur in busy or p in busy:
             flush()     # chain event must see the deferred swaps it touches
         defer(cur, p)
-        nxt = locks.release(cur, p)
+        nxt = lock_release(locks, stats, cur, p)
         post.append(cur)
         cur = nxt
     for rr in reversed(post):
@@ -388,8 +529,8 @@ def _handle_grant_deferred(r: int, p: int, state, locks, work_lists, active,
 
 
 def _handle_grant(r: int, p: int, state, clusters, locks, work_lists, active,
-                  max_candidates, max_clusters_per_rank=None, engine=None
-                  ) -> int:
+                  max_candidates, max_clusters_per_rank, engine,
+                  stats: ProtocolStats) -> int:
     """Drain the lock-release handoff chain on ``p`` starting at requester
     ``r``.  Iterative (a long chain of queued requesters must not hit the
     Python recursion limit at large rank counts); the re-activation order
@@ -397,25 +538,22 @@ def _handle_grant(r: int, p: int, state, clusters, locks, work_lists, active,
     immediately, transferring ranks re-activate after everyone deeper in the
     chain.  Returns the number of executed transfers.
     """
-    n_transfers = 0
+    before = stats.transfers
     post: List[int] = []  # ranks to re-activate after the chain, innermost first
     cur: Optional[int] = r
     while cur is not None:
         if locks.must_yield(cur, p):
-            nxt = locks.release(cur, p)
+            note_yield(stats)
+            nxt = lock_release(locks, stats, cur, p)
             active.append(cur)
             cur = nxt
             continue
-        best = try_transfer(state, clusters[cur], clusters[p], cur, p,
-                            max_candidates, engine=engine)
-        if best is not None:
-            n_transfers += 1
-            _rebuild_local(state, clusters, engine, max_clusters_per_rank,
-                           cur, p)
-        nxt = locks.release(cur, p)
+        execute_transfer(state, clusters, engine, stats, cur, p,
+                         max_candidates, max_clusters_per_rank)
+        nxt = lock_release(locks, stats, cur, p)
         post.append(cur)
         cur = nxt
     for rr in reversed(post):
         if work_lists[rr]:
             active.append(rr)
-    return n_transfers
+    return stats.transfers - before

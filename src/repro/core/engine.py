@@ -663,8 +663,11 @@ def batch_peer_diffs(t: SummaryTables, r: int, peers: np.ndarray,
 
     ASSUMPTION: the tables hold THIS iteration's summaries and gossip
     payloads are references to those same objects (``info[r][p] is
-    summaries[p]``, true of ``build_peer_networks`` today) — staleness is
-    only in WHICH peers a rank knows, never in the values.  If gossip ever
+    summaries[p]``, true of ``build_peer_networks`` AND of the async
+    event-loop driver's gossip stage — repro/core/async_sim.py snapshots
+    ``info_known`` dicts whose VALUES alias the iteration's summaries, and
+    its gossip deadline only drops whole deliveries) — staleness is only
+    in WHICH peers a rank knows, never in the values.  If gossip ever
     carries summaries from older iterations, the scalar path would score
     from what rank ``r`` actually received while this path scores from the
     global tables, and the identical-trajectory contract breaks; the tables

@@ -32,6 +32,24 @@ import numpy as np
 from repro.core.clusters import RankSummary
 
 
+def gossip_deliver(known: Dict[int, RankSummary],
+                   payload: Dict[int, RankSummary]) -> bool:
+    """Deliver one gossip payload into a rank's ``info_known`` map.
+
+    Returns False when the payload carries nothing new (the dedupe rule:
+    no merge, and the caller must not forward — see the module docstring);
+    True after merging at least one new summary.  Shared by the
+    synchronous round-driven :func:`build_peer_networks` and the async
+    event-loop driver (repro/core/async_sim.py), so both epidemics apply
+    the exact same merge/dedupe semantics.
+    """
+    if payload.keys() <= known.keys():
+        return False
+    for k, v in payload.items():
+        known.setdefault(k, v)
+    return True
+
+
 def build_peer_networks(summaries: Dict[int, RankSummary], *, k_rounds: int,
                         fanout: int, seed: int,
                         ) -> Dict[int, Dict[int, RankSummary]]:
@@ -44,10 +62,12 @@ def build_peer_networks(summaries: Dict[int, RankSummary], *, k_rounds: int,
 
     # message = (round, visited set, payload snapshot keys)
     # round k messages, delivered synchronously at round boundary (async in
-    # the real runtime; the simulation just needs *an* admissible ordering).
+    # the real runtime; the simulation just needs *an* admissible ordering —
+    # repro/core/async_sim.py delivers the SAME messages through a latency-
+    # aware event queue and degenerates to this order at zero latency).
     msgs: List[tuple] = []
     for r in ranks:
-        peers = _pick_peers(rng, n, r, fanout, visited={r})
+        peers = pick_peers(rng, n, r, fanout, visited={r})
         snap = dict(info_known[r])      # shared: payloads are read-only
         for p in peers:
             msgs.append((1, p, frozenset([r]) | {p}, snap))
@@ -55,21 +75,22 @@ def build_peer_networks(summaries: Dict[int, RankSummary], *, k_rounds: int,
     for _ in range(k_rounds):
         nxt: List[tuple] = []
         for rnd, dst, visited, payload in msgs:
-            known = info_known[dst]
-            if payload.keys() <= known.keys():
+            if not gossip_deliver(info_known[dst], payload):
                 continue    # dedupe: nothing new — skip merge AND forward
-            for k, v in payload.items():
-                known.setdefault(k, v)
             if rnd < k_rounds:
-                peers = _pick_peers(rng, n, dst, fanout, visited=set(visited))
-                snap = dict(known)
+                peers = pick_peers(rng, n, dst, fanout, visited=set(visited))
+                snap = dict(info_known[dst])
                 for p in peers:
                     nxt.append((rnd + 1, p, frozenset(visited) | {p}, snap))
         msgs = nxt
     return info_known
 
 
-def _pick_peers(rng, n: int, me: int, fanout: int, visited: Set[int]):
+def pick_peers(rng, n: int, me: int, fanout: int, visited: Set[int]):
+    """``fanout`` forward targets excluding ``visited`` — the epidemic's
+    only source of randomness; consumption order must match between the
+    two drivers for the zero-latency parity bar (it does: both pick at
+    delivery time, and zero latency reproduces the round order)."""
     candidates = [r for r in range(n) if r != me and r not in visited]
     if not candidates:
         return []

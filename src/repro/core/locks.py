@@ -50,3 +50,18 @@ class LockManager:
 
     def is_locked(self, r: int) -> bool:
         return self.locked_by[r] is not None
+
+    def held_by(self, holder: int) -> list:
+        """Targets currently locked by ``holder``.  The async protocol
+        suite asserts through this after every event that a rank holds at
+        most one lock net of in-flight releases (a rank only ever has one
+        outstanding request; a released target keeps the old holder of
+        record until the RELEASE message lands)."""
+        return [t for t, h in self.locked_by.items() if h == holder]
+
+    def quiescent(self) -> bool:
+        """No lock held and no request queued — the stage-end liveness
+        condition both drivers must reach (asserted by the async driver
+        at every stage-2 termination)."""
+        return (all(h is None for h in self.locked_by.values())
+                and all(not q for q in self.queue.values()))

@@ -139,6 +139,19 @@ def random_phase(key: int, *, num_ranks: int, num_tasks: int, num_blocks: int,
     return phase
 
 
+def scaling_phase(ranks: int) -> Phase:
+    """THE ``ccmlb_scaling`` benchmark instance family (25 tasks, 3 blocks
+    and 50 comm edges per rank, uncapped memory).  Lives here — not
+    re-derived per consumer — because several parity bars are defined ON
+    these instances: benchmarks/ccmlb_scaling.py asserts assignment
+    identity across all engine configs, and benchmarks/ccmlb_async.py +
+    tests/test_async_sim.py assert the async driver's zero-latency
+    bitwise-parity bar on the same phases."""
+    return random_phase(1, num_ranks=ranks, num_tasks=25 * ranks,
+                        num_blocks=3 * ranks, num_comms=50 * ranks,
+                        mem_cap=1e12)
+
+
 def initial_assignment(phase: Phase, mode: str = "home") -> np.ndarray:
     """Paper default: tasks start co-located with their block's home rank."""
     k = phase.num_tasks

@@ -1,0 +1,172 @@
+"""Property-based §IV-B protocol-safety suite for the async driver.
+
+Invariants, checked after EVERY stage-2 event via the ``on_event`` probe
+and at termination:
+
+  * safety — each rank holds at most one lock at any time NET of releases
+    in flight (a yielding/finished holder sends RELEASE and moves on; the
+    target's ``locked_by`` keeps the old holder of record until the
+    message arrives — correct message-passing behavior, so the probe
+    reconstructs in-flight releases from the event stream), each rank is
+    locked by at most one holder (single-slot ``locked_by``), and every
+    transfer executes under mutual exclusion (asserted inside the driver
+    itself: ``locked_by[p] == r`` at evaluation time);
+  * no lost or duplicated transfers — the transfer log replays from the
+    initial assignment to exactly the returned one (every entry's source
+    rank must match at replay time, so duplication/loss both fail);
+  * liveness / deadlock-freedom — the event loop terminates with all
+    mailboxes drained and the lock table quiescent (asserted inside
+    ``_run_stage2``; the ``max_events`` guard turns a non-terminating
+    protocol bug into a loud RuntimeError instead of a hang);
+  * optimizer contract — the per-iteration max-work trace is monotone and
+    the final max work lands within a tolerance band of the synchronous
+    result (empirically the worst observed ratio over the sweep space is
+    ~1.03; the band asserts 1.15).
+
+Plus the coverage-of-dead-branches pin: on a fixed contended instance the
+async driver MUST produce lock conflicts, yields and a grant chain of
+length >= 2 — so the §IV-B branches (structurally unreachable through the
+synchronous round-robin drivers) can never silently go dead again.
+"""
+import numpy as np
+import pytest
+
+from repro.core import CCMParams, ccm_lb, ccm_lb_async, random_phase
+from repro.core.async_sim import GRANT, RELEASE
+from repro.core.problem import initial_assignment
+
+PARAMS = CCMParams(delta=1e-9)
+LATENCIES = (0.0, 0.2, ("uniform", 0.1, 0.6), ("uniform", 0.5, 1.5),
+             ("exp", 0.7))
+
+
+def _replay(a0: np.ndarray, transfer_log) -> np.ndarray:
+    """Replay the mutation log; asserts every entry's source rank matches
+    (a lost, duplicated or reordered-across-dependency transfer fails)."""
+    a = a0.copy()
+    for tasks, r_from, r_to in transfer_log:
+        idx = list(tasks)
+        assert (a[idx] == r_from).all(), \
+            f"transfer {tasks}: {r_from}->{r_to} does not match replay state"
+        a[idx] = r_to
+    return a
+
+
+def _check_protocol_safety(seed: int, lat_index: int):
+    phase = random_phase(seed, num_ranks=8, num_tasks=160, num_blocks=20,
+                         num_comms=320, mem_cap=1e12)
+    a0 = initial_assignment(phase, "home" if seed % 2 else "round_robin")
+    latency = LATENCIES[lat_index % len(LATENCIES)]
+    events = [0]
+    # (holder, target) pairs whose RELEASE is in flight: the grant handler
+    # always sends RELEASE before returning (kind 2 == GRANT), and the
+    # release lands when its event processes (kind 3 == RELEASE)
+    pending_release = set()
+
+    def probe(time, kind, src, dst, locks, state):
+        events[0] += 1
+        if kind == GRANT:                   # processed at dst: holder moves
+            pending_release.add((dst, src))  # on, its RELEASE is in flight
+        elif kind == RELEASE:               # landed at dst
+            pending_release.discard((src, dst))
+        for h in range(locks.n_ranks):
+            live = [t for t in locks.held_by(h)
+                    if (h, t) not in pending_release]
+            assert len(live) <= 1, \
+                f"rank {h} holds live locks {live} at t={time}"
+
+    res = ccm_lb_async(phase, a0, PARAMS, n_iter=3, seed=seed,
+                       latency=latency, on_event=probe)
+    assert events[0] > 0
+    # no lost/duplicated transfers: the log replays to the final assignment
+    np.testing.assert_array_equal(_replay(a0, res.transfer_log),
+                                  res.assignment)
+    assert len(res.transfer_log) >= res.transfers  # swaps log two entries
+    # monotone improvement per iteration
+    for a, b in zip(res.max_work, res.max_work[1:]):
+        assert b <= a + 1e-9
+    # tolerance band vs the synchronous trajectory
+    ref = ccm_lb(phase, a0, PARAMS, n_iter=3, seed=seed)
+    assert res.max_work[-1] <= ref.max_work[-1] * 1.15 + 1e-9, \
+        (res.max_work[-1], ref.max_work[-1], latency)
+
+
+# ---------------------------------------------------------- seeded fallback
+@pytest.mark.parametrize("seed", range(10))
+def test_protocol_safety_seeded(seed):
+    """Seeded sweep of the property (always runs, hypothesis or not)."""
+    _check_protocol_safety(seed, lat_index=seed)
+
+
+try:  # hypothesis variant: wider seed/latency space with dev deps
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 100_000),
+           lat_index=st.integers(0, len(LATENCIES) - 1))
+    def test_protocol_safety_property(seed, lat_index):
+        _check_protocol_safety(seed, lat_index)
+except ImportError:  # pragma: no cover - exercised without dev deps
+    pass
+
+
+# --------------------------------------------------- dead-branch coverage
+def _contended_instance():
+    """Half the ranks start empty, so stage 1 points many loaded ranks at
+    the same underloaded peers and latency windows overlap their lock
+    requests — conflicts, yields and multi-hop grant chains all fire."""
+    phase = random_phase(1, num_ranks=16, num_tasks=400, num_blocks=48,
+                         num_comms=800, mem_cap=1e12)
+    a0 = (np.arange(phase.num_tasks) % 8).astype(np.int64)
+    return phase, a0
+
+
+def test_dead_branches_are_reachable_async():
+    """Coverage pin (satellite): the §IV-B branches must actually fire on
+    this fixed seeded instance — lock conflicts, line-45 yields, and a
+    grant chain of >= 2 consecutive queue handoffs."""
+    phase, a0 = _contended_instance()
+    res = ccm_lb_async(phase, a0, PARAMS, n_iter=4, seed=3, fanout=6,
+                       latency=("uniform", 0.5, 1.5))
+    assert res.lock_conflicts > 0
+    assert res.yields > 0
+    assert res.grant_chains > 0
+    assert res.max_grant_chain >= 2
+    assert res.transfers > 0
+    np.testing.assert_array_equal(_replay(a0, res.transfer_log),
+                                  res.assignment)
+    # and the balancer still does its job under contention
+    assert res.imbalance[-1] < res.imbalance[0] * 0.5
+
+
+def test_sync_driver_conflicts_structurally_zero():
+    """The documented limitation the async driver exists to close: the
+    synchronous round-robin loop releases every lock within the turn that
+    took it, so even the contended instance cannot produce conflicts,
+    yields or chains there (uniform accounting via the shared handlers)."""
+    phase, a0 = _contended_instance()
+    for kw in (dict(), dict(use_engine=False), dict(batch_lock_events=8)):
+        res = ccm_lb(phase, a0, PARAMS, n_iter=4, seed=3, fanout=6, **kw)
+        assert res.lock_conflicts == 0
+        assert res.yields == 0
+        assert res.grant_chains == 0 and res.max_grant_chain == 0
+
+
+def test_max_events_guard_raises_not_hangs():
+    """A liveness bug must surface as RuntimeError, not a silent hang."""
+    phase, a0 = _contended_instance()
+    with pytest.raises(RuntimeError, match="events"):
+        ccm_lb_async(phase, a0, PARAMS, n_iter=2, seed=3,
+                     latency=("uniform", 0.5, 1.5), max_events=50)
+
+
+def test_yield_retries_are_bounded():
+    """max_retries bounds re-queues: with zero retries allowed a yielding
+    rank drops the attempt instead of looping, and the run still
+    terminates safely."""
+    phase, a0 = _contended_instance()
+    res = ccm_lb_async(phase, a0, PARAMS, n_iter=3, seed=3, fanout=6,
+                       latency=("uniform", 0.5, 1.5), max_retries=0)
+    assert res.yields > 0
+    np.testing.assert_array_equal(_replay(a0, res.transfer_log),
+                                  res.assignment)

@@ -1,0 +1,176 @@
+"""Async event-loop driver vs the synchronous reference (§IV-B).
+
+The zero-latency parity bar: with the default ``latency=0.0`` the event
+queue serializes into the synchronous driver's round-robin turn order and
+``ccm_lb_async`` must be bitwise-identical to ``ccm_lb`` — assignment,
+transfer sequence, work traces — on the ``ccmlb_scaling`` benchmark
+instances.  Plus: the async gossip stage reproduces the synchronous
+epidemic exactly at zero latency, runs are deterministic (same seed ->
+same event trace), and the f64 backends stay in lockstep under latency.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (CCMParams, ccm_lb, ccm_lb_async, make_latency,
+                        random_phase, run_ccm_lb)
+from repro.core.async_sim import _Sim, _run_gossip
+from repro.core.ccmlb import iteration_summaries
+from repro.core.ccm import CCMState
+from repro.core.gossip import build_peer_networks
+from repro.core.problem import initial_assignment, scaling_phase
+
+PARAMS = CCMParams(delta=1e-9)
+
+
+def _assert_bitwise_equal(got, ref):
+    np.testing.assert_array_equal(got.assignment, ref.assignment)
+    assert got.transfer_log == ref.transfer_log   # exact transfer sequence
+    assert got.transfers == ref.transfers
+    assert got.max_work == ref.max_work           # float lists, bitwise
+    assert got.total_work == ref.total_work
+    assert got.imbalance == ref.imbalance
+
+
+@pytest.mark.parametrize("ranks", [16, 64])
+def test_zero_latency_bitwise_identical_to_sync(ranks):
+    """Acceptance bar (a): serialized zero-latency async == sync ccm_lb on
+    the ccmlb_scaling instances (assignment AND transfer sequence)."""
+    phase = scaling_phase(ranks)
+    a0 = initial_assignment(phase)
+    ref = ccm_lb(phase, a0, PARAMS, n_iter=4, k_rounds=2, fanout=4, seed=0)
+    got = ccm_lb_async(phase, a0, PARAMS, n_iter=4, k_rounds=2, fanout=4,
+                       seed=0)
+    _assert_bitwise_equal(got, ref)
+    # the serialized schedule cannot contend — uniformly with the sync
+    # driver, where these are zero BY CONSTRUCTION (ProtocolStats)
+    assert got.lock_conflicts == ref.lock_conflicts == 0
+    assert got.yields == 0 and got.grant_chains == 0
+    assert got.sim_time == 0.0 and got.messages > 0
+
+
+def test_zero_latency_parity_scalar_path():
+    """The parity bar holds on the scalar reference path too (the shared
+    handlers are driver code, not engine code)."""
+    phase = random_phase(3, num_ranks=12, num_tasks=240, num_blocks=30,
+                        num_comms=480, mem_cap=1e12)
+    a0 = initial_assignment(phase)
+    ref = ccm_lb(phase, a0, PARAMS, n_iter=3, seed=2, use_engine=False)
+    got = ccm_lb_async(phase, a0, PARAMS, n_iter=3, seed=2, use_engine=False)
+    _assert_bitwise_equal(got, ref)
+
+
+@pytest.mark.parametrize("seed,fanout,k_rounds", [(1, 2, 1), (5, 6, 3)])
+def test_zero_latency_parity_other_gossip_configs(seed, fanout, k_rounds):
+    phase = random_phase(seed, num_ranks=10, num_tasks=200, num_blocks=24,
+                        num_comms=400, mem_cap=1e12)
+    a0 = initial_assignment(phase)
+    kw = dict(n_iter=3, k_rounds=k_rounds, fanout=fanout, seed=seed)
+    _assert_bitwise_equal(ccm_lb_async(phase, a0, PARAMS, **kw),
+                          ccm_lb(phase, a0, PARAMS, **kw))
+
+
+def test_async_gossip_matches_sync_epidemic_at_zero_latency():
+    """Stage 1a in isolation: the event-queue epidemic delivers the same
+    messages in the same (round) order as build_peer_networks, so the
+    per-rank known-peer maps come out identical."""
+    phase = random_phase(2, num_ranks=24, num_tasks=96, num_blocks=12,
+                        num_comms=96, mem_cap=1e12)
+    state = CCMState.build(phase, initial_assignment(phase), PARAMS)
+    _, summaries = iteration_summaries(state, phase, None)
+    ref = build_peer_networks(summaries, k_rounds=2, fanout=4, seed=123)
+    sim = _Sim(make_latency(0.0), np.random.default_rng(0), 10**6, None)
+    info = {r: {r: summaries[r]} for r in range(phase.num_ranks)}
+    dropped = _run_gossip(sim, summaries, info, k_rounds=2, fanout=4,
+                          seed=123, deadline=None)
+    assert dropped == 0
+    assert {r: set(m) for r, m in info.items()} \
+        == {r: set(m) for r, m in ref.items()}
+    for r in info:          # payloads alias the same summary objects
+        for p, s in info[r].items():
+            assert s is ref[r][p]
+
+
+def test_deterministic_event_trace_and_assignment():
+    """Satellite: same (phase, params, seed) -> bitwise-identical event
+    trace and assignment across two runs."""
+    phase = random_phase(7, num_ranks=12, num_tasks=240, num_blocks=30,
+                        num_comms=480, mem_cap=1e12)
+    a0 = initial_assignment(phase)
+    kw = dict(n_iter=3, seed=5, latency=("uniform", 0.2, 1.0),
+              collect_trace=True)
+    r1 = ccm_lb_async(phase, a0, PARAMS, **kw)
+    r2 = ccm_lb_async(phase, a0, PARAMS, **kw)
+    assert r1.events == r2.events and r1.events  # non-trivial trace
+    assert r1.transfer_log == r2.transfer_log
+    np.testing.assert_array_equal(r1.assignment, r2.assignment)
+
+
+def test_backends_identical_under_latency():
+    """Satellite: the f64 backends ("numpy"/"jit" — bitwise-equal scores
+    by the scorer contract) produce identical traces even under contended
+    interleavings.  batch_lock_events stays a sync-only knob."""
+    phase = random_phase(7, num_ranks=12, num_tasks=240, num_blocks=30,
+                        num_comms=480, mem_cap=1e12)
+    a0 = initial_assignment(phase)
+    kw = dict(n_iter=3, seed=5, latency=("uniform", 0.2, 1.0),
+              collect_trace=True)
+    r1 = ccm_lb_async(phase, a0, PARAMS, **kw)
+    rj = ccm_lb_async(phase, a0, PARAMS, backend="jit", **kw)
+    assert r1.events == rj.events
+    assert r1.transfer_log == rj.transfer_log
+    np.testing.assert_array_equal(r1.assignment, rj.assignment)
+    with pytest.raises(ValueError):
+        run_ccm_lb(phase, a0, PARAMS, async_mode=True, batch_lock_events=8)
+    # ...and async-only knobs are rejected in sync mode, not dropped
+    with pytest.raises(ValueError):
+        run_ccm_lb(phase, a0, PARAMS, latency=("uniform", 0.5, 1.5))
+    with pytest.raises(ValueError):
+        run_ccm_lb(phase, a0, PARAMS, gossip_timeout=1.0)
+
+
+def test_latency_run_improves_and_stays_feasible():
+    """Under latency the trajectory differs but the optimizer contract
+    holds: monotone max-work trace, feasible final assignment."""
+    phase = random_phase(0, num_ranks=16, num_tasks=400, num_blocks=48,
+                        num_comms=800, mem_cap=3e8)
+    params = CCMParams(delta=1e-9)
+    a0 = initial_assignment(phase)
+    res = ccm_lb_async(phase, a0, params, n_iter=4, seed=1,
+                       latency=("uniform", 0.5, 1.5))
+    for a, b in zip(res.max_work, res.max_work[1:]):
+        assert b <= a + 1e-9
+    final = CCMState.build(phase, res.assignment, params)
+    for r in range(phase.num_ranks):
+        assert final.memory_feasible(r)
+    assert res.sim_time > 0 and res.messages > 0
+
+
+def test_gossip_timeout_drops_stale_deliveries():
+    """A tight gossip deadline drops late deliveries (stale info) but the
+    run stays safe and deterministic."""
+    phase = random_phase(4, num_ranks=16, num_tasks=320, num_blocks=36,
+                        num_comms=640, mem_cap=1e12)
+    a0 = initial_assignment(phase)
+    kw = dict(n_iter=2, seed=3, latency=("uniform", 0.5, 1.5))
+    full = ccm_lb_async(phase, a0, PARAMS, **kw)
+    cut = ccm_lb_async(phase, a0, PARAMS, gossip_timeout=1.0, **kw)
+    assert full.gossip_dropped == 0
+    assert cut.gossip_dropped > 0
+    assert cut.messages < full.messages  # dropped deliveries don't forward
+    for a, b in zip(cut.max_work, cut.max_work[1:]):
+        assert b <= a + 1e-9
+
+
+def test_make_latency_specs():
+    rng = np.random.default_rng(0)
+    assert make_latency(None)(rng, 0, 1) == 0.0
+    assert make_latency("zero")(rng, 0, 1) == 0.0
+    assert make_latency(2.5)(rng, 0, 1) == 2.5
+    lo_hi = make_latency(("uniform", 1.0, 2.0))(rng, 0, 1)
+    assert 1.0 <= lo_hi <= 2.0
+    assert make_latency(("exp", 0.5))(rng, 0, 1) >= 0.0
+    fn = make_latency(lambda rng, s, d: 0.25)
+    assert fn(rng, 3, 4) == 0.25
+    for bad in (-1.0, ("uniform", 2.0, 1.0), ("exp", -1.0), "fast", ()):
+        with pytest.raises(ValueError):
+            make_latency(bad)

@@ -163,8 +163,9 @@ def test_handle_grant_deferred_matches_reference(yield_first):
     (``yield_first`` additionally locks rank 0 so it must yield, 1 <= 2)."""
     from collections import deque
 
-    from repro.core.ccmlb import (_PendingEvent, _handle_grant,
-                                  _handle_grant_deferred, _rebuild_local)
+    from repro.core.ccmlb import (ProtocolStats, _PendingEvent,
+                                  _handle_grant, _handle_grant_deferred,
+                                  _rebuild_local)
     from repro.core.engine import ExchangeEvent
     from repro.core.locks import LockManager
     from repro.core.transfer import select_best, shortlist_pairs
@@ -192,9 +193,11 @@ def test_handle_grant_deferred_matches_reference(yield_first):
 
     # --- reference: scalar chain drain ---------------------------------
     state, engine, clusters, locks, wl, active, nxt, p = scenario()
+    stats_ref = ProtocolStats()
     n_ref = _handle_grant(nxt, p, state, clusters, locks, wl, active,
-                          12, None, engine)
+                          12, None, engine, stats_ref)
     a_ref, act_ref = state.assignment.copy(), list(active)
+    assert stats_ref.transfers == n_ref
 
     # --- deferred drain through the batched machinery -------------------
     state, engine, clusters, locks, wl, active, nxt, p = scenario()
@@ -225,7 +228,7 @@ def test_handle_grant_deferred_matches_reference(yield_first):
         busy.update((r, pp))
 
     _handle_grant_deferred(nxt, p, state, locks, wl, active, busy, defer,
-                           flush)
+                           flush, ProtocolStats())
     flush()
 
     assert n_ref >= 1              # the scenario actually transfers
