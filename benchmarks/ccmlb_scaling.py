@@ -5,10 +5,12 @@ Each rank-count config runs six times — scalar reference path
 (``use_engine=False``), the engine with full per-event state re-gathering
 (``incremental=False``, the rebuild reference), the incremental engine
 (``use_engine=True``, the default), the compiled bucketed-jit scorer
-(``backend="jit"``), and the batched variants of both engine backends
+(``backend="jit"``), the batched variants of both engine backends
 (``batch_lock_events=BATCH_EVENTS``: up to that many disjoint rank pairs
 scored per flush through one block-diagonal flow assembly / one compiled
-launch) — and the results land in ``BENCH_ccmlb_scaling.json`` so the perf
+launch), and the speculative scan driver (``spec_window=SPEC_WINDOW``:
+windows of upcoming lock events scored in single compiled launches, see
+core/spec.py) — and the results land in ``BENCH_ccmlb_scaling.json`` so the perf
 trajectory (engine/jit/batched speedups AND the incremental-vs-rebuild
 delta) is tracked from PR to PR.  The jit buckets are pre-compiled
 (``scorer_jit.warmup``) so the timed region is the steady-state runtime;
@@ -32,6 +34,7 @@ from repro.kernels.ccm_scorer import jit as scorer_jit
 JSON_PATH = os.environ.get("BENCH_CCMLB_JSON", "BENCH_ccmlb_scaling.json")
 N_ITER = 4
 BATCH_EVENTS = 8
+SPEC_WINDOW = 16
 # PR 3's recorded largest-config numbers (likely a different machine; the
 # scalar config anchors the machine-speed comparison)
 PR3_RECORDED = {"scalar": 65.0, "engine": 12.96, "batched": 8.76}
@@ -45,8 +48,11 @@ def run(report):
     incremental_delta_largest = None
     jit_seconds_largest = None
     batched_jit_seconds_largest = None
+    spec_seconds_largest = None
+    spec_over_batched_largest = None
     t0 = time.perf_counter()
     scorer_jit.warmup(max_batch=BATCH_EVENTS)
+    scorer_jit.spec_warmup(window=SPEC_WINDOW)
     jit_warmup_seconds = time.perf_counter() - t0
     for ranks in (16, 64, 256):
         phase = scaling_phase(ranks)
@@ -62,7 +68,8 @@ def run(report):
                    ("batched", dict(use_engine=True,
                                     batch_lock_events=BATCH_EVENTS)),
                    ("batched_jit", dict(use_engine=True, backend="jit",
-                                        batch_lock_events=BATCH_EVENTS)))
+                                        batch_lock_events=BATCH_EVENTS)),
+                   ("spec", dict(use_engine=True, spec_window=SPEC_WINDOW)))
         for tag, kw in configs:
             t0 = time.perf_counter()
             res = ccm_lb(phase, a0, params, n_iter=N_ITER, k_rounds=2,
@@ -83,6 +90,7 @@ def run(report):
                 "backend": kw.get("backend", "numpy"),
                 "incremental": kw.get("incremental", True),
                 "batch_lock_events": kw.get("batch_lock_events", 1),
+                "spec_window": kw.get("spec_window", 1),
                 "seconds": dt,
                 "seconds_per_iteration": dt / N_ITER,
                 "imbalance_after": float(res.imbalance[-1]),
@@ -91,7 +99,8 @@ def run(report):
             })
         # ratio goes in the derived column only — the us_per_call column
         # stays a call time so the CSV is uniformly parseable
-        others = ("rebuild", "engine", "jit", "batched", "batched_jit")
+        others = ("rebuild", "engine", "jit", "batched", "batched_jit",
+                  "spec")
         identical = bool(all(
             np.array_equal(assignments[t], assignments["scalar"])
             for t in others))
@@ -102,11 +111,13 @@ def run(report):
         incr_delta = times["rebuild"] / times["engine"]
         jit_speedup = times["scalar"] / times["jit"]
         batched_jit_speedup = times["scalar"] / times["batched_jit"]
+        spec_over_batched = times["batched"] / times["spec"]
         report(f"ccmlb_ranks_{ranks}_speedup", 0.0,
                f"engine {speedup:.2f}x, jit {jit_speedup:.2f}x, "
                f"batched({BATCH_EVENTS}) {batched_speedup:.2f}x, "
                f"batched_jit {batched_jit_speedup:.2f}x over scalar, "
-               f"incremental {incr_delta:.2f}x over rebuild, "
+               f"spec(w{SPEC_WINDOW}) {spec_over_batched:.2f}x over "
+               f"batched, incremental {incr_delta:.2f}x over rebuild, "
                "identical assignments")
         for k in range(-len(configs), 0):
             records[k]["identical_assignments"] = identical
@@ -115,6 +126,8 @@ def run(report):
         incremental_delta_largest = incr_delta
         jit_seconds_largest = times["jit"]
         batched_jit_seconds_largest = times["batched_jit"]
+        spec_seconds_largest = times["spec"]
+        spec_over_batched_largest = spec_over_batched
 
     # fanout/round sweep at 64 ranks (engine path — the default)
     phase = random_phase(2, num_ranks=64, num_tasks=1600, num_blocks=192,
@@ -144,8 +157,12 @@ def run(report):
         "incremental_over_rebuild_largest_config": incremental_delta_largest,
         "jit_seconds_largest_config": jit_seconds_largest,
         "batched_jit_seconds_largest_config": batched_jit_seconds_largest,
+        "spec_seconds_largest_config": spec_seconds_largest,
+        "spec_speedup_over_batched": spec_over_batched_largest,
+        "spec_window": SPEC_WINDOW,
         "jit_warmup_seconds": jit_warmup_seconds,
         "jit_buckets_compiled": scorer_jit.bucket_cache_size(),
+        "trace_count": scorer_jit.trace_count(),
         "batch_lock_events": BATCH_EVENTS,
         # PR 3's recorded largest-config times; divide by this run's scalar
         # time over PR3_RECORDED["scalar"] to normalize machine speed

@@ -1,0 +1,211 @@
+"""Speculative-scan stage-2 driver: wall time vs window size, against the
+host engine and batched(8) baselines on the ``scaling_phase`` family.
+
+PR 4 established the per-event dispatch wall (one XLA dispatch+sync costs
+about as much as the whole 80-op numpy scoring tree at the default tiles);
+``batch_lock_events`` amortized it over disjoint event batches.  The
+speculative scan (core/spec.py) amortizes further: a window of W upcoming
+lock events — derived up front from the deterministic synchronous event
+order — is scored in ONE compiled launch (flow assembly, feature
+derivation, scoring and selection all in-trace; kernels/ccm_scorer/jit.py
+kind="spec"), with host-side rollback of speculations an earlier commit
+invalidated.
+
+Every config is asserted assignment-identical to the host engine run
+(compiled-vs-host parity tier), and each record carries the rollback /
+window-launch / trace counters, so both the perf and the speculation waste
+are tracked PR to PR.
+
+Timing: this machine is a single-core VM with 30-40%% wall-clock drift
+between back-to-back identical runs (host steal / frequency scaling), so
+a single-shot A-then-B comparison is noise.  Every config is primed once
+untimed (compiles every shape bucket it needs — compile latency stays
+visible through ``trace_count``), then timed over REPS INTERLEAVED sweeps
+(config order rotates inside each sweep) and scored by its minimum, the
+standard noise-floor estimator.
+
+Bars: the headline ``spec_speedup_over_batched_best`` (best scan window
+>= 8 vs batched(8)) is hard-asserted to beat 1.0x in full mode — the
+speculative scan must not lose to the batched driver it replaces.  The
+SPEC_TARGET of 1.3x from the PR brief is recorded and warned on when
+missed: on this CPU-only host the XLA in-trace flow scatter costs about
+what the host numpy bincount costs, so once the dispatch is amortized
+(window >= 8) the two paths converge and the measured steady ratio sits
+near 1.1x (see kernels/ccm_scorer/README.md).  Quick mode (CI) asserts
+identity but only warns on both bars (shared runners make wall-time
+ratios unreliable).
+
+Usage:  PYTHONPATH=src python benchmarks/ccmlb_spec.py [--quick]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.core import CCMParams, ccm_lb
+from repro.core.problem import initial_assignment, scaling_phase
+from repro.kernels.ccm_scorer import jit as scorer_jit
+
+JSON_PATH = os.environ.get("BENCH_CCMLB_SPEC_JSON", "BENCH_ccmlb_spec.json")
+WINDOWS = (4, 8, 16, 32)
+QUICK_WINDOWS = (8, 16)
+BATCH_EVENTS = 8
+N_ITER = 4
+REPS = 3
+QUICK_REPS = 1
+SPEC_FLOOR = 1.0    # hard bar: spec(scan, window >= 8) must beat batched(8)
+SPEC_TARGET = 1.3   # PR-brief target: recorded, warned on when missed
+
+
+def _run(phase, a0, params, **kw):
+    return ccm_lb(phase, a0, params, n_iter=N_ITER, k_rounds=2, fanout=4,
+                  seed=0, **kw)
+
+
+def run(report, quick: bool = False):
+    quick = quick or os.environ.get("BENCH_QUICK") == "1"
+    ranks = 64 if quick else 256
+    windows = QUICK_WINDOWS if quick else WINDOWS
+    reps = QUICK_REPS if quick else REPS
+    params = CCMParams(delta=1e-9)
+    phase = scaling_phase(ranks)
+    a0 = initial_assignment(phase)
+
+    t0 = time.perf_counter()
+    scorer_jit.warmup(max_batch=BATCH_EVENTS)
+    scorer_jit.spec_warmup(window=max(windows))
+    warmup_seconds = time.perf_counter() - t0
+
+    # (tag, ccm_lb kwargs) — engine and batched are the baselines; the
+    # window sweep runs fill="disjoint" (the default: rollback-free by
+    # construction), plus one greedy point (speculation waste made
+    # load-bearing) and one vmap point (fleet-mode wrapper comparison)
+    configs = [("engine", dict(use_engine=True)),
+               ("batched", dict(use_engine=True,
+                                batch_lock_events=BATCH_EVENTS))]
+    for w in windows:
+        configs.append((f"spec_w{w}", dict(use_engine=True, spec_window=w)))
+    configs.append(("spec_greedy_w8",
+                    dict(use_engine=True, spec_window=8,
+                         spec_fill="greedy")))
+    configs.append((f"spec_vmap_w{windows[0]}",
+                    dict(use_engine=True, spec_window=windows[0],
+                         spec_mode="vmap")))
+
+    # prime: one untimed run per config compiles every shape bucket the
+    # config touches and pins the parity tier (assignment identity)
+    results, compiles = {}, {}
+    ref = None
+    for tag, kw in configs:
+        tc0 = scorer_jit.trace_count()
+        res = _run(phase, a0, params, **kw)
+        compiles[tag] = scorer_jit.trace_count() - tc0
+        if ref is None:
+            ref = res
+        assert np.array_equal(ref.assignment, res.assignment), \
+            f"{tag} diverged from the host engine"
+        results[tag] = res
+
+    # timed: REPS interleaved sweeps, min per config; rotate the order so
+    # slow machine epochs hit every config equally
+    times = {tag: [] for tag, _ in configs}
+    tc0 = scorer_jit.trace_count()
+    for rep in range(reps):
+        order = configs[rep % len(configs):] + configs[:rep % len(configs)]
+        for tag, kw in order:
+            t0 = time.perf_counter()
+            _run(phase, a0, params, **kw)
+            times[tag].append(time.perf_counter() - t0)
+    timed_compiles = scorer_jit.trace_count() - tc0
+
+    engine_dt = min(times["engine"])
+    batched_dt = min(times["batched"])
+    records = []
+    best = 0.0
+    for tag, kw in configs:
+        dt = min(times[tag])
+        res = results[tag]
+        rec = {
+            "ranks": ranks, "config": tag, "n_iter": N_ITER,
+            "seconds": dt, "seconds_reps": [round(t, 4) for t in times[tag]],
+            "transfers": int(res.transfers),
+            "compiles_prime_run": compiles[tag],
+            "identical_assignments": True,
+        }
+        derived = ""
+        if tag == "batched":
+            rec["batch_lock_events"] = BATCH_EVENTS
+            derived = f"{engine_dt / dt:.2f}x vs engine"
+        elif tag.startswith("spec"):
+            rec.update(window=kw["spec_window"],
+                       mode=kw.get("spec_mode", "scan"),
+                       fill=kw.get("spec_fill", "disjoint"),
+                       spec_rollbacks=int(res.spec_rollbacks),
+                       spec_windows=int(res.spec_windows),
+                       speedup_vs_batched=batched_dt / dt,
+                       speedup_vs_engine=engine_dt / dt)
+            derived = (f"{batched_dt / dt:.2f}x vs batched({BATCH_EVENTS}), "
+                       f"{engine_dt / dt:.2f}x vs engine, "
+                       f"rollbacks={res.spec_rollbacks} "
+                       f"launches={res.spec_windows} "
+                       f"compiles={compiles[tag]}")
+            if (kw.get("spec_mode", "scan") == "scan"
+                    and kw.get("spec_fill", "disjoint") == "disjoint"
+                    and kw["spec_window"] >= 8):
+                best = max(best, batched_dt / dt)
+        records.append(rec)
+        report(f"ccmlb_spec_ranks_{ranks}_{tag}", dt * 1e6, derived)
+
+    payload = {
+        "benchmark": "ccmlb_spec",
+        "quick": quick,
+        "ranks": ranks,
+        "reps": reps,
+        "numpy": np.__version__,
+        "results": records,
+        "engine_seconds": engine_dt,
+        "batched_seconds": batched_dt,
+        "spec_speedup_over_batched_best": best,
+        "spec_floor": SPEC_FLOOR,
+        "spec_target": SPEC_TARGET,
+        "spec_target_met": best >= SPEC_TARGET,
+        "warmup_seconds": warmup_seconds,
+        "compiles_timed_runs": timed_compiles,
+        "trace_count": scorer_jit.trace_count(),
+        "jit_buckets_compiled": scorer_jit.bucket_cache_size(),
+        "jit_bucket_keys": scorer_jit.bucket_keys(),
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    report("ccmlb_spec_json", 0.0, f"written to {JSON_PATH}")
+    if best < SPEC_TARGET:
+        report("ccmlb_spec_TARGET", 0.0,
+               f"best scan speedup {best:.2f}x under the {SPEC_TARGET}x "
+               "target (XLA in-trace scatter ~ host numpy bincount on this "
+               "CPU-only host; see kernels/ccm_scorer/README.md)")
+    if best < SPEC_FLOOR:
+        msg = (f"spec scan best speedup {best:.2f}x vs "
+               f"batched({BATCH_EVENTS}) under the {SPEC_FLOOR}x floor")
+        if quick:
+            report("ccmlb_spec_WARN", 0.0, f"{msg} (quick mode: warning "
+                   "only — shared-runner wall times)")
+        else:
+            raise AssertionError(msg)
+
+
+def main():
+    quick = "--quick" in sys.argv
+    print("name,us_per_call,derived")
+
+    def report(name, us, derived=""):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    run(report, quick=quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,7 @@ place.
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run ccmlb      # filter by substring
   PYTHONPATH=src python -m benchmarks.run --summary  # just the table
+  PYTHONPATH=src python -m benchmarks.run --summary --records  # + records
 """
 from __future__ import annotations
 
@@ -32,8 +33,9 @@ DISPLAY = {
     "kernels_bench": "kernels",
 }
 ORDER = ["milp_vs_ccmlb", "delta_sweep", "assembly_scaling", "costmodel_eval",
-         "ccmlb_scaling", "ccmlb_pipeline", "ccmlb_async", "scorer_paths",
-         "kernels_bench", "expert_placement", "roofline"]
+         "ccmlb_scaling", "ccmlb_spec", "ccmlb_fleet", "ccmlb_pipeline",
+         "ccmlb_async", "scorer_paths", "kernels_bench", "expert_placement",
+         "roofline"]
 
 
 def discover():
@@ -61,8 +63,36 @@ def _fmt(v) -> str:
     return str(v)
 
 
-def summarize_bench_json(out=print):
-    """One table over every BENCH_*.json: headline scalar fields per file."""
+def _records_table(records, out):
+    """Render a list of per-config record dicts as one aligned table.
+
+    Different configs legitimately carry different fields (a spec record
+    has window/rollback counters a scalar record doesn't; the fanout sweep
+    has no backend column), so the columns are the UNION of keys in
+    first-seen order and a record missing a field shows ``-`` instead of
+    raising.  List/dict-valued fields are skipped — they don't fit a cell.
+    """
+    cols = []
+    for rec in records:
+        if not isinstance(rec, dict):
+            return
+        for k, v in rec.items():
+            if k not in cols and not isinstance(v, (list, dict)):
+                cols.append(k)
+    if not cols:
+        return
+    table = [cols] + [[_fmt(rec[k]) if k in rec
+                       and not isinstance(rec[k], (list, dict)) else "-"
+                       for k in cols] for rec in records]
+    widths = [max(len(row[i]) for row in table) for i in range(len(cols))]
+    for row in table:
+        out("    " + "  ".join(c.ljust(w) for c, w in zip(row, widths))
+            .rstrip())
+
+
+def summarize_bench_json(out=print, records: bool = False):
+    """One table over every BENCH_*.json: headline scalar fields per file,
+    plus (with ``records=True``) the per-record table of each artifact."""
     paths = sorted(glob.glob("BENCH_*.json"))
     if not paths:
         out("(no BENCH_*.json artifacts found)")
@@ -73,30 +103,34 @@ def summarize_bench_json(out=print):
             with open(path) as f:
                 payload = json.load(f)
         except Exception as exc:  # unreadable artifact: surface, don't die
-            rows.append((path, [f"UNREADABLE: {exc}"]))
+            rows.append((path, [f"UNREADABLE: {exc}"], None))
             continue
         fields = [f"{k}={_fmt(v)}" for k, v in payload.items()
                   if isinstance(v, (int, float, bool))
                   and not isinstance(v, str)]
-        n = len(payload.get("results", []))
+        recs = payload.get("results", [])
+        n = len(recs) if isinstance(recs, list) else 0
         if n:
             fields.insert(0, f"records={n}")
-        rows.append((path, fields))
-    width = max(len(p) for p, _ in rows)
+        rows.append((path, fields, recs if n else None))
+    width = max(len(p) for p, _, _ in rows)
     out("")
     out("=" * 72)
     out("BENCH_*.json summary")
     out("=" * 72)
-    for path, fields in rows:
+    for path, fields, recs in rows:
         out(f"{path:<{width}}  {'; '.join(fields) if fields else '-'}")
+        if records and recs:
+            _records_table(recs, out)
     out("=" * 72)
 
 
 def main() -> None:
     args = [a for a in sys.argv[1:]]
     if "--summary" in args:
-        summarize_bench_json()
+        summarize_bench_json(records="--records" in args)
         return
+    args = [a for a in args if not a.startswith("--")]
     filt = args[0] if args else ""
     print("name,us_per_call,derived")
 

@@ -86,6 +86,7 @@ def run(report, quick: bool = False):
         for backend in ("numpy", "jit", "pallas", "pallas_compiled"):
             p_reps = reps if backend in ("numpy", "jit") else \
                 max(2, reps // 10)
+            tc0 = scorer_jit.trace_count()
             per[backend] = _time_backend(feats, pairs, params, backend,
                                          p_reps)
             records.append({
@@ -93,6 +94,7 @@ def run(report, quick: bool = False):
                 "backend": backend,
                 "us_per_event": per[backend],
                 "speedup_vs_numpy": per["numpy"] / per[backend],
+                "compiles": scorer_jit.trace_count() - tc0,
             })
             report(f"scorer_{backend}_n{n}", per[backend],
                    f"{per['numpy'] / per[backend]:.2f}x vs numpy")
@@ -111,6 +113,8 @@ def run(report, quick: bool = False):
         "shortlist": SHORTLIST,
         "pallas_compiled_fallback": scorer_jit.pallas_compiled_fallback(),
         "jit_buckets_compiled": scorer_jit.bucket_cache_size(),
+        "trace_count": scorer_jit.trace_count(),
+        "jit_bucket_keys": scorer_jit.bucket_keys(),
         "results": records,
         "jit_beats_numpy_from": ASSERT_FROM,
     }

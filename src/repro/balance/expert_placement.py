@@ -107,6 +107,8 @@ def plan_expert_placement(counts: np.ndarray, cfg: ModelConfig,
                           use_engine: bool = True,
                           backend: str = "numpy",
                           batch_lock_events: int = 1,
+                          spec_window: int = 1,
+                          spec_mode: str = "scan",
                           async_mode: bool = False,
                           latency=0.0,
                           gossip_timeout=None) -> PlacementPlan:
@@ -117,7 +119,9 @@ def plan_expert_placement(counts: np.ndarray, cfg: ModelConfig,
     shape-bucketed jit runtime and the Pallas kernel are bitwise-equal to
     numpy in f64, see kernels/ccm_scorer/README.md) and
     ``batch_lock_events`` tune the engine's stage-2 scorer (deferred
-    disjoint-pair batching, trajectory-exact).  ``async_mode`` plans
+    disjoint-pair batching, trajectory-exact); ``spec_window`` /
+    ``spec_mode`` route stage 2 through the speculative compiled scan
+    (core/spec.py — compiled-vs-host parity tier).  ``async_mode`` plans
     through the distributed event-loop simulator instead (``latency`` /
     ``gossip_timeout`` as in repro/core/async_sim.py; at the default zero
     latency the plan is identical to the synchronous one)."""
@@ -131,6 +135,7 @@ def plan_expert_placement(counts: np.ndarray, cfg: ModelConfig,
     res = run_ccm_lb(phase, a0, ccm, n_iter=n_iter, fanout=fanout, seed=seed,
                      use_engine=use_engine, backend=backend,
                      batch_lock_events=batch_lock_events,
+                     spec_window=spec_window, spec_mode=spec_mode,
                      async_mode=async_mode, latency=latency,
                      gossip_timeout=gossip_timeout)
     return _project_plan(counts, res, n_devices)
@@ -181,7 +186,8 @@ def plan_expert_placement_sequence(
         rank_speed: Optional[np.ndarray] = None, n_iter: int = 4,
         fanout: int = 4, seed: int = 0, warm_start: bool = True,
         use_engine: bool = True, backend: str = "numpy",
-        batch_lock_events: int = 1) -> List[PlacementPlan]:
+        batch_lock_events: int = 1, spec_window: int = 1,
+        spec_mode: str = "scan") -> List[PlacementPlan]:
     """Plan placements for a SEQUENCE of router-stat windows (paper §III-B
     iterative executions): each window's phase shares the (layer, expert)
     task/block grid, so phase ``k+1`` warm-starts from phase ``k``'s
@@ -208,7 +214,8 @@ def plan_expert_placement_sequence(
                            a0=phases[0].block_home.copy(), seed=seed,
                            n_iter=n_iter, fanout=fanout,
                            use_engine=use_engine, backend=backend,
-                           batch_lock_events=batch_lock_events)
+                           batch_lock_events=batch_lock_events,
+                           spec_window=spec_window, spec_mode=spec_mode)
     return [_project_plan(c, run.result, n_devices)
             for c, run in zip(counts_seq, pipe.runs)]
 

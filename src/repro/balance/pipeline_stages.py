@@ -118,13 +118,17 @@ def plan_pipeline_stages(cfg: ModelConfig, n_stages: int, *,
                          use_engine: bool = True,
                          backend: str = "numpy",
                          batch_lock_events: int = 1,
+                         spec_window: int = 1,
+                         spec_mode: str = "scan",
                          async_mode: bool = False,
                          latency=0.0,
                          gossip_timeout=None) -> StagePlan:
     """``backend`` selects the engine's stage-2 scorer ("numpy"/"jit"/
     "pallas"/"pallas_compiled" — the f64 tiers plan identically; see
     kernels/ccm_scorer/README.md); ``batch_lock_events`` defers and
-    batches disjoint lock events, trajectory-exact.  ``async_mode`` plans
+    batches disjoint lock events, trajectory-exact; ``spec_window`` /
+    ``spec_mode`` route stage 2 through the speculative compiled scan
+    (core/spec.py).  ``async_mode`` plans
     through the distributed event-loop simulator (``latency`` /
     ``gossip_timeout`` per repro/core/async_sim.py; zero latency plans
     identically to the synchronous driver)."""
@@ -137,6 +141,7 @@ def plan_pipeline_stages(cfg: ModelConfig, n_stages: int, *,
                      fanout=min(4, n_stages - 1), seed=seed,
                      use_engine=use_engine, backend=backend,
                      batch_lock_events=batch_lock_events,
+                     spec_window=spec_window, spec_mode=spec_mode,
                      async_mode=async_mode, latency=latency,
                      gossip_timeout=gossip_timeout)
     return _stage_plan(phase, res, n_stages)
@@ -148,7 +153,8 @@ def plan_pipeline_stages_schedule(
         hbm_budget_bytes: float = 16e9, seed: int = 0,
         warm_start: bool = True, use_engine: bool = True,
         backend: str = "numpy",
-        batch_lock_events: int = 1) -> List[StagePlan]:
+        batch_lock_events: int = 1, spec_window: int = 1,
+        spec_mode: str = "scan") -> List[StagePlan]:
     """Re-plan the stage split as the microbatch size changes (sequence-
     length curriculum, serving traffic shifts): one CCM phase per entry of
     ``tokens_schedule``, run through :func:`ccm_lb_pipeline` so step ``k+1``
@@ -166,6 +172,7 @@ def plan_pipeline_stages_schedule(
                            warm_start=warm_start, a0=a0, seed=seed,
                            n_iter=4, fanout=min(4, n_stages - 1),
                            use_engine=use_engine, backend=backend,
-                           batch_lock_events=batch_lock_events)
+                           batch_lock_events=batch_lock_events,
+                           spec_window=spec_window, spec_mode=spec_mode)
     return [_stage_plan(phase, run.result, n_stages)
             for phase, run in zip(phases, pipe.runs)]

@@ -66,6 +66,8 @@ def rebalance_sequences(costs: np.ndarray, n_ranks: int, *,
                         use_engine: bool = True,
                         backend: str = "numpy",
                         batch_lock_events: int = 1,
+                        spec_window: int = 1,
+                        spec_mode: str = "scan",
                         async_mode: bool = False,
                         latency=0.0,
                         gossip_timeout=None) -> SeqPackResult:
@@ -73,7 +75,9 @@ def rebalance_sequences(costs: np.ndarray, n_ranks: int, *,
 
     ``backend`` selects the engine's stage-2 scorer ("numpy"/"jit"/
     "pallas"/"pallas_compiled"; the f64 tiers pack identically — see
-    kernels/ccm_scorer/README.md).  ``async_mode`` packs through the
+    kernels/ccm_scorer/README.md); ``spec_window`` / ``spec_mode`` route
+    stage 2 through the speculative compiled scan (core/spec.py).
+    ``async_mode`` packs through the
     distributed event-loop simulator (``latency``/``gossip_timeout`` per
     repro/core/async_sim.py; zero latency packs identically)."""
     k = costs.shape[0]
@@ -84,6 +88,7 @@ def rebalance_sequences(costs: np.ndarray, n_ranks: int, *,
     res = run_ccm_lb(phase, a0, params, n_iter=n_iter, fanout=4, seed=seed,
                      use_engine=use_engine, backend=backend,
                      batch_lock_events=batch_lock_events,
+                     spec_window=spec_window, spec_mode=spec_mode,
                      async_mode=async_mode, latency=latency,
                      gossip_timeout=gossip_timeout)
     return _seq_result(res)
@@ -95,7 +100,8 @@ def rebalance_sequences_stream(
         mem_cap: float = np.inf, seed: int = 0, n_iter: int = 3,
         warm_start: bool = True, use_engine: bool = True,
         backend: str = "numpy",
-        batch_lock_events: int = 1) -> List[SeqPackResult]:
+        batch_lock_events: int = 1, spec_window: int = 1,
+        spec_mode: str = "scan") -> List[SeqPackResult]:
     """Rebalance a STREAM of DP batches (one phase per step): slot ``i`` of
     batch ``k+1`` warm-starts on the rank slot ``i`` of batch ``k`` landed
     on — under steady length distributions the previous map is already
@@ -116,5 +122,6 @@ def rebalance_sequences_stream(
                            initial_mode="round_robin", seed=seed,
                            n_iter=n_iter, fanout=4, use_engine=use_engine,
                            backend=backend,
-                           batch_lock_events=batch_lock_events)
+                           batch_lock_events=batch_lock_events,
+                           spec_window=spec_window, spec_mode=spec_mode)
     return [_seq_result(run.result) for run in pipe.runs]

@@ -8,8 +8,11 @@ from repro.core.ccmlb import CCMLBResult, ProtocolStats, ccm_lb  # noqa: F401
 from repro.core.csr import CSR, PhaseCSR, rank_segments  # noqa: F401
 from repro.core.engine import (PhaseEngine, SummaryTables,  # noqa: F401
                                batch_peer_diffs, build_summary_tables)
+from repro.core.fleet import ccm_lb_many  # noqa: F401
 from repro.core.pipeline import (PipelinePhase, PipelineResult,  # noqa: F401
                                  ccm_lb_pipeline, same_topology,
                                  warm_start_assignment)
 from repro.core.problem import (CCMParams, Phase, initial_assignment,  # noqa: F401
                                 random_phase)
+from repro.core.spec import (SpecInstance, event_sequence,  # noqa: F401
+                             run_spec)

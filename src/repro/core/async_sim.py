@@ -393,17 +393,20 @@ def ccm_lb_async(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
 
 def run_ccm_lb(phase, a0, params, *, async_mode: bool = False, latency=0.0,
                gossip_timeout=None, batch_lock_events: int = 1,
+               spec_window: int = 1, spec_mode: str = "scan",
                **kw) -> CCMLBResult:
     """Dispatch one balancing run to the synchronous driver or — with
     ``async_mode=True`` — to this module's event-loop simulator, which
     models message latency and makes the §IV-B conflict/yield/chain
     counters on the returned ``CCMLBResult`` meaningful.  Used by the
     ``repro.balance`` planners to expose the async knobs uniformly.
-    ``batch_lock_events`` is a synchronous-driver knob (the async turn
-    order depends on grant interleavings, so deferred disjoint-event
-    batching does not apply there); conversely ``latency`` /
-    ``gossip_timeout`` only exist under ``async_mode=True`` — either
-    inconsistency raises instead of silently dropping the knob."""
+    ``batch_lock_events`` and ``spec_window`` are synchronous-driver knobs
+    (the async turn order depends on grant interleavings, so neither the
+    deferred disjoint-event batching nor the speculative scan — whose
+    event sequence must be derivable up front — applies there); conversely
+    ``latency`` / ``gossip_timeout`` only exist under ``async_mode=True``
+    — either inconsistency raises instead of silently dropping the
+    knob."""
     if not async_mode:
         if not (latency is None or latency == 0.0 or latency == "zero"):
             raise ValueError("latency is an async-driver knob; pass "
@@ -412,9 +415,13 @@ def run_ccm_lb(phase, a0, params, *, async_mode: bool = False, latency=0.0,
             raise ValueError("gossip_timeout is an async-driver knob; pass "
                              "async_mode=True")
         return ccm_lb(phase, a0, params, batch_lock_events=batch_lock_events,
-                      **kw)
+                      spec_window=spec_window, spec_mode=spec_mode, **kw)
     if batch_lock_events != 1:
         raise ValueError("batch_lock_events is a synchronous-driver knob; "
+                         "unsupported with async_mode=True")
+    if spec_window != 1:
+        raise ValueError("spec_window is a synchronous-driver knob (the "
+                         "async event sequence is not derivable up front); "
                          "unsupported with async_mode=True")
     return ccm_lb_async(phase, a0, params, latency=latency,
                         gossip_timeout=gossip_timeout, **kw)

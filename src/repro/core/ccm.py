@@ -123,6 +123,66 @@ class CCMState:
         else:
             self._transfer_listeners.append(lambda _cb=cb: _cb)
 
+    def remove_transfer_listener(self, cb: TransferListener) -> None:
+        """Detach a listener previously registered with
+        :meth:`add_transfer_listener`, matched by identity through the
+        resolver entries (weak bound-method entries match their referent).
+        Unknown callbacks are a no-op; already-collected entries are pruned
+        on the way through."""
+        self._transfer_listeners = [
+            e for e in self._transfer_listeners
+            if e() is not None and e() is not cb]
+
+    def retarget(self, phase: Phase, params: CCMParams) -> None:
+        """Re-bind this state to a NEW phase with the same adjacency
+        topology (the ``same_topology`` predicate: identical comm endpoints
+        and task->block map — callers check it; this method only asserts
+        the counts), keeping the assignment.
+
+        Multi-phase pipelines use this to carry a state+engine across
+        phases whose loads/volumes/memory drift while the topology holds:
+        the value-derived arrays (load, vol, mem_task, overhead maxima,
+        homing/shared caches) are recomputed with the SAME operations a
+        fresh ``build`` runs — bitwise-identical results, asserted by
+        tests/test_spec_scan.py — while the topology-derived structures are
+        carried: the frozen CSR bundle (the expensive part), the integer
+        block counters (incrementally exact for the unchanged assignment),
+        and the registered transfer listeners (a carried engine's segments
+        depend only on the assignment, which is unchanged).  Bumps
+        ``version`` so every version-validated downstream cache
+        re-derives."""
+        if (phase.num_tasks != self.phase.num_tasks
+                or phase.num_ranks != self.phase.num_ranks
+                or phase.num_blocks != self.phase.num_blocks):
+            raise ValueError("retarget requires matching task/rank/block "
+                             "counts (same_topology phases)")
+        i_n = phase.num_ranks
+        a = self.assignment
+        self.phase = phase
+        self.params = params
+        self.version += 1
+        self._work_cache.clear()
+        load = np.bincount(a, weights=phase.task_load, minlength=i_n)
+        if phase.rank_speed is not None:
+            load = load / 1.0  # mirror build(): speed applied at W() time
+        self.load = load
+        vol = np.zeros((i_n, i_n), np.float64)
+        np.add.at(vol, (a[phase.comm_src], a[phase.comm_dst]),
+                  phase.comm_vol)
+        self.vol = vol
+        self.mem_task = np.bincount(a, weights=phase.task_mem,
+                                    minlength=i_n)
+        self.mem_overhead_max = np.zeros(i_n, np.float64)
+        for r in range(i_n):
+            sel = a == r
+            if sel.any():
+                self.mem_overhead_max[r] = phase.task_overhead[sel].max()
+        present = self.block_count > 0
+        off_home = present.copy()
+        off_home[phase.block_home, np.arange(phase.num_blocks)] = False
+        self.hom_cache = (off_home * phase.block_size[None, :]).sum(1)
+        self.shared_cache = (present * phase.block_size[None, :]).sum(1)
+
     def _touched_edges(self, tasks: np.ndarray) -> np.ndarray:
         """Unique ids of comm edges incident to ``tasks`` (CSR gather)."""
         if len(tasks) == 0:

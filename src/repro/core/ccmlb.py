@@ -108,7 +108,8 @@ from repro.core.engine import (ExchangeEvent, PhaseEngine, batch_peer_diffs,
                                build_summary_tables)
 from repro.core.gossip import build_peer_networks
 from repro.core.locks import LockManager
-from repro.core.problem import CCMParams, Phase
+from repro.core.problem import CCMParams, Phase, same_topology
+from repro.core.spec import SpecInstance, event_sequence, run_spec
 from repro.core.transfer import (approx_best_diff, select_best,
                                  shortlist_pairs, try_transfer)
 
@@ -139,6 +140,14 @@ class CCMLBResult:
     # r_to); replaying it onto the initial assignment reproduces
     # ``assignment`` exactly (asserted by the async protocol-safety suite)
     transfer_log: Optional[list] = None
+    # speculative-scan observability (zero/None off the spec driver)
+    spec_rollbacks: int = 0        # window events rolled back + re-queued
+    spec_windows: int = 0          # compiled window launches
+    spec_trace: Optional[list] = None   # (window, kind, r, p) commit trace
+    # the live engine + whether it was carried in from a previous phase's
+    # result (ccm_lb_pipeline carry_engine=True) instead of built fresh
+    engine: Optional[PhaseEngine] = None
+    engine_carried: bool = False
 
 
 @dataclasses.dataclass
@@ -163,6 +172,9 @@ class ProtocolStats:
     grant_chains: int = 0
     max_grant_chain: int = 0
     transfers: int = 0
+    # speculative-scan counters (core/spec.py; zero on the other drivers)
+    spec_rollbacks: int = 0
+    spec_windows: int = 0
     # target -> current consecutive queue-handoff count (internal)
     _chain_run: Dict[int, int] = dataclasses.field(default_factory=dict)
 
@@ -280,53 +292,136 @@ def ccm_lb(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
            max_clusters_per_rank: Optional[int] = None,
            use_engine: bool = True, backend: str = "numpy",
            batch_lock_events: int = 1, incremental: bool = True,
-           csr=None) -> CCMLBResult:
+           csr=None, spec_window: int = 1, spec_mode: str = "scan",
+           spec_fill: str = "disjoint", spec_trace: bool = False,
+           carry=None) -> CCMLBResult:
     """``incremental`` keeps the engine's per-rank segments current via the
     transfer hook (default; ``False`` re-gathers per event — the rebuild
     reference).  ``csr`` is an optional prebuilt ``PhaseCSR`` for this
-    phase's topology (multi-phase pipelines amortize it)."""
+    phase's topology (multi-phase pipelines amortize it).
+
+    ``spec_window > 1`` routes stage 2 through the speculative-scan driver
+    (core/spec.py): windows of up to ``spec_window`` lock events score in
+    one compiled launch (``spec_mode`` "scan" or "vmap"), with host-side
+    rollback of invalidated speculations.  Compiled-vs-host parity tier —
+    empirically identical trajectories, not bitwise (see
+    kernels/ccm_scorer/README.md).  ``spec_fill`` picks the speculation
+    policy — ``"disjoint"`` (default) takes only rank-disjoint event
+    prefixes per window, making rollback structurally impossible;
+    ``"greedy"`` fills blindly and rolls back invalidated speculations
+    (see ``repro.core.spec.run_spec``).  ``spec_trace=True`` records the
+    per-event commit/rollback trace in ``CCMLBResult.spec_trace``.
+
+    ``carry``: a previous phase's ``CCMLBResult`` whose state/engine should
+    be reused.  Accepted only when the phases share topology
+    (``same_topology``), rank count, backend/incremental knobs AND the
+    start assignment equals the carried final assignment — then the state
+    is :meth:`CCMState.retarget`-ed in place (bitwise-equal to a fresh
+    build) and the engine's caches revalidate via the version bump;
+    otherwise a fresh state is built silently (``engine_carried`` reports
+    which happened).
+    """
     if batch_lock_events < 1:
         raise ValueError("batch_lock_events must be >= 1")
     if batch_lock_events > 1 and not use_engine:
         raise ValueError("batch_lock_events > 1 requires use_engine=True")
-    state = CCMState.build(phase, assignment, params, csr=csr)
-    engine = (PhaseEngine(state, backend=backend, incremental=incremental)
-              if use_engine else None)
+    if spec_window < 1:
+        raise ValueError("spec_window must be >= 1")
+    if spec_window > 1 and not use_engine:
+        raise ValueError("spec_window > 1 requires use_engine=True")
+    if spec_window > 1 and batch_lock_events > 1:
+        raise ValueError("spec_window and batch_lock_events are mutually "
+                         "exclusive stage-2 drivers")
+    state = engine = None
+    engine_carried = False
+    if carry is not None:
+        cstate = getattr(carry, "state", None)
+        cengine = getattr(carry, "engine", None)
+        if (use_engine and cstate is not None and cengine is not None
+                and cengine.backend == backend
+                and cengine.incremental == incremental
+                and cstate.phase.num_ranks == phase.num_ranks
+                and np.array_equal(cstate.assignment,
+                                   np.asarray(assignment, np.int64))
+                and same_topology(cstate.phase, phase)):
+            cstate.retarget(phase, params)
+            state, engine, engine_carried = cstate, cengine, True
+    if state is None:
+        state = CCMState.build(phase, assignment, params, csr=csr)
+        engine = (PhaseEngine(state, backend=backend,
+                              incremental=incremental)
+                  if use_engine else None)
     transfer_log: list = []
-    state.add_transfer_listener(
-        lambda t, a, b: transfer_log.append(
-            (tuple(int(x) for x in t), int(a), int(b))))
+
+    def _log_cb(t, a, b):
+        transfer_log.append((tuple(int(x) for x in t), int(a), int(b)))
+
+    state.add_transfer_listener(_log_cb)
     trace_max = [state.max_work()]
     trace_tot = [state.total_work()]
     trace_imb = [state.imbalance()]
     stats = ProtocolStats()
+    strace: Optional[list] = [] if spec_trace else None
 
-    for it in range(n_iter):
-        clusters, summaries = iteration_summaries(state, phase,
-                                                  max_clusters_per_rank)
-        info = build_peer_networks(summaries, k_rounds=k_rounds,
-                                   fanout=fanout, seed=seed * 1000 + it)
-        work_lists = build_work_lists(phase, summaries, info, params, engine)
+    try:
+        for it in range(n_iter):
+            clusters, summaries = iteration_summaries(state, phase,
+                                                      max_clusters_per_rank)
+            info = build_peer_networks(summaries, k_rounds=k_rounds,
+                                       fanout=fanout, seed=seed * 1000 + it)
+            work_lists = build_work_lists(phase, summaries, info, params,
+                                          engine)
 
-        # stage 2: lock/transfer event loop
-        if batch_lock_events > 1:
-            _stage2_batched(phase, state, clusters, work_lists, engine,
-                            max_candidates, max_clusters_per_rank,
-                            batch_lock_events, stats)
-        else:
-            _stage2(phase, state, clusters, work_lists, engine,
-                    max_candidates, max_clusters_per_rank, stats)
+            # stage 2: lock/transfer event loop
+            if spec_window > 1:
+                _stage2_spec(phase, state, clusters, work_lists, engine,
+                             max_candidates, max_clusters_per_rank,
+                             spec_window, spec_mode, spec_fill, stats,
+                             strace)
+            elif batch_lock_events > 1:
+                _stage2_batched(phase, state, clusters, work_lists, engine,
+                                max_candidates, max_clusters_per_rank,
+                                batch_lock_events, stats)
+            else:
+                _stage2(phase, state, clusters, work_lists, engine,
+                        max_candidates, max_clusters_per_rank, stats)
 
-        trace_max.append(state.max_work())
-        trace_tot.append(state.total_work())
-        trace_imb.append(state.imbalance())
+            trace_max.append(state.max_work())
+            trace_tot.append(state.total_work())
+            trace_imb.append(state.imbalance())
+    finally:
+        # a carried state outlives this run — the log listener must not
+        # keep appending into a dead list on the next phase's transfers
+        state.remove_transfer_listener(_log_cb)
 
     return CCMLBResult(state.assignment.copy(), state, trace_max, trace_tot,
                        trace_imb, stats.transfers, stats.conflicts,
                        engine_used=engine is not None, yields=stats.yields,
                        grant_chains=stats.grant_chains,
                        max_grant_chain=stats.max_grant_chain,
-                       transfer_log=transfer_log)
+                       transfer_log=transfer_log,
+                       spec_rollbacks=stats.spec_rollbacks,
+                       spec_windows=stats.spec_windows,
+                       spec_trace=strace, engine=engine,
+                       engine_carried=engine_carried)
+
+
+def _stage2_spec(phase, state, clusters, work_lists, engine, max_candidates,
+                 max_clusters_per_rank, window, mode, fill,
+                 stats: ProtocolStats, trace: Optional[list]) -> None:
+    """Stage 2 through the speculative-scan driver: derive the reference
+    event sequence up front (deterministic on this driver — see
+    core/spec.py), then drain it through windowed compiled launches with
+    strict-prefix commit/rollback."""
+    seq = event_sequence(phase.num_ranks, work_lists)
+    if not seq:
+        return
+    inst = SpecInstance(
+        state=state, engine=engine, clusters=clusters, stats=stats,
+        rebuild=lambda r, p: _rebuild_local(state, clusters, engine,
+                                            max_clusters_per_rank, r, p),
+        queue=deque(seq), max_candidates=max_candidates, trace=trace)
+    run_spec([inst], state.params, window=window, mode=mode, fill=fill)
 
 
 def _rebuild_local(state, clusters, engine, max_clusters_per_rank, r, p):

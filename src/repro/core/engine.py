@@ -198,13 +198,18 @@ class PhaseEngine:
         if backend not in scorer_ops.BACKENDS:
             raise ValueError(f"unknown engine backend: {backend!r}")
         self.state = state
-        self.phase = state.phase
         self.csr: PhaseCSR = state.csr
         self.backend = backend
         self.interpret = interpret
         self.incremental = incremental
         self._glab = np.zeros(self.phase.num_tasks, np.int64)
         self._elab = np.full(self.phase.num_tasks, -1, np.int64)
+        # spec_raw's label scratch: stamp-validated (a task's group label
+        # only counts when its stamp equals the current call's tick), so
+        # per-call resets are unnecessary — stale labels are masked out
+        self._sp_g = np.zeros(self.phase.num_tasks, np.int64)
+        self._sp_stamp = np.zeros(self.phase.num_tasks, np.int64)
+        self._sp_tick = 0
         # rank -> (cluster list reference, aggregates, limit); holding the
         # list reference both validates the cache (ccm_lb installs a NEW
         # list when a rank's clusters are rebuilt) and pins its id.
@@ -216,6 +221,17 @@ class PhaseEngine:
         # bitwise-neutral.  Keyed by state.version (one int compare).
         self._blk_cache: Dict[Tuple[int, int], tuple] = {}
         self._vol_cache: Dict[int, Tuple[int, float, float]] = {}
+        # rank-touch stamps: _rank_touch[r] = state version of the last
+        # transfer that moved tasks in or out of r (stamped by the transfer
+        # hook).  _incident entries are validated against the touch stamps
+        # of THEIR two ranks instead of the global version, so transfers
+        # between other ranks no longer invalidate them.  _touch_seen
+        # detects out-of-band version bumps (retarget, non-incremental
+        # engines where the hook never fires): those invalidate every rank.
+        self._rank_touch = np.full(self.phase.num_ranks, state.version,
+                                   np.int64)
+        self._touch_seen = state.version
+        self._eids_cache: Dict[int, Tuple[int, np.ndarray]] = {}
         self._edge_cache: Dict[Tuple[int, int], tuple] = {}
         self._segments: Optional[List[np.ndarray]] = None
         if incremental:
@@ -223,6 +239,15 @@ class PhaseEngine:
             self._segments = [segs.row(r)
                               for r in range(self.phase.num_ranks)]
             state.add_transfer_listener(self._on_transfer)
+
+    @property
+    def phase(self):
+        """The CURRENT phase of the wrapped state — read through on every
+        access, so an engine carried across ``CCMState.retarget`` (pipeline
+        phase carry-over) follows the new phase's value arrays instead of
+        pinning the build-time ones.  The retarget also bumps the state
+        version, which invalidates every version-validated cache below."""
+        return self.state.phase
 
     # ------------------------------------------------- incremental segments
     def _on_transfer(self, tasks: np.ndarray, r_from: int, r_to: int):
@@ -236,6 +261,17 @@ class PhaseEngine:
         self._segments[r_from] = np.delete(seg, np.searchsorted(seg, t))
         seg = self._segments[r_to]
         self._segments[r_to] = np.insert(seg, np.searchsorted(seg, t), t)
+        # the hook runs after apply_transfer's version bump (one bump per
+        # transfer), so when every bump since the last stamp was a hooked
+        # transfer, stamping the two ranks marks exactly this transfer;
+        # a gap in the version sequence means unobserved bumps (retarget)
+        # happened in between — then every rank may have changed
+        v = self.state.version
+        if self._touch_seen == v - 1:
+            self._rank_touch[r_from] = self._rank_touch[r_to] = v
+        else:
+            self._rank_touch[:] = v
+        self._touch_seen = v
 
     def rank_tasks(self, r: int) -> np.ndarray:
         """Member-task ids of rank ``r``, ascending — bitwise what
@@ -344,6 +380,61 @@ class PhaseEngine:
                                        backend=self.backend,
                                        interpret=self.interpret)
 
+    def _rank_eids(self, r: int, touch: int) -> np.ndarray:
+        """Ascending unique incident edge ids of rank ``r``, cached per
+        rank-touch stamp — ``np.unique(task_edges.gather(rank_tasks(r)))``
+        exactly, recomputed only when a transfer touches ``r``."""
+        hit = self._eids_cache.get(r)
+        if hit is not None and hit[0] == touch:
+            return hit[1]
+        eids = np.unique(self.csr.task_edges.gather(self.rank_tasks(r)))
+        self._eids_cache[r] = (touch, eids)
+        return eids
+
+    def _incident(self, r_a: int, r_b: int):
+        """``(both, n_a, src, dst, vol)`` for the edges incident to the two
+        ranks: the concatenated member-task ids (``both[:n_a]`` = rank a's),
+        and the endpoint/volume columns gathered at the ascending unique
+        incident edge ids.  Both the batched flow assembly and the
+        speculative-scan raws re-read these per event; entries are
+        validated against the TOUCH STAMPS of their two ranks, so only a
+        transfer in or out of ``r_a``/``r_b`` (not anywhere else) forces a
+        recompute, and a hit returns exactly the arrays the gathers
+        produced (bitwise-neutral).  The per-rank edge sets are cached the
+        same way and merged — a stable sort of two ascending unique arrays
+        deduped adjacently IS ``np.unique`` of their concatenation, so the
+        result is bitwise what the direct gather produced.  Callers must
+        not mutate the returned arrays."""
+        st = self.state
+        if st.version != self._touch_seen:
+            # version bumps the transfer hook never saw (retarget, or a
+            # non-incremental engine with no hook at all): every rank may
+            # have changed, and the phase value arrays may differ too
+            self._rank_touch[:] = st.version
+            self._touch_seen = st.version
+            self._eids_cache.clear()
+            self._edge_cache.clear()
+        ta = self._rank_touch[r_a]
+        tb = self._rank_touch[r_b]
+        cached = self._edge_cache.get((r_a, r_b))
+        if cached is not None and cached[0] == ta and cached[1] == tb:
+            return cached[2:]
+        tasks_a = self.rank_tasks(r_a)
+        n_a = tasks_a.shape[0]
+        both = np.concatenate([tasks_a, self.rank_tasks(r_b)])
+        m = np.sort(np.concatenate([self._rank_eids(r_a, ta),
+                                    self._rank_eids(r_b, tb)]),
+                    kind="stable")
+        if m.shape[0]:
+            eids = m[np.concatenate([[True], m[1:] != m[:-1]])]
+        else:
+            eids = m
+        ph = self.phase
+        entry = (both, n_a, ph.comm_src[eids], ph.comm_dst[eids],
+                 ph.comm_vol[eids])
+        self._edge_cache[(r_a, r_b)] = (ta, tb) + entry
+        return entry
+
     def _flow_matrices(self, events: Sequence[ExchangeEvent]
                        ) -> List[np.ndarray]:
         """Per-event group-flow matrices via ONE flat bincount.
@@ -354,8 +445,8 @@ class PhaseEngine:
         to the single-event construction.  Tasks of other events read as
         group 0 ("other rank") through the event-id mask.
         """
-        ph, g, ev = self.phase, self._glab, self._elab
-        metas = []      # (tasks_both, cand_flat, eids, G, offset)
+        g, ev = self._glab, self._elab
+        metas = []      # (tasks_both, cand_flat, src, dst, vol, G, offset)
         bins_l, w_l = [], []
         offset = 0
 
@@ -363,7 +454,8 @@ class PhaseEngine:
             # candidate ids are reset too: a direct caller may pass arrays
             # with tasks no longer assigned to the event's ranks (a stale
             # label here would corrupt every later evaluation)
-            for both_, cflat_, _, _, _ in metas[:upto]:
+            for m in metas[:upto]:
+                both_, cflat_ = m[0], m[1]
                 g[both_] = 0
                 ev[both_] = -1
                 g[cflat_] = 0
@@ -372,16 +464,7 @@ class PhaseEngine:
         for k, e in enumerate(events):
             na, nb = len(e.cand_a) - 1, len(e.cand_b) - 1
             G = 3 + na + nb
-            cached = self._edge_cache.get((e.r_a, e.r_b))
-            if cached is not None and cached[0] == self.state.version:
-                both, n_a, eids = cached[1], cached[2], cached[3]
-            else:
-                tasks_a = self.rank_tasks(e.r_a)
-                n_a = tasks_a.shape[0]
-                both = np.concatenate([tasks_a, self.rank_tasks(e.r_b)])
-                eids = np.unique(self.csr.task_edges.gather(both))
-                self._edge_cache[(e.r_a, e.r_b)] = \
-                    (self.state.version, both, n_a, eids)
+            both, n_a, src, dst, vol = self._incident(e.r_a, e.r_b)
             if (ev[both] != -1).any():
                 # detected BEFORE this event touches the buffers: roll back
                 # the earlier events' labels so the engine stays usable
@@ -402,21 +485,20 @@ class PhaseEngine:
             ev[both] = k
             g[cflat] = cg       # duplicate ids resolve to the LAST write,
             ev[cflat] = k       # matching the per-cluster loop order
-            metas.append((both, cflat, eids, G, offset))
+            metas.append((both, cflat, src, dst, vol, G, offset))
             offset += G * G
-        for k, (both, cflat, eids, G, off) in enumerate(metas):
-            src, dst = ph.comm_src[eids], ph.comm_dst[eids]
+        for k, (both, cflat, src, dst, vol, G, off) in enumerate(metas):
             gs = np.where(ev[src] == k, g[src], 0)
             gd = np.where(ev[dst] == k, g[dst], 0)
             bins_l.append(off + gs * G + gd)
-            w_l.append(ph.comm_vol[eids])
+            w_l.append(vol)
         flat = np.bincount(
             np.concatenate(bins_l) if bins_l else np.zeros(0, np.int64),
             weights=np.concatenate(w_l) if w_l else None,
             minlength=offset)
         _reset_labels(len(metas))
         return [flat[off:off + G * G].reshape(G, G)
-                for _, _, _, G, off in metas]
+                for _, _, _, _, _, G, off in metas]
 
     def _event_features(self, e: ExchangeEvent, F: np.ndarray
                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
@@ -476,29 +558,7 @@ class PhaseEngine:
         if na and nb:
             pm[L.PM.x_ab, 1:, 1:] = F[sa:sb, sb:]       # v(A_i -> B_j)
             pm[L.PM.x_ba, 1:, 1:] = F[sb:, sa:sb].T     # v(B_j -> A_i)
-        for blk, lst_a in agg_a.blk_map.items():
-            lst_b = agg_b.blk_map.get(blk)
-            if not lst_b:
-                continue
-            # block in both moving clusters: the independent leave terms
-            # over-fire when the counter-flow keeps the block present.
-            size = ph.block_size[blk]
-            off_home_a = ph.block_home[blk] != r_a
-            off_home_b = ph.block_home[blk] != r_b
-            for i, cnt_a in lst_a:
-                if i >= na:
-                    continue
-                for j, cnt_b in lst_b:
-                    if j >= nb:
-                        continue
-                    if st.block_count[r_a, blk] == cnt_a:
-                        pm[L.PM.cs_a, i + 1, j + 1] += size
-                        if off_home_a:
-                            pm[L.PM.ch_a, i + 1, j + 1] += size
-                    if st.block_count[r_b, blk] == cnt_b:
-                        pm[L.PM.cs_b, i + 1, j + 1] += size
-                        if off_home_b:
-                            pm[L.PM.ch_b, i + 1, j + 1] += size
+        pm[L.PM.cs_a:] = self._pm_corrections(e, na, nb)
 
         # one literal in layout.SC index order (0..31) — a single array
         # construction instead of 32 scalar __setitem__ calls on the hot
@@ -545,6 +605,157 @@ class PhaseEngine:
         assert sc.shape[0] == L.N_SC
         return av, bv, pm, sc
 
+    def _pm_corrections(self, e: ExchangeEvent, na: int, nb: int
+                        ) -> np.ndarray:
+        """The sparse pairwise shared-block correction planes (cs_a, ch_a,
+        cs_b, ch_b) as a dense (4, na+1, nb+1) stack: blocks present in
+        BOTH moving clusters, where the independent leave terms over-fire
+        because the counter-flow keeps the block present (Thm III.1).
+        Shared by the full-tile feature packer and the speculative-scan
+        raws; the loop is the exact code (same adds, same order) the packer
+        ran in place, so the factoring is bitwise-neutral."""
+        st, ph = self.state, self.phase
+        agg_a, agg_b = e.agg_a, e.agg_b
+        r_a, r_b = e.r_a, e.r_b
+        pm = np.zeros((4, na + 1, nb + 1))
+        for blk, lst_a in agg_a.blk_map.items():
+            lst_b = agg_b.blk_map.get(blk)
+            if not lst_b:
+                continue
+            size = ph.block_size[blk]
+            off_home_a = ph.block_home[blk] != r_a
+            off_home_b = ph.block_home[blk] != r_b
+            for i, cnt_a in lst_a:
+                if i >= na:
+                    continue
+                for j, cnt_b in lst_b:
+                    if j >= nb:
+                        continue
+                    if st.block_count[r_a, blk] == cnt_a:
+                        pm[0, i + 1, j + 1] += size
+                        if off_home_a:
+                            pm[1, i + 1, j + 1] += size
+                    if st.block_count[r_b, blk] == cnt_b:
+                        pm[2, i + 1, j + 1] += size
+                        if off_home_b:
+                            pm[3, i + 1, j + 1] += size
+        return pm
+
+    # -------------------------------------------- speculative-scan raws
+    def spec_raw(self, e: ExchangeEvent, a_lanes: int, b_lanes: int,
+                 p_n: int) -> Tuple[np.ndarray, int]:
+        """One complete flat launch row for the speculative-scan compiled
+        path (``kernels/ccm_scorer/jit.py`` kind="spec"): everything the
+        traced pipeline needs to assemble the flow matrix and score the
+        shortlist IN-TRACE, gathered from the CURRENT (speculative) state.
+
+        Unlike :meth:`_flow_matrices`' per-event-sized group space, the
+        label layout here is FIXED by the lane buckets so one compiled
+        function serves every event of a run: group 0 = other ranks, 1 =
+        stays on a, 2 = stays on b, a-candidate i at ``3 + (i-1)``,
+        b-candidate j at ``3 + (a_lanes-1) + (j-1)``; ``G = 3 +
+        (a_lanes-1) + (b_lanes-1)``.  Unused candidate groups receive no
+        edges, so the traced slice sums see exact zeros there.
+
+        Returns ``(row, eb)``: ``row`` is a ready-to-stack launch row in
+        the ``_spec_offsets(eb, a_lanes, b_lanes, p_n)`` layout
+        ``[bins | w | avh | bvh | pmh | sch | iaf | ibf | misc]`` with the
+        params columns (alpha..delta, the memory-constraint cap masking)
+        and the shortlist pair count already baked in; ``eb`` is the edge
+        bucket the bins/w slots were sized to.  The driver fills only
+        ``row[-2]`` (the pre-exchange work bound) before the launch;
+        ``score_spec`` stacks rows verbatim.  Emitting the final layout
+        here — feature sections written through reshape views of the row —
+        avoids a second per-event assemble-then-copy pass at launch time.
+        """
+        st, ph = self.state, self.phase
+        r_a, r_b = e.r_a, e.r_b
+        agg_a, agg_b = e.agg_a, e.agg_b
+        na, nb = len(e.cand_a) - 1, len(e.cand_b) - 1
+        if na >= a_lanes or nb >= b_lanes:
+            raise ValueError("candidate count exceeds the spec lane bucket")
+        sa, sb = 3, 3 + (a_lanes - 1)
+        g_n = sb + (b_lanes - 1)
+        g, stamp = self._sp_g, self._sp_stamp
+        tick = self._sp_tick = self._sp_tick + 1
+        both, n_a, src, dst, vol = self._incident(r_a, r_b)
+        cl = list(e.cand_a[1:]) + list(e.cand_b[1:])
+        if cl:
+            cflat = np.concatenate(cl)
+            cg = np.repeat(
+                np.concatenate([np.arange(sa, sa + na, dtype=np.int64),
+                                np.arange(sb, sb + nb, dtype=np.int64)]),
+                [len(c) for c in cl])
+        else:
+            cflat = cg = np.zeros(0, np.int64)
+        g[both[:n_a]] = 1
+        g[both[n_a:]] = 2
+        stamp[both] = tick
+        g[cflat] = cg       # duplicate ids: LAST write wins, matching
+        stamp[cflat] = tick     # the per-cluster loop order
+        # stale labels from earlier calls fail the stamp test, so no reset
+        # scatters are needed between events
+        gs = np.where(stamp[src] == tick, g[src], 0)
+        gd = np.where(stamp[dst] == tick, g[dst], 0)
+
+        ne = src.shape[0]
+        eb = scorer_jit.bucket_edges(ne)
+        (o_w, o_av, o_bv, o_pm, o_sc, o_ia, o_ib, o_ms,
+         row_len) = scorer_jit._spec_offsets(eb, a_lanes, b_lanes, p_n)
+        row = np.zeros(row_len)
+        row[:ne] = gs * g_n + gd            # pad edges land in bin (0, 0),
+        row[o_w:o_w + ne] = vol             # which no feature reads
+
+        avh = row[o_av:o_bv].reshape(7, a_lanes)
+        avh[0, 1:na + 1] = agg_a.loads[:na]
+        avh[1, 1:na + 1] = agg_a.mems[:na]
+        avh[2, 1:na + 1] = agg_a.overheads[:na]
+        avh[3:7, :na + 1] = self._block_terms(agg_a, na, r_a, r_b)
+        bvh = row[o_bv:o_pm].reshape(7, b_lanes)
+        bvh[0, 1:nb + 1] = agg_b.loads[:nb]
+        bvh[1, 1:nb + 1] = agg_b.mems[:nb]
+        bvh[2, 1:nb + 1] = agg_b.overheads[:nb]
+        bvh[3:7, :nb + 1] = self._block_terms(agg_b, nb, r_b, r_a)
+
+        pr = np.asarray(e.pairs, np.int64).reshape(-1, 2)
+        p = pr.shape[0]
+        if p > p_n:
+            raise ValueError("shortlist exceeds the spec pair bucket")
+        ia, ib = pr[:, 0], pr[:, 1]
+        row[o_pm:o_sc].reshape(4, p_n)[:, :p] = \
+            self._pm_corrections(e, na, nb)[:, ia, ib]
+
+        params = st.params
+        mc = params.memory_constraint
+        vol_aa, vol_bb = st.vol[r_a, r_a], st.vol[r_b, r_b]
+        row_a, col_a = self._vol_sums(r_a)
+        row_b, col_b = self._vol_sums(r_b)
+        # the scalar row: the 8 f_* flow slots stay zero (derived in-trace)
+        row[o_sc + L.SC.base_sent_a:o_ia] = (
+            row_a - vol_aa, col_a - vol_aa,        # base_sent/recv_a
+            row_b - vol_bb, col_b - vol_bb,        # base_sent/recv_b
+            vol_aa, vol_bb,
+            st.load[r_a], st.load[r_b],
+            st.shared_cache[r_a], st.shared_cache[r_b],
+            st.hom_cache[r_a], st.hom_cache[r_b],
+            ph.rank_mem_base[r_a], st.mem_task[r_a],
+            st.mem_overhead_max[r_a],
+            ph.rank_mem_base[r_b], st.mem_task[r_b],
+            st.mem_overhead_max[r_b],
+            float(na), float(nb),
+            ph.rank_speed[r_a], ph.rank_speed[r_b],
+            ph.rank_mem_cap[r_a] if mc else np.inf,    # mem_cap_a
+            ph.rank_mem_cap[r_b] if mc else np.inf,    # mem_cap_b
+        )
+        row[o_ia:o_ia + p] = ia             # pad pair slots read pair
+        row[o_ib:o_ib + p] = ib             # (0, 0); p_count masks them
+        row[o_ms + 0] = params.alpha
+        row[o_ms + 1] = params.beta
+        row[o_ms + 2] = params.gamma
+        row[o_ms + 3] = params.delta
+        row[o_ms + 5] = p                   # row[o_ms + 4] = driver's
+        return row, eb                      # w_before
+
     def _vol_sums(self, r: int) -> Tuple[float, float]:
         """(row sum, column sum) of the vol matrix for rank ``r``, cached
         per state version — transfers between ANY ranks relabel entries of
@@ -579,15 +790,21 @@ class PhaseEngine:
         sizes = agg.blk_sizes[:hi]
         leaves = st.block_count[r_src, ids] == agg.blk_cnts[:hi]
         arrives = st.block_count[r_dst, ids] == 0
-        s_rm = np.bincount(ci, weights=sizes * leaves, minlength=n + 1)
-        h_rm = np.bincount(
-            ci, weights=sizes * (leaves & (agg.blk_home[:hi] != r_src)),
-            minlength=n + 1)
-        s_add = np.bincount(ci, weights=sizes * arrives, minlength=n + 1)
-        h_add = np.bincount(
-            ci, weights=sizes * (arrives & (agg.blk_home[:hi] != r_dst)),
-            minlength=n + 1)
-        terms = (s_rm, h_rm, s_add, h_add)
+        # the four per-cluster sums share one index vector, so one fused
+        # bincount over four shifted copies replaces four calls; each
+        # output bin still receives its addends in the same ascending-ci
+        # order, so every row is bitwise the separate bincount it replaces
+        m = n + 1
+        t = np.bincount(
+            np.concatenate([ci, ci + m, ci + 2 * m, ci + 3 * m]),
+            weights=np.concatenate([
+                sizes * leaves,
+                sizes * (leaves & (agg.blk_home[:hi] != r_src)),
+                sizes * arrives,
+                sizes * (arrives & (agg.blk_home[:hi] != r_dst)),
+            ]),
+            minlength=4 * m).reshape(4, m)
+        terms = (t[0], t[1], t[2], t[3])
         self._blk_cache[key] = (st.version, agg, n, terms)
         return terms
 

@@ -1,0 +1,185 @@
+"""Fleet mode: balance MANY independent CCM-LB instances through shared
+compiled launches (``ccm_lb_many``).
+
+The target workload is a scheduler balancing a fleet of similar problems —
+per-job expert placements, per-replica pipeline stages, a sweep of phase
+families — where each instance is small enough that a solo run is
+dominated by fixed per-event host cost (shortlist assembly, flow-matrix
+gather, the numpy scoring tile).  Running them one at a time repeats that
+cost ``n`` times and leaves the compiled scorer scoring one event per
+launch.
+
+``ccm_lb_many`` instead advances all instances in LOCKSTEP: each iteration
+runs every instance's prologue (cluster/summarize/gossip/work lists) on the
+host, derives each instance's deterministic event sequence
+(:func:`repro.core.spec.event_sequence`), and drains ALL the queues through
+shared :func:`repro.core.spec.run_spec` windows — one compiled launch
+scores a window of events drawn round-robin across the whole fleet.  Two
+amortizations stack on top of the shared launches:
+
+  * **compile-once-score-many** — every instance maps onto the same
+    ``("spec", mode, W, ...)`` shape bucket, so the fleet compiles exactly
+    once no matter how many instances run (the benchmark records
+    ``trace_count`` to pin this down);
+  * **quiet-iteration reuse** — an instance whose state version did not
+    change since its last prologue reuses its clusters/summaries AND its
+    per-``(r, p, version)`` speculative captures (:class:`SpecInstance`
+    ``cache``) verbatim.  Converged instances — the steady state of a
+    fleet, where most iterations transfer nothing — re-score repeated
+    events for the cost of a dict hit and a buffer fill.  Both reuses are
+    value-exact: the reused objects are deterministic functions of an
+    unchanged state, and the cache is cleared whenever a fresh prologue
+    rebuilds the cluster lists (entries capture cluster-derived
+    shortlists, so they may only outlive the exact lists they were built
+    from).
+
+Parity contract: per-instance results are IDENTICAL (assignment and
+transfer log) to solo ``ccm_lb(phase_i, a_i, params, seed=seeds[i], ...)``
+runs — per-instance dirty sets and strict-prefix rollback keep each
+instance's committed order equal to its solo event order, and the scoring
+itself sits in the compiled-vs-host parity tier (see
+kernels/ccm_scorer/README.md).  tests/test_spec_scan.py and
+benchmarks/ccmlb_fleet.py assert the identity on every run.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.ccm import CCMState
+from repro.core.ccmlb import (CCMLBResult, ProtocolStats, _rebuild_local,
+                              build_work_lists, iteration_summaries)
+from repro.core.engine import PhaseEngine
+from repro.core.gossip import build_peer_networks
+from repro.core.problem import CCMParams, Phase
+from repro.core.spec import SpecInstance, event_sequence, run_spec
+
+__all__ = ["ccm_lb_many"]
+
+
+def _mk_rebuild(state, clusters, engine, max_clusters_per_rank):
+    # factory so each instance's closure binds ITS objects (late binding
+    # in a loop would alias every closure to the last instance)
+    return lambda r, p: _rebuild_local(state, clusters, engine,
+                                       max_clusters_per_rank, r, p)
+
+
+def _mk_log(log):
+    def _cb(t, a, b):
+        log.append((tuple(int(x) for x in t), int(a), int(b)))
+    return _cb
+
+
+def ccm_lb_many(phases: Sequence[Phase],
+                assignments: Sequence[np.ndarray],
+                params: CCMParams, *,
+                n_iter: int = 4, k_rounds: int = 2, fanout: int = 4,
+                seeds: Optional[Sequence[int]] = None, seed: int = 0,
+                max_candidates: int = 12,
+                max_clusters_per_rank: Optional[int] = None,
+                backend: str = "numpy",
+                window: Optional[int] = None, mode: str = "vmap",
+                spec_trace: bool = False,
+                csrs: Optional[Sequence] = None) -> List[CCMLBResult]:
+    """Balance ``phases[i]`` from ``assignments[i]`` for every ``i``, in
+    lockstep, scoring all instances' lock events through shared compiled
+    windows.  Returns one :class:`CCMLBResult` per instance, identical to
+    the corresponding solo ``ccm_lb`` run (module docstring).
+
+    ``seeds[i]`` is instance ``i``'s gossip seed (solo-equivalent ``seed``
+    argument); defaults to ``seed + i``.  ``window`` is the shared
+    speculative window size, default ``len(phases)`` (every instance's
+    next event fits one launch).  ``mode`` picks the compiled wrapper —
+    ``"vmap"`` (default: events of a window are independent, so a
+    vectorized map is the natural shape) or ``"scan"``.  ``csrs`` passes
+    optional prebuilt ``PhaseCSR`` bundles through to the state builds.
+    """
+    n = len(phases)
+    if n == 0:
+        raise ValueError("ccm_lb_many needs at least one instance")
+    if len(assignments) != n:
+        raise ValueError("one assignment per phase required")
+    if seeds is None:
+        seeds = [seed + i for i in range(n)]
+    elif len(seeds) != n:
+        raise ValueError("one seed per phase required")
+    if csrs is None:
+        csrs = [None] * n
+    win = int(window) if window is not None else n
+    if win < 1:
+        raise ValueError("window must be >= 1")
+
+    states: List[CCMState] = []
+    engines: List[PhaseEngine] = []
+    logs: List[list] = []
+    cbs: List[object] = []
+    stats: List[ProtocolStats] = []
+    straces: List[Optional[list]] = []
+    caches: List[dict] = [dict() for _ in range(n)]
+    # i -> (state version at build time, clusters, summaries)
+    prologue: List[Optional[tuple]] = [None] * n
+    t_max: List[List[float]] = []
+    t_tot: List[List[float]] = []
+    t_imb: List[List[float]] = []
+    for i in range(n):
+        st = CCMState.build(phases[i], assignments[i], params, csr=csrs[i])
+        states.append(st)
+        engines.append(PhaseEngine(st, backend=backend, incremental=True))
+        log: list = []
+        cb = _mk_log(log)
+        st.add_transfer_listener(cb)
+        logs.append(log)
+        cbs.append(cb)
+        stats.append(ProtocolStats())
+        straces.append([] if spec_trace else None)
+        t_max.append([st.max_work()])
+        t_tot.append([st.total_work()])
+        t_imb.append([st.imbalance()])
+
+    try:
+        for it in range(n_iter):
+            insts: List[SpecInstance] = []
+            for i in range(n):
+                st = states[i]
+                cached = prologue[i]
+                if cached is not None and cached[0] == st.version:
+                    clusters, summaries = cached[1], cached[2]
+                else:
+                    clusters, summaries = iteration_summaries(
+                        st, phases[i], max_clusters_per_rank)
+                    prologue[i] = (st.version, clusters, summaries)
+                    caches[i].clear()   # entries captured OLD cluster lists
+                info = build_peer_networks(summaries, k_rounds=k_rounds,
+                                           fanout=fanout,
+                                           seed=seeds[i] * 1000 + it)
+                work_lists = build_work_lists(phases[i], summaries, info,
+                                              params, engines[i])
+                seq = event_sequence(phases[i].num_ranks, work_lists)
+                if seq:
+                    insts.append(SpecInstance(
+                        state=st, engine=engines[i], clusters=clusters,
+                        stats=stats[i],
+                        rebuild=_mk_rebuild(st, clusters, engines[i],
+                                            max_clusters_per_rank),
+                        queue=deque(seq), max_candidates=max_candidates,
+                        trace=straces[i], cache=caches[i]))
+            if insts:
+                run_spec(insts, params, window=win, mode=mode)
+            for i in range(n):
+                t_max[i].append(states[i].max_work())
+                t_tot[i].append(states[i].total_work())
+                t_imb[i].append(states[i].imbalance())
+    finally:
+        for st, cb in zip(states, cbs):
+            st.remove_transfer_listener(cb)
+
+    return [CCMLBResult(states[i].assignment.copy(), states[i], t_max[i],
+                        t_tot[i], t_imb[i], stats[i].transfers,
+                        stats[i].conflicts, engine_used=True,
+                        transfer_log=logs[i],
+                        spec_rollbacks=stats[i].spec_rollbacks,
+                        spec_windows=stats[i].spec_windows,
+                        spec_trace=straces[i], engine=engines[i])
+            for i in range(n)]

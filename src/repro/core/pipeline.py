@@ -35,7 +35,8 @@ import numpy as np
 
 from repro.core.ccmlb import CCMLBResult, ccm_lb
 from repro.core.csr import PhaseCSR
-from repro.core.problem import CCMParams, Phase, initial_assignment
+from repro.core.problem import (CCMParams, Phase, initial_assignment,
+                                same_topology)
 
 __all__ = ["PipelinePhase", "PhaseRun", "PipelineResult",
            "ccm_lb_pipeline", "same_topology", "warm_start_assignment"]
@@ -70,6 +71,7 @@ class PhaseRun:
     csr_reused: bool        # PhaseCSR shared with the previous phase
     carried_tasks: int      # tasks whose rank was carried over
     seconds: float          # wall-clock of this phase's ccm_lb call
+    engine_carried: bool = False    # state+engine retargeted, not rebuilt
 
 
 @dataclasses.dataclass
@@ -97,21 +99,6 @@ class PipelineResult:
     def max_work(self) -> List[List[float]]:
         """Per-phase max-work traces (incl. each phase's initial point)."""
         return [r.result.max_work for r in self.runs]
-
-
-def same_topology(a: Phase, b: Phase) -> bool:
-    """True iff the two phases share the adjacency structure a
-    :class:`PhaseCSR` encodes — same task/block counts, same comm edge
-    endpoints, same task->block map.  Loads, volumes, memory sizes and rank
-    parameters may differ freely (none of them enter the CSR)."""
-    if a is b:
-        return True
-    if (a.num_tasks != b.num_tasks or a.num_blocks != b.num_blocks
-            or a.num_comms != b.num_comms):
-        return False
-    return (np.array_equal(a.comm_src, b.comm_src)
-            and np.array_equal(a.comm_dst, b.comm_dst)
-            and np.array_equal(a.task_block, b.task_block))
 
 
 def warm_start_assignment(prev_phase: Phase, prev_assignment: np.ndarray,
@@ -157,6 +144,7 @@ def ccm_lb_pipeline(phases: Sequence[Union[Phase, PipelinePhase]],
                     params: Union[CCMParams, Sequence[CCMParams]], *,
                     warm_start: bool = True,
                     reuse_csr: bool = True,
+                    carry_engine: bool = False,
                     initial_mode: str = "home",
                     a0: Optional[np.ndarray] = None,
                     seed: int = 0,
@@ -172,6 +160,18 @@ def ccm_lb_pipeline(phases: Sequence[Union[Phase, PipelinePhase]],
     with ``warm_start=False`` — the cold reference — every phase of
     matching task count starts from ``a0``, or from ``initial_mode`` when
     ``a0`` is omitted.  Phase ``k`` runs with seed ``seed + k``.
+
+    ``carry_engine=True`` additionally hands each ``ccm_lb`` call the
+    previous phase's result as ``carry``: when the phases share topology
+    and the warm start carried the full assignment, the CCMState is
+    retargeted in place (bitwise-equal to a rebuild; see
+    ``CCMState.retarget``) and the incremental engine — segments, edge
+    caches — survives across the phase boundary.  ``ccm_lb`` falls back
+    to a fresh build silently whenever the carry conditions fail, so
+    enabling this can only remove redundant work; ``PhaseRun.
+    engine_carried`` reports which happened per phase.  Requires
+    ``warm_start`` (a cold start discards the assignment the carried
+    state serves).
     Remaining keyword arguments (``n_iter``, ``fanout``, ``use_engine``,
     ``backend`` — including the compiled ``"jit"`` scorer runtime, whose
     shape buckets persist across phases so a long stream compiles exactly
@@ -180,6 +180,8 @@ def ccm_lb_pipeline(phases: Sequence[Union[Phase, PipelinePhase]],
     """
     if not phases:
         raise ValueError("ccm_lb_pipeline needs at least one phase")
+    if carry_engine and not warm_start:
+        raise ValueError("carry_engine requires warm_start=True")
     if isinstance(params, CCMParams):
         params_seq: List[CCMParams] = [params] * len(phases)
     else:
@@ -215,10 +217,13 @@ def ccm_lb_pipeline(phases: Sequence[Union[Phase, PipelinePhase]],
             else:
                 csr = PhaseCSR.from_phase(ph)
                 csr_phase = ph
+        carry = (runs[-1].result
+                 if carry_engine and warm_start and runs else None)
         res = ccm_lb(ph, start, params_seq[k], seed=seed + k, csr=csr,
-                     **lb_kwargs)
+                     carry=carry, **lb_kwargs)
         runs.append(PhaseRun(result=res, warm_started=carried > 0,
                              csr_reused=reused, carried_tasks=carried,
-                             seconds=time.perf_counter() - t0))
+                             seconds=time.perf_counter() - t0,
+                             engine_carried=res.engine_carried))
         prev = (ph, res.assignment, pp.task_ids)
     return PipelineResult(runs)

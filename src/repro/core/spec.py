@@ -1,0 +1,311 @@
+"""Speculative lock-event scan: compile the stage-2 event loop.
+
+PR 4 measured the wall this module removes: one XLA dispatch+sync costs as
+much as the whole numpy scoring tree at default tile sizes, so per-event
+host orchestration — not scoring — dominates the engine drivers.  The
+synchronous round-robin driver has a property that makes a compiled fix
+possible: its event sequence is DETERMINISTIC.  Locks are always granted
+(no lock outlives a turn), deadlock-avoidance yields are structurally
+unreachable, and release handoffs never fire, so the full ordered list of
+(r, p) lock events of an iteration is derivable up front from the stage-1
+work lists alone (:func:`event_sequence`), before any event is scored.
+
+:func:`run_spec` exploits that: it speculatively captures a *window* of
+upcoming events from the CURRENT (pre-window) state — shortlists via
+``shortlist_pairs`` and raw flow-assembly inputs via
+``PhaseEngine.spec_raw`` — and scores the whole window in ONE compiled
+launch (``kernels/ccm_scorer/jit.py`` kind="spec": flow-matrix assembly,
+feature derivation, the scorer expression tree, the work combine and the
+selection rule all run in-trace).  The host then walks the window in event
+order and commits winners, rolling back every event an earlier commit
+invalidated:
+
+  * ``dirty`` = ranks touched by transfers committed in this window;
+  * the first event whose ranks intersect ``dirty`` is rolled back —
+    its speculative shortlist/scores/clusters are stale — and so is every
+    LATER event of the same instance, even rank-disjoint ones.  The
+    strict-prefix cut is what keeps the committed event order equal to the
+    reference event order (committing a later disjoint event before the
+    rolled-back one re-runs would permute the transfer log);
+  * rolled-back events re-enter the queue front, in order, and are
+    re-captured against the post-commit state in the next window — except
+    that an event rolled back ONLY by the prefix cut (its ranks disjoint
+    from every committed transfer's) keeps its capture: nothing a
+    transfer on other ranks mutates enters the capture, so the next
+    window reuses it instead of re-running the host prep.  Validity is
+    tracked per rank (version of the last transfer touching it); the
+    reuse carries the same sub-ulp caveat as the batched driver's
+    deferred events (a disjoint swap relabels third-rank vol entries
+    without changing their true sums — see repro/core/ccmlb.py).
+
+Committed prefixes therefore replay the exact reference event sequence,
+and each committed event's inputs are exactly what the host engine driver
+would have computed at that point — up to the compiled path's
+summation-order ulps (numpy pairwise bincount vs XLA scatter-add), which
+is why the whole path sits in the *compiled-vs-host* parity tier:
+assignment identity asserted empirically (tests/test_spec_scan.py,
+benchmarks), not bitwise f64.  The first event of each instance in every
+window can never be rolled back, so every window makes progress and
+termination is inherited from the (finite) event sequence.
+
+The same machinery batches across INSTANCES: ``run_spec`` accepts many
+:class:`SpecInstance` objects and fills each window round-robin (one event
+per live instance per sweep), which is the vmapped fleet mode
+(``core/fleet.py``).  Dirty sets, prefix cuts and commit order are all
+per-instance, so an instance's committed sequence is always exactly its
+solo event order, and a quiet window (no commits anywhere) never rolls
+anything back — the common fleet steady state, where every launch scores
+one event per instance and commits them all.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.engine import ExchangeEvent, PhaseEngine
+from repro.core.transfer import shortlist_pairs
+from repro.kernels.ccm_scorer import jit as scorer_jit
+
+__all__ = ["SpecInstance", "event_sequence", "run_spec"]
+
+
+def event_sequence(num_ranks: int,
+                   work_lists: Dict[int, deque]) -> List[Tuple[int, int]]:
+    """The ordered (r, p) lock events the synchronous round-robin driver
+    (``ccmlb._stage2``) executes for these work lists — derivable without
+    scoring anything because on that driver every lock request is granted
+    and every lock is released within its turn (yields and grant chains
+    are structurally unreachable; see the module docstring).  Mirrors the
+    driver exactly, including the spin budget.  Consumes the deques."""
+    active = deque(r for r in range(num_ranks) if work_lists[r])
+    seq: List[Tuple[int, int]] = []
+    spins = 0
+    max_spins = 50 * num_ranks + 1000
+    while active and spins < max_spins:
+        spins += 1
+        r = active.popleft()
+        if not work_lists[r]:       # unreachable like the driver's branch,
+            continue                # but mirrored so the spin budget agrees
+        _diff, p = work_lists[r].popleft()
+        seq.append((r, p))
+        if work_lists[r]:
+            active.append(r)
+    return seq
+
+
+@dataclasses.dataclass
+class SpecInstance:
+    """One balance problem's slice of a speculative scan.
+
+    ``queue`` holds the instance's remaining (r, p) events in reference
+    order; ``rebuild`` is the post-transfer local cluster rebuild closure
+    (``ccmlb._rebuild_local`` bound to this instance's state/clusters);
+    ``stats`` only needs ``transfers``/``spec_rollbacks``/``spec_windows``
+    counters (``ccmlb.ProtocolStats`` provides them).  ``trace``, when a
+    list, records (window, kind, r, p) tuples with kind in {"transfer",
+    "commit", "noop", "rollback"} — the rollback-safety property tests
+    read it.  ``cache`` maps (r, p, state.version) to captured
+    (shortlist, raw) preparations; pass a persistent dict ONLY when the
+    cluster list objects are stable while the version is (the fleet driver
+    guarantees this by reusing cluster lists across quiet iterations) —
+    entries are value-exact because every cached quantity is a
+    deterministic function of (state, clusters).
+    """
+
+    state: object
+    engine: PhaseEngine
+    clusters: Dict[int, list]
+    stats: object
+    rebuild: Callable[[int, int], None]
+    queue: Deque[Tuple[int, int]]
+    max_candidates: int = 12
+    shortlist: int = 32
+    trace: Optional[list] = None
+    cache: Optional[dict] = None
+
+
+def _prepare(inst: SpecInstance, r: int, p: int, a_lanes: int,
+             b_lanes: int, p_n: int):
+    """Speculatively capture event (r, p) from the instance's CURRENT
+    state: the shortlist (identical to what the host driver's
+    ``try_transfer`` would enumerate) and the ready-to-stack launch row
+    with the pre-exchange work bound baked into its w_before slot.
+    Returns (capture, raw) with raw = (row, eb) — capture is None for
+    events with no candidate pairs (both ranks clusterless: a structural
+    no-op)."""
+    key = (r, p, inst.state.version)
+    if inst.cache is not None:
+        hit = inst.cache.get(key)
+        if hit is not None:
+            return hit
+    cand_a, cand_b, pairs, agg_a, agg_b = shortlist_pairs(
+        inst.state, inst.clusters[r], inst.clusters[p], r, p,
+        inst.max_candidates, inst.shortlist, engine=inst.engine)
+    if pairs.shape[0] == 0:
+        entry = (None, None)
+    else:
+        ev = ExchangeEvent(r, p, cand_a, cand_b, pairs, agg_a, agg_b)
+        row, eb = inst.engine.spec_raw(ev, a_lanes, b_lanes, p_n)
+        row[-2] = max(inst.state.work(r), inst.state.work(p))   # w_before
+        entry = ((cand_a, cand_b, pairs), (row, eb))
+    if inst.cache is not None:
+        inst.cache[key] = entry
+    return entry
+
+
+def run_spec(instances: List[SpecInstance], params, *, window: int,
+             mode: str = "scan", fill: str = "disjoint") -> None:
+    """Drain every instance's event queue through windowed compiled
+    launches with strict-prefix commit/rollback (module docstring).
+    Mutates the instances' states/clusters/stats in place.  ``params``
+    must be the CCMParams the instances' states were built with — the
+    launch rows bake their coefficient columns from ``state.params``.
+
+    ``fill`` picks the speculation policy:
+
+      * ``"disjoint"`` (default) — stop taking events from an instance's
+        queue at the first event whose ranks overlap an event already
+        taken from that instance this window.  A commit then can never
+        dirty a later window event (dirty sets are per-instance and every
+        taken prefix is pairwise rank-disjoint), so rollback is
+        structurally impossible and large windows amortize the dispatch
+        without speculation waste — the same disjointness argument the
+        batched driver flushes on, minus the flush (untaken events just
+        stay queued).
+      * ``"greedy"`` — fill blindly; overlapping speculations roll back
+        through the strict-prefix cut.  This keeps the rollback path
+        load-bearing (the property tests drive it) and measures the
+        speculation-waste trade the benchmark reports.
+    """
+    if window < 1:
+        raise ValueError("spec window must be >= 1")
+    if fill not in ("disjoint", "greedy"):
+        raise ValueError("fill must be 'disjoint' or 'greedy'")
+    a_lanes = b_lanes = scorer_jit.bucket_lanes(
+        max(i.max_candidates for i in instances) + 1)
+    # pair bucket pinned by the instances' knobs (same formula as
+    # spec_warmup) so every launch row of the run shares one layout
+    p_n = scorer_jit.bucket_pairs(max(
+        min(i.max_candidates * (i.max_candidates + 2), i.shortlist)
+        for i in instances))
+    # captures held across windows for cut-but-disjoint rollbacks:
+    # (id(inst), r, p) -> (version at capture, cap, raw), valid while no
+    # committed transfer has touched r or p since the capture (tracked in
+    # ``touched``: (id(inst), rank) -> version of the last commit there)
+    held: Dict[Tuple[int, int, int], tuple] = {}
+    touched: Dict[Tuple[int, int], int] = {}
+    wid = 0
+    while any(inst.queue for inst in instances):
+        # ---- fill: round-robin one event per live instance per sweep, so
+        # a window shared by many instances interleaves them fairly
+        # (sweeps repeat until the window is full or every queue is dry;
+        # under fill="disjoint" an instance also stops contributing at its
+        # first rank overlap, leaving the event queued for the next window)
+        entries: List[list] = []    # [inst, r, p, capture, raw, result]
+        taken: Dict[int, set] = {}
+        blocked: set = set()
+        while len(entries) < window:
+            took = False
+            for inst in instances:
+                if len(entries) >= window:
+                    break
+                if id(inst) in blocked or not inst.queue:
+                    continue
+                r, p = inst.queue[0]
+                t = taken.setdefault(id(inst), set())
+                if fill == "disjoint" and (r in t or p in t):
+                    blocked.add(id(inst))
+                    continue
+                inst.queue.popleft()
+                t.update((r, p))
+                entries.append([inst, r, p, None, None, None])
+                took = True
+            if not took:
+                break
+        # ---- speculate: capture every entry from the pre-window state;
+        # a valid held capture skips the host prep, and a held SCORE (the
+        # launch already ran before the rollback) skips the launch slot
+        # too.  Under fill="disjoint" rollback is impossible, so nothing
+        # is ever held — skip the bookkeeping entirely on that path.
+        raws, launch = [], []
+        for idx, ent in enumerate(entries):
+            inst, r, p = ent[0], ent[1], ent[2]
+            if fill == "disjoint":
+                cap, raw = _prepare(inst, r, p, a_lanes, b_lanes, p_n)
+                res = None
+            else:
+                hkey = (id(inst), r, p)
+                h = held.pop(hkey, None)
+                if (h is not None
+                        and touched.get((id(inst), r), -1) <= h[0]
+                        and touched.get((id(inst), p), -1) <= h[0]):
+                    cap, raw, res = h[1], h[2], h[3]
+                else:
+                    cap, raw = _prepare(inst, r, p, a_lanes, b_lanes, p_n)
+                    res = None
+                held[hkey] = (inst.state.version, cap, raw, None)
+            ent[3] = cap
+            ent[4] = raw
+            ent[5] = res
+            if cap is not None and res is None:
+                raws.append(raw)
+                launch.append(idx)
+        # ---- one compiled launch over the whole window
+        if raws:
+            out = scorer_jit.score_spec(raws, a_lanes=a_lanes,
+                                        b_lanes=b_lanes, p_n=p_n,
+                                        mode=mode)
+            for j, idx in enumerate(launch):
+                entries[idx][5] = out[j]
+        # ---- commit walk: strict per-instance prefix in window order
+        dirty: Dict[int, set] = {}
+        cut: Dict[int, bool] = {}
+        deferred: Dict[int, List[Tuple[int, int]]] = {}
+        seen: Dict[int, SpecInstance] = {}
+        for ent in entries:
+            inst, r, p, cap, _raw, res = ent
+            key = id(inst)
+            seen.setdefault(key, inst)
+            d = dirty.setdefault(key, set())
+            if cut.get(key) or r in d or p in d:
+                # an earlier commit invalidated this speculation (or an
+                # earlier rollback cut the prefix): roll back, re-queue —
+                # keeping the computed score with the held capture, so a
+                # still-valid (rank-disjoint) speculation re-commits next
+                # window without re-running prep or launch
+                cut[key] = True
+                deferred.setdefault(key, []).append((r, p))
+                h = held.get((key, r, p))
+                if h is not None and h[1] is cap:
+                    held[(key, r, p)] = (h[0], cap, _raw, res)
+                inst.stats.spec_rollbacks += 1
+                if inst.trace is not None:
+                    inst.trace.append((wid, "rollback", r, p))
+                continue
+            if cap is None:
+                if inst.trace is not None:
+                    inst.trace.append((wid, "noop", r, p))
+                continue
+            score = res[1]
+            if np.isfinite(score):
+                cand_a, cand_b, pairs = cap
+                k = int(res[0])
+                ia, ib = int(pairs[k, 0]), int(pairs[k, 1])
+                inst.state.swap(cand_a[ia], r, cand_b[ib], p)
+                inst.stats.transfers += 1
+                inst.rebuild(r, p)
+                d.update((r, p))
+                touched[(key, r)] = touched[(key, p)] = inst.state.version
+                if inst.trace is not None:
+                    inst.trace.append((wid, "transfer", r, p))
+            elif inst.trace is not None:
+                inst.trace.append((wid, "commit", r, p))
+        for key, dq in deferred.items():
+            if dq:      # re-enter at the queue FRONT, preserving order
+                seen[key].queue.extendleft(reversed(dq))
+        for key in seen:
+            seen[key].stats.spec_windows += 1
+        wid += 1

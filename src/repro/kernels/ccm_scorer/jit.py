@@ -45,6 +45,31 @@ therefore cannot meet the bitwise f64 parity bar on CPU; combining on the
 (P,)-gathered host side costs ~10 tiny numpy ops per event and keeps the
 contract exact.
 
+The speculative-scan path
+-------------------------
+``kind="spec"`` buckets compile the OTHER direction of the same trade: one
+launch scores a whole *window* of upcoming lock events, and the per-event
+feature assembly itself — the group-flow matrix bincount and every slice
+sum ``PhaseEngine._flow_matrices`` / ``_event_features`` used to run on the
+host — moves into the traced body.  The host ships raw ingredients (edge
+bins + volumes, the non-flow feature rows, a scalar row with the flow
+slots zeroed) as ONE flat f64 row per event; the traced body scatter-adds
+the flow matrix, derives all flow-dependent features, scores the shortlist
+through the SAME ``ref.score_planes`` expression tree, applies the work
+combine and the selection rule in-trace, and returns only the winning pair
+per event.  A ``jax.lax.scan`` over the window axis (``mode="scan"``) or a
+``jax.vmap`` over independent instances (``mode="vmap"``) wraps one shared
+per-event body, so every window/fleet size reuses the same trace.
+
+This path CANNOT meet the bitwise f64 bar: the scatter-add segment sums
+combine duplicate bins in an XLA-chosen order, while the host reference's
+``np.bincount`` accumulates sequentially (and numpy's ``.sum()`` pairwise
+summation differs from XLA's reduce order), so the flow features differ by
+summation-order ulps.  It therefore sits in its own *compiled-vs-host*
+parity tier — end-to-end assignment identity on the ccmlb_scaling
+instances plus a tracked ulp budget, with the host engine path kept as
+the reference twin (README.md documents the full ladder).
+
 The f32 compiled path
 ---------------------
 ``backend="pallas_compiled"`` packs the same tiles in float32 with B padded
@@ -66,7 +91,8 @@ import numpy as np
 from repro.kernels.ccm_scorer import ref
 from repro.kernels.ccm_scorer.layout import N_AV, N_OUT, N_PM, N_SC, OUT, SC
 
-__all__ = ["bucket_lanes", "bucket_events", "bucket_pairs", "score_events",
+__all__ = ["bucket_lanes", "bucket_events", "bucket_pairs", "bucket_edges",
+           "score_events", "score_spec", "spec_warmup",
            "score_tiles_jit", "score_tiles_f32", "trace_count",
            "bucket_cache_size", "pallas_compiled_supported",
            "pallas_compiled_fallback", "LANE_CAP"]
@@ -108,6 +134,15 @@ def bucket_pairs(p: int) -> int:
     return max(32, 1 << (p - 1).bit_length())
 
 
+def bucket_edges(n: int) -> int:
+    """Edge-axis bucket for the speculative-scan rows: powers of two with a
+    floor of 32.  Incident-edge counts churn per rank pair, so without the
+    pow2 grid every distinct count would be a fresh compile; with it a whole
+    trajectory touches at most log2(max incident edges) edge buckets."""
+    n = max(int(n), 1)
+    return max(32, 1 << (n - 1).bit_length())
+
+
 def trace_count() -> int:
     """How many times a bucketed scorer body has been TRACED (== compiled,
     barring jax's persistent cache).  The recompile-count guard asserts this
@@ -117,6 +152,14 @@ def trace_count() -> int:
 
 def bucket_cache_size() -> int:
     return len(_FN_CACHE)
+
+
+def bucket_keys() -> list:
+    """The distinct compiled bucket keys, stringified (kind plus the static
+    shape info).  Each key traces exactly once per process, so together
+    with ``trace_count()`` this is the per-bucket compile ledger the
+    benchmarks record PR to PR."""
+    return sorted(str(k) for k in _FN_CACHE)
 
 
 # --------------------------------------------------------- compiled bodies
@@ -135,6 +178,28 @@ def _pair_offsets(p: int) -> Tuple[int, ...]:
     o_ib = o_ia + p
     o_cf = o_ib + 4
     return o_av, o_bv, o_pm, o_sc, o_ia, o_ib, o_cf
+
+
+def _spec_offsets(eb: int, a_n: int, b_n: int, p_n: int) -> Tuple[int, ...]:
+    """Cumulative offsets of
+    ``[bins | w | avh | bvh | pmh | sch | iaf | ibf | misc]`` in one flat
+    per-event row of the speculative-scan layout (misc = alpha, beta,
+    gamma, delta, w_before, p_count).  ``bins``/``w`` are the flow-matrix
+    scatter inputs (eb edge slots each), ``avh``/``bvh`` the seven host-side
+    candidate feature rows (AV.load..AV.h_add_peer), ``pmh`` the four
+    host-side pairwise correction planes gathered at the shortlist, ``sch``
+    the scalar row with the eight flow slots zeroed (filled in-trace).
+    One flat f64 row per event for the same reason as ``_pair_offsets``:
+    per-array device ingest would dominate the launch."""
+    o_w = eb
+    o_av = o_w + eb
+    o_bv = o_av + 7 * a_n
+    o_pm = o_bv + 7 * b_n
+    o_sc = o_pm + 4 * p_n
+    o_ia = o_sc + N_SC
+    o_ib = o_ia + p_n
+    o_ms = o_ib + p_n
+    return o_w, o_av, o_bv, o_pm, o_sc, o_ia, o_ib, o_ms, o_ms + 6
 
 
 def _get_fn(key):
@@ -185,6 +250,127 @@ def _get_fn(key):
                     out[:, OUT.mem_b],
                 ]
                 return jnp.stack(terms, axis=1)      # (E, 10, P)
+        elif kind == "spec":
+            # the speculative-scan path: the WHOLE per-event pipeline —
+            # flow-matrix assembly (scatter-add over the fixed group-label
+            # layout), slice-sum feature derivation, the score_planes
+            # expression tree, the work combine AND the selection rule —
+            # runs in-trace, once per window row.  Only the winning pair
+            # index and its scores leave the device, so a window of W
+            # events costs one dispatch instead of W.
+            _, mode, w_n, eb, a_n, b_n, p_n = key
+            (o_w, o_av, o_bv, o_pm, o_sc, o_ia, o_ib, o_ms,
+             _row_len) = _spec_offsets(eb, a_n, b_n, p_n)
+            # fixed group-label layout (mirrors PhaseEngine.spec_raw):
+            # 0 = other ranks, 1 = stays on a, 2 = stays on b,
+            # a-candidate i at sa + (i - 1), b-candidate j at sb + (j - 1).
+            sa = 3
+            sb = 3 + (a_n - 1)
+            g_n = sb + (b_n - 1)
+
+            def one(row):
+                bins = row[:o_w].astype(jnp.int32)
+                wgt = row[o_w:o_av]
+                F = (jnp.zeros(g_n * g_n, row.dtype).at[bins].add(wgt)
+                     .reshape(g_n, g_n))
+                # slice sums over the fixed layout; unused candidate groups
+                # received no edges, so their contribution is exactly zero
+                row_to_a = F[:, 1] + F[:, sa:sb].sum(1)     # -> rank a
+                row_to_b = F[:, 2] + F[:, sb:].sum(1)       # -> rank b
+                col_from_a = F[1, :] + F[sa:sb, :].sum(0)   # rank a ->
+                col_from_b = F[2, :] + F[sb:, :].sum(0)     # rank b ->
+                ar = jnp.arange(sa, sb)
+                br = jnp.arange(sb, g_n)
+                z1 = jnp.zeros((1,), row.dtype)
+                # in-trace AV rows 0..6 (flow-derived); rows 7..13 ride in
+                # from the host (avh) — same split as _event_features
+                avf = jnp.stack([
+                    jnp.concatenate([z1, F[ar, ar]]),            # intra
+                    jnp.concatenate([z1, row_to_a[sa:sb]]),      # out_own
+                    jnp.concatenate([z1, col_from_a[sa:sb]]),    # in_own
+                    jnp.concatenate([z1, row_to_b[sa:sb]]),      # out_peer
+                    jnp.concatenate([z1, col_from_b[sa:sb]]),    # in_peer
+                    jnp.concatenate([z1, F[ar, 0]]),             # out_other
+                    jnp.concatenate([z1, F[0, ar]]),             # in_other
+                ])
+                bvf = jnp.stack([
+                    jnp.concatenate([z1, F[br, br]]),
+                    jnp.concatenate([z1, row_to_b[sb:]]),
+                    jnp.concatenate([z1, col_from_b[sb:]]),
+                    jnp.concatenate([z1, row_to_a[sb:]]),
+                    jnp.concatenate([z1, col_from_a[sb:]]),
+                    jnp.concatenate([z1, F[br, 0]]),
+                    jnp.concatenate([z1, F[0, br]]),
+                ])
+                av = jnp.concatenate(
+                    [avf, row[o_av:o_bv].reshape(7, a_n)], axis=0)
+                bv = jnp.concatenate(
+                    [bvf, row[o_bv:o_pm].reshape(7, b_n)], axis=0)
+                flows = jnp.stack([
+                    row_to_b[1] + row_to_b[sa:sb].sum(),    # f_ab
+                    row_to_a[2] + row_to_a[sb:].sum(),      # f_ba
+                    row_to_a[1] + row_to_a[sa:sb].sum(),    # f_aa
+                    row_to_b[2] + row_to_b[sb:].sum(),      # f_bb
+                    F[1, 0] + F[sa:sb, 0].sum(),            # f_ao
+                    F[0, 1] + F[0, sa:sb].sum(),            # f_oa
+                    F[2, 0] + F[sb:, 0].sum(),              # f_bo
+                    F[0, 2] + F[0, sb:].sum(),              # f_ob
+                ])
+                sc = row[o_sc:o_ia].at[:8].set(flows)
+                ia = row[o_ia:o_ib].astype(jnp.int32)
+                ib = row[o_ib:o_ms].astype(jnp.int32)
+                avp = av[:, ia]                             # (14, P)
+                bvp = bv[:, ib]
+                on_pair = (ia >= 1) & (ib >= 1)
+                x_ab = jnp.where(on_pair, F[sa - 1 + ia, sb - 1 + ib], 0.0)
+                x_ba = jnp.where(on_pair, F[sb - 1 + ib, sa - 1 + ia], 0.0)
+                pm = jnp.concatenate(
+                    [jnp.stack([x_ab, x_ba]),
+                     row[o_pm:o_sc].reshape(4, p_n)], axis=0)   # (6, P)
+                planes = ref.score_planes(
+                    col=lambda i: avp[i], row=lambda i: bvp[i],
+                    scal=lambda i: sc[i], pmp=lambda i: pm[i], xp=jnp)
+                # in-trace combine + selection.  FMA contraction is fine
+                # here: this path's parity bar is compiled-vs-host (ulp
+                # budget + assignment identity), not bitwise f64.
+                al, be = row[o_ms + 0], row[o_ms + 1]
+                ga, de = row[o_ms + 2], row[o_ms + 3]
+                w_before = row[o_ms + 4]
+                p_cnt = row[o_ms + 5]
+                w_a = (al * planes[OUT.load_a] / sc[SC.speed_a]
+                       + be * planes[OUT.off_a] + ga * planes[OUT.on_a]
+                       + de * planes[OUT.hom_a])
+                w_b = (al * planes[OUT.load_b] / sc[SC.speed_b]
+                       + be * planes[OUT.off_b] + ga * planes[OUT.on_b]
+                       + de * planes[OUT.hom_b])
+                feas = ((planes[OUT.mem_a] <= sc[SC.mem_cap_a] + 1e-6)
+                        & (planes[OUT.mem_b] <= sc[SC.mem_cap_b] + 1e-6))
+                valid = jnp.arange(p_n) < p_cnt
+                diff = w_before - jnp.maximum(w_a, w_b)
+                # argmax picks the FIRST max over the same candidate order
+                # select_best walks, so selection matches the host rule
+                score = jnp.where(valid & feas & (diff > 1e-12),
+                                  diff, -jnp.inf)
+                j = jnp.argmax(score)
+                return jnp.stack([j.astype(row.dtype), score[j],
+                                  w_a[j], w_b[j]])
+
+            if mode == "scan":
+                def body(buf):
+                    global _TRACE_COUNT
+                    _TRACE_COUNT += 1
+                    _, out = jax.lax.scan(
+                        lambda c, r: (c, one(r)),
+                        jnp.zeros((), jnp.int32), buf)
+                    return out                      # (W, 4)
+            elif mode == "vmap":
+                def body(buf):
+                    global _TRACE_COUNT
+                    _TRACE_COUNT += 1
+                    return jax.vmap(one)(buf)       # (W, 4)
+            else:                           # pragma: no cover
+                raise ValueError(f"unknown spec mode: {mode!r}")
+            del w_n                         # shape carried by buf itself
         elif kind == "full":
             def body(av, bv, pm, sc):
                 global _TRACE_COUNT
@@ -344,6 +530,99 @@ def warmup(max_candidates: int = 12, shortlist: int = 32,
                 buf[:, o_pm + SC.speed_a] = 1.0      # no 0/0 lanes
                 buf[:, o_pm + SC.speed_b] = 1.0
                 fn(buf)
+    finally:
+        jax.config.update("jax_debug_nans", debug_nans)
+    return bucket_cache_size()
+
+
+# ------------------------------------------------- the speculative launcher
+def score_spec(raws: Sequence[Tuple[np.ndarray, int]], *, a_lanes: int,
+               b_lanes: int, p_n: int, mode: str = "scan",
+               window: Optional[int] = None) -> np.ndarray:
+    """Score a window of speculative lock events in ONE compiled launch.
+
+    ``raws``: per-event ``(row, eb)`` pairs as built by
+    ``PhaseEngine.spec_raw`` — ``row`` a complete launch row in the
+    ``_spec_offsets(eb, a_lanes, b_lanes, p_n)`` layout (params columns,
+    pair count and the driver's w_before already baked in), ``eb`` its
+    edge bucket.  Rows sharing the window's edge bucket stack verbatim;
+    a smaller row lands with three slice copies, since everything after
+    its ``[bins | w]`` head is eb-independent.  Returns ``(len(raws), 4)``
+    float64 rows ``[pair slot, diff, w_a, w_b]``: the in-trace selection's
+    winning shortlist slot, its work improvement (``-inf`` when no
+    feasible improving pair exists — the event is a no-op), and the
+    winner's resulting per-rank works.
+
+    ``mode="scan"`` compiles a ``lax.scan`` over the window axis (the solo
+    speculative driver), ``mode="vmap"`` a ``jax.vmap`` (the fleet mode);
+    both share the identical per-event body.  Outputs sit in the
+    compiled-vs-host parity tier (see module docstring), NOT the bitwise
+    f64 tier.
+    """
+    n = len(raws)
+    if n == 0:
+        return np.zeros((0, 4))
+    # bucket on the FILL, not the configured window: a short disjoint
+    # prefix then runs a correspondingly small compiled scan instead of
+    # padding to the window bucket (pad rows compute in-trace, so window-
+    # sized buckets made large windows net losers).  ``window`` remains
+    # the warmup hint for the bucket ladder's top.
+    del window
+    w_n = bucket_events(n)
+    eb = max(r[1] for r in raws)
+    o_sc, row_len = _spec_offsets(eb, a_lanes, b_lanes, p_n)[4::4]
+    buf = np.zeros((w_n, row_len))
+    if all(r[1] == eb for r in raws):
+        for k, (row, _) in enumerate(raws):
+            buf[k] = row
+    else:
+        for k, (row, e_k) in enumerate(raws):
+            buf[k, :e_k] = row[:e_k]            # bins (pad bins stay in
+            buf[k, eb:eb + e_k] = row[e_k:2 * e_k]  # (0, 0)); w
+            buf[k, 2 * eb:] = row[2 * e_k:]     # the eb-independent tail
+    # pad event rows: unit speeds so the in-trace divide cannot 0/0
+    # (their p_count stays 0, masking them out of the in-trace argmax)
+    buf[n:, o_sc + SC.speed_a] = 1.0
+    buf[n:, o_sc + SC.speed_b] = 1.0
+    fn = _get_fn(("spec", mode, w_n, eb, a_lanes, b_lanes, p_n))
+    with _x64():
+        out = np.asarray(fn(buf))
+    return out[:n]
+
+
+def spec_warmup(*, max_candidates: int = 12, shortlist: int = 32,
+                window: int = 8, edges: Sequence[int] = (256,),
+                modes: Sequence[str] = ("scan",)) -> int:
+    """Pre-compile the speculative-scan buckets a run with these knobs can
+    touch: the power-of-two fill ladder up to the window bucket, per
+    (mode, edge bucket) — the lane and pair buckets are pinned by
+    ``max_candidates``/``shortlist``.  (``score_spec`` buckets on the
+    actual fill, so a run with window W touches every ladder rung, not
+    just the top.)  Pass the edge buckets the instance family reaches
+    (``bucket_edges`` of typical incident-edge counts); benchmarks call
+    this so the timed region holds no XLA compiles.  Returns the number
+    of buckets now compiled."""
+    import jax
+
+    lanes = bucket_lanes(max_candidates + 1)
+    p_n = bucket_pairs(min(max_candidates * (max_candidates + 2),
+                           shortlist))
+    debug_nans = jax.config.jax_debug_nans
+    jax.config.update("jax_debug_nans", False)
+    try:
+        for mode in modes:
+            for e in edges:
+                eb = bucket_edges(e)
+                o_sc, row_len = _spec_offsets(eb, lanes, lanes, p_n)[4::4]
+                row = np.zeros(row_len)
+                row[o_sc + SC.speed_a] = 1.0    # no 0/0 lanes
+                row[o_sc + SC.speed_b] = 1.0
+                w = 1
+                while w <= bucket_events(window):
+                    score_spec([(row, eb)] * w, a_lanes=lanes,
+                               b_lanes=lanes, p_n=p_n, mode=mode,
+                               window=window)
+                    w *= 2
     finally:
         jax.config.update("jax_debug_nans", debug_nans)
     return bucket_cache_size()

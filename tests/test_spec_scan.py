@@ -1,0 +1,173 @@
+"""Speculative-scan stage-2 driver (core/spec.py): trajectory parity with
+the host engine, strict-prefix rollback semantics (a rolled-back event is
+never committed in the window that rolled it back, and is always retried),
+and fleet-mode (``ccm_lb_many``) per-instance identity.
+
+The rollback property runs as a seeded sweep always, and through
+hypothesis over a wider seed space when dev deps are installed — the same
+split as tests/test_incremental.py.
+"""
+import numpy as np
+import pytest
+
+from repro.core import CCMParams, ccm_lb, ccm_lb_many, random_phase
+from repro.core.problem import initial_assignment
+
+PARAMS = CCMParams(delta=1e-9)
+
+
+def _phase(seed, ranks=8, tasks=160):
+    return random_phase(seed, num_ranks=ranks, num_tasks=tasks,
+                        num_blocks=3 * ranks, num_comms=4 * tasks,
+                        mem_cap=1e12)
+
+
+def _solo(phase, a0, **kw):
+    return ccm_lb(phase, a0, PARAMS, n_iter=3, k_rounds=2, fanout=4,
+                  seed=0, use_engine=True, **kw)
+
+
+# ------------------------------------------------------- trajectory parity
+@pytest.mark.parametrize("mode,fill,window", [
+    ("scan", "disjoint", 2),
+    ("scan", "disjoint", 8),
+    ("scan", "greedy", 8),
+    ("vmap", "disjoint", 4),
+    ("vmap", "greedy", 8),
+])
+def test_spec_matches_host_engine(mode, fill, window):
+    """Every (mode, fill, window) combination is a pure scheduling
+    transform: assignment AND transfer log identical to the synchronous
+    host-engine trajectory."""
+    phase = _phase(11, ranks=16, tasks=320)
+    a0 = initial_assignment(phase)
+    ref = _solo(phase, a0)
+    res = _solo(phase, a0, spec_window=window, spec_mode=mode,
+                spec_fill=fill)
+    np.testing.assert_array_equal(ref.assignment, res.assignment)
+    assert ref.transfer_log == res.transfer_log
+    assert ref.transfers == res.transfers
+    np.testing.assert_allclose(ref.max_work, res.max_work)
+    assert res.spec_windows > 0
+    if fill == "disjoint":
+        # disjoint fill is rollback-free by construction
+        assert res.spec_rollbacks == 0
+
+
+# ------------------------------------------------ rollback never committed
+def _check_rollback_property(seed):
+    """Greedy fill with n_iter=1 (one run_spec call, so window ids in the
+    trace are strictly increasing and contiguous runs ARE windows).
+    Returns the rollback count so the sweep can assert the property was
+    actually exercised."""
+    phase = _phase(seed)
+    a0 = initial_assignment(phase)
+    res = ccm_lb(phase, a0, PARAMS, n_iter=1, k_rounds=2, fanout=4,
+                 seed=seed, use_engine=True, spec_window=8,
+                 spec_fill="greedy", spec_trace=True)
+    ref = ccm_lb(phase, a0, PARAMS, n_iter=1, k_rounds=2, fanout=4,
+                 seed=seed, use_engine=True)
+    np.testing.assert_array_equal(ref.assignment, res.assignment)
+    assert ref.transfer_log == res.transfer_log
+
+    trace = res.spec_trace
+    assert trace is not None
+    wids = [e[0] for e in trace]
+    assert wids == sorted(wids)                   # one run_spec call
+    windows = {}
+    for wid, kind, r, p in trace:
+        windows.setdefault(wid, []).append((kind, r, p))
+    for wid, entries in windows.items():
+        rolled = {(r, p) for kind, r, p in entries if kind == "rollback"}
+        landed = {(r, p) for kind, r, p in entries
+                  if kind in ("transfer", "commit")}
+        # a rolled-back speculation never lands in the window that cut it
+        assert not (rolled & landed), (wid, rolled & landed)
+        # strict prefix: after the first rollback of a window, every
+        # later entry of that window is a rollback too
+        kinds = [kind for kind, _, _ in entries]
+        if "rollback" in kinds:
+            first = kinds.index("rollback")
+            assert all(k == "rollback" for k in kinds[first:]), entries
+            # a window that rolled anything back re-queues it, so it is
+            # never the last window of the call
+            assert wid < max(windows)
+    # every rolled-back event is retried later in the trace
+    for i, (wid, kind, r, p) in enumerate(trace):
+        if kind == "rollback":
+            assert any(e[2] == r and e[3] == p for e in trace[i + 1:]), \
+                (wid, r, p)
+    # the counters aggregate the trace
+    assert res.transfers == sum(1 for e in trace if e[1] == "transfer")
+    assert res.spec_rollbacks == sum(1 for e in trace
+                                     if e[1] == "rollback")
+    assert res.spec_windows == len(windows)
+    return res.spec_rollbacks
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_spec_rollback_never_committed_seeded(seed):
+    """Seeded sweep of the property (always runs, hypothesis or not)."""
+    _check_rollback_property(seed)
+
+
+def test_spec_greedy_fill_exercises_rollback():
+    """The greedy property sweep must actually hit the rollback path."""
+    assert sum(_check_rollback_property(s) for s in range(8)) > 0
+
+
+try:  # hypothesis variant: wider seed space when dev deps are installed
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 100_000))
+    def test_spec_rollback_never_committed_property(seed):
+        _check_rollback_property(seed)
+except ImportError:  # pragma: no cover - exercised without dev deps
+    pass
+
+
+# ------------------------------------------------------ fleet-mode parity
+def test_fleet_matches_solo_engines():
+    """``ccm_lb_many`` is the same trajectories, scheduled differently:
+    every instance's assignment and transfer log match its solo run."""
+    n = 3
+    phases = [_phase(20 + i) for i in range(n)]
+    a0s = [initial_assignment(p) for p in phases]
+    kw = dict(n_iter=3, k_rounds=2, fanout=4, max_candidates=12)
+    fleet = ccm_lb_many(phases, a0s, PARAMS, seed=5, **kw)
+    for i in range(n):
+        solo = ccm_lb(phases[i], a0s[i], PARAMS, seed=5 + i,
+                      use_engine=True, **kw)
+        np.testing.assert_array_equal(fleet[i].assignment, solo.assignment)
+        assert fleet[i].transfer_log == solo.transfer_log
+        np.testing.assert_allclose(fleet[i].max_work, solo.max_work)
+        assert fleet[i].engine_used
+
+
+def test_fleet_explicit_seeds_and_window():
+    phases = [_phase(30), _phase(31)]
+    a0s = [initial_assignment(p) for p in phases]
+    kw = dict(n_iter=2, k_rounds=2, fanout=4)
+    fleet = ccm_lb_many(phases, a0s, PARAMS, seeds=[9, 9], window=4, **kw)
+    for i in range(2):
+        solo = ccm_lb(phases[i], a0s[i], PARAMS, seed=9, use_engine=True,
+                      **kw)
+        np.testing.assert_array_equal(fleet[i].assignment, solo.assignment)
+        assert fleet[i].transfer_log == solo.transfer_log
+
+
+# ----------------------------------------------------------- knob checking
+def test_spec_knob_validation():
+    phase = _phase(40)
+    a0 = initial_assignment(phase)
+    with pytest.raises(ValueError, match="spec_window"):
+        ccm_lb(phase, a0, PARAMS, spec_window=0)
+    with pytest.raises(ValueError, match="use_engine"):
+        ccm_lb(phase, a0, PARAMS, use_engine=False, spec_window=4)
+    with pytest.raises(ValueError, match="mutually"):
+        ccm_lb(phase, a0, PARAMS, use_engine=True, spec_window=4,
+               batch_lock_events=8)
+    with pytest.raises(ValueError, match="fill"):
+        ccm_lb(phase, a0, PARAMS, use_engine=True, spec_window=4,
+               spec_fill="bogus")
