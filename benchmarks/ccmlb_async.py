@@ -65,6 +65,8 @@ def _record(records, tag, ranks, phase, res, seconds, parity=None, **extra):
         "max_grant_chain": int(res.max_grant_chain),
         "messages": int(res.messages),
         "sim_time": float(res.sim_time),
+        "timeouts": int(res.timeouts),
+        "retries_exhausted": int(res.retries_exhausted),
         **({} if parity is None else {"bitwise_identical_to_sync": parity}),
         **extra,
     })

@@ -1,0 +1,285 @@
+"""Fault-injection sweep for the async CCM-LB protocol (robustness bars).
+
+Per rank count this runs the ccmlb_scaling instance through the hardened
+event-loop driver (``repro/core/async_sim.py``) under seeded faults:
+
+  * ``fault_free`` / ``inactive_spec`` — the reference run and the same
+    run with an all-zero :class:`FaultSpec`, ASSERTED bitwise-identical
+    (assignment + transfer sequence + work traces): the harness itself
+    costs nothing when no fault fires;
+  * ``drop_*`` — a message-loss sweep.  For drop rates <= 1% the final
+    balance quality (Wmax / mean) is ASSERTED within ``QUALITY_BAR`` =
+    1.15x of the fault-free run; higher rates are recorded (timeouts,
+    retries exhausted, wedged-lock reclaims, message overhead) without a
+    quality bar;
+  * ``dup`` / ``reorder`` / ``combined`` — duplication and reordering
+    storms: the idempotence counters (duplicate requests ignored, stale
+    grants/releases discarded) must fire and the run must stay safe;
+  * ``pause`` — a rank frozen for a sim-time window mid-iteration
+    (deferred deliveries, then catch-up);
+  * ``crash`` / ``crash_lossy`` — ranks killed mid-iteration: locks
+    reclaimed, work migrated off the dead ranks, survivors finish.
+
+Every faulted record passes the same invariant gate: the transfer log
+replays from the initial assignment to the final one, the final
+assignment is memory-feasible, and no task lands on a dead rank.
+
+Results land in ``BENCH_ccmlb_fault.json``.
+
+Standalone:  PYTHONPATH=src python benchmarks/ccmlb_fault.py [--quick]
+(--quick runs the 16-rank configs for CI; also wired into
+benchmarks/run.py as ``ccmlb_fault``.)
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.core import CCMParams, FaultSpec, ccm_lb_async
+from repro.core.ccm import CCMState
+from repro.core.problem import initial_assignment, scaling_phase
+
+JSON_PATH = os.environ.get("BENCH_CCMLB_FAULT_JSON", "BENCH_ccmlb_fault.json")
+N_ITER = 4
+LAT = ("uniform", 0.5, 1.5)
+QUALITY_BAR = 1.15          # faulted / fault-free Wmax ratio, drop <= 1%
+DROP_SWEEP = (0.002, 0.005, 0.01, 0.02, 0.05)
+
+PARAMS = CCMParams(delta=1e-9)
+_instance = scaling_phase   # same instances as the async/scaling benches
+
+
+def _check_invariants(phase, a0, res, tag):
+    """The safety gate every faulted run must pass: log replay, memory
+    feasibility, nothing stranded on a dead rank."""
+    replay = np.asarray(a0, np.int64).copy()
+    for tasks, r_from, r_to in res.transfer_log:
+        idx = np.asarray(tasks, np.int64)
+        assert (replay[idx] == r_from).all(), f"{tag}: replay diverged"
+        replay[idx] = r_to
+    assert np.array_equal(replay, res.assignment), f"{tag}: log incomplete"
+    final = CCMState.build(phase, res.assignment, PARAMS)
+    for r in range(phase.num_ranks):
+        assert final.memory_feasible(r), f"{tag}: rank {r} over memory"
+    for r in (res.dead_ranks or ()):
+        assert not (res.assignment == r).any(), \
+            f"{tag}: tasks left on dead rank {r}"
+
+
+def _quality(res, phase):
+    return float(res.max_work[-1] / (phase.task_load.sum() / phase.num_ranks))
+
+
+def _record(records, tag, ranks, phase, res, seconds, ref=None, **extra):
+    fs = res.fault_stats
+    records.append({
+        "config": tag,
+        "ranks": ranks,
+        "n_iter": N_ITER,
+        "seconds": seconds,
+        "max_work_over_mean": _quality(res, phase),
+        "imbalance_after": float(res.imbalance[-1]),
+        "transfers": int(res.transfers),
+        "messages": int(res.messages),
+        "timeouts": int(res.timeouts),
+        "retries_exhausted": int(res.retries_exhausted),
+        **({} if ref is None else {
+            "quality_vs_fault_free":
+                _quality(res, phase) / _quality(ref, phase),
+            "message_overhead": res.messages / max(ref.messages, 1),
+        }),
+        **({} if fs is None else {
+            "dropped": fs.dropped,
+            "duplicated": fs.duplicated,
+            "reordered": fs.reordered,
+            "dup_requests_ignored": fs.dup_requests,
+            "stale_grants": fs.stale_grants,
+            "stale_releases": fs.stale_releases,
+            "wedged_reclaimed": fs.wedged_reclaimed,
+            "paused_deferrals": fs.paused_deferrals,
+            "killed": fs.killed,
+            "recovered_tasks": fs.recovered_tasks,
+        }),
+        **({} if not res.dead_ranks else {"dead_ranks": res.dead_ranks}),
+        **extra,
+    })
+
+
+def _run(phase, a0, fault, **over):
+    kw = dict(n_iter=N_ITER, k_rounds=2, fanout=4, seed=0, latency=LAT)
+    kw.update(over)
+    t0 = time.perf_counter()
+    res = ccm_lb_async(phase, a0, PARAMS, fault=fault, **kw)
+    return res, time.perf_counter() - t0
+
+
+def _sweep_ranks(report, records, ranks: int):
+    phase = _instance(ranks)
+    a0 = initial_assignment(phase)
+
+    ref, ref_s = _run(phase, a0, None)
+    _record(records, "fault_free", ranks, phase, ref, ref_s)
+    report(f"ccmlb_fault_ranks_{ranks}_fault_free", ref_s * 1e6,
+           f"wmax/mean={_quality(ref, phase):.4f} msgs={ref.messages}")
+
+    # harness bar: an inactive spec is bitwise-identical to fault=None
+    noop, noop_s = _run(phase, a0, FaultSpec())
+    bitwise = bool(np.array_equal(noop.assignment, ref.assignment)
+                   and noop.transfer_log == ref.transfer_log
+                   and noop.max_work == ref.max_work)
+    assert bitwise, f"inactive FaultSpec perturbed the run @{ranks}"
+    _record(records, "inactive_spec", ranks, phase, noop, noop_s,
+            bitwise_identical_to_fault_free=True)
+    report(f"ccmlb_fault_ranks_{ranks}_inactive_spec", noop_s * 1e6,
+           "bitwise==fault_free")
+
+    for drop in DROP_SWEEP:
+        spec = FaultSpec(drop=drop, req_timeout=4.0, seed=7)
+        res, dt = _run(phase, a0, spec)
+        _check_invariants(phase, a0, res, f"drop_{drop}@{ranks}")
+        q_ratio = _quality(res, phase) / _quality(ref, phase)
+        if drop <= 0.01:    # acceptance bar: modest loss, near-full quality
+            assert q_ratio <= QUALITY_BAR, \
+                f"drop={drop} quality {q_ratio:.3f}x > {QUALITY_BAR}x @{ranks}"
+        _record(records, f"drop_{drop:g}", ranks, phase, res, dt, ref=ref,
+                drop=drop, quality_bar=QUALITY_BAR if drop <= 0.01 else None)
+        report(f"ccmlb_fault_ranks_{ranks}_drop_{drop:g}", dt * 1e6,
+               f"quality={q_ratio:.3f}x dropped={res.fault_stats.dropped} "
+               f"timeouts={res.timeouts} exhausted={res.retries_exhausted} "
+               f"wedged={res.fault_stats.wedged_reclaimed}")
+
+    for tag, spec in (
+            ("dup", FaultSpec(dup=0.2, seed=11)),
+            ("reorder", FaultSpec(reorder=0.2, reorder_scale=2.0, seed=12)),
+            ("combined", FaultSpec(drop=0.01, dup=0.1, reorder=0.1,
+                                   req_timeout=4.0, seed=13))):
+        res, dt = _run(phase, a0, spec)
+        _check_invariants(phase, a0, res, f"{tag}@{ranks}")
+        fs = res.fault_stats
+        if tag in ("dup", "combined"):      # idempotence layer must fire
+            assert fs.duplicated > 0 and (
+                fs.dup_requests + fs.stale_grants + fs.stale_releases) > 0, \
+                f"{tag}@{ranks}: no duplicate absorbed"
+        if tag in ("reorder", "combined"):
+            assert fs.reordered > 0, f"{tag}@{ranks}: nothing reordered"
+        _record(records, tag, ranks, phase, res, dt, ref=ref)
+        report(f"ccmlb_fault_ranks_{ranks}_{tag}", dt * 1e6,
+               f"quality={_quality(res, phase) / _quality(ref, phase):.3f}x "
+               f"dup={fs.duplicated} reord={fs.reordered} "
+               f"stale_g={fs.stale_grants} stale_r={fs.stale_releases}")
+
+
+def _pause_config(report, records, ranks: int):
+    phase = _instance(ranks)
+    a0 = initial_assignment(phase)
+    ref, _ = _run(phase, a0, None)
+    spec = FaultSpec(pause=((1, 1, 0.5, 6.0),), seed=17)
+    res, dt = _run(phase, a0, spec)
+    _check_invariants(phase, a0, res, f"pause@{ranks}")
+    assert res.fault_stats.paused_deferrals > 0, "pause window never hit"
+    _record(records, "pause", ranks, phase, res, dt, ref=ref)
+    report(f"ccmlb_fault_pause_{ranks}", dt * 1e6,
+           f"deferrals={res.fault_stats.paused_deferrals} "
+           f"quality={_quality(res, phase) / _quality(ref, phase):.3f}x")
+
+
+def _crash_configs(report, records, ranks: int):
+    phase = _instance(ranks)
+    a0 = initial_assignment(phase)
+    ref, _ = _run(phase, a0, None)
+    for tag, spec in (
+            ("crash", FaultSpec(kill=((3, 1, 0.5),), seed=19)),
+            ("crash_lossy", FaultSpec(drop=0.01, kill=((3, 1, 0.5),),
+                                      req_timeout=4.0, seed=23))):
+        res, dt = _run(phase, a0, spec)
+        _check_invariants(phase, a0, res, f"{tag}@{ranks}")
+        assert res.dead_ranks == [3], f"{tag}@{ranks}: wrong dead set"
+        assert res.fault_stats.recovered_tasks > 0, \
+            f"{tag}@{ranks}: nothing migrated off the dead rank"
+        _record(records, tag, ranks, phase, res, dt, ref=ref)
+        report(f"ccmlb_fault_{tag}_{ranks}", dt * 1e6,
+               f"dead={res.dead_ranks} "
+               f"recovered={res.fault_stats.recovered_tasks} "
+               f"reclaimed={res.fault_stats.reclaimed_locks} "
+               f"quality={_quality(res, phase) / _quality(ref, phase):.3f}x")
+
+
+def _bitwise_only(report, records, ranks: int):
+    """The zero-fault bar at scale: no drop sweep (each faulted 256-rank
+    run costs minutes), just fault_free vs inactive-spec bitwise."""
+    phase = _instance(ranks)
+    a0 = initial_assignment(phase)
+    ref, ref_s = _run(phase, a0, None)
+    noop, noop_s = _run(phase, a0, FaultSpec())
+    assert (np.array_equal(noop.assignment, ref.assignment)
+            and noop.transfer_log == ref.transfer_log
+            and noop.max_work == ref.max_work), \
+        f"inactive FaultSpec perturbed the run @{ranks}"
+    _record(records, "fault_free", ranks, phase, ref, ref_s)
+    _record(records, "inactive_spec", ranks, phase, noop, noop_s,
+            bitwise_identical_to_fault_free=True)
+    report(f"ccmlb_fault_ranks_{ranks}_inactive_spec", noop_s * 1e6,
+           "bitwise==fault_free")
+
+
+def run(report, quick: bool = False):
+    records = []
+    for ranks in ((16,) if quick else (16, 64)):
+        _sweep_ranks(report, records, ranks)
+    if not quick:
+        _bitwise_only(report, records, 256)
+    _pause_config(report, records, 16)
+    _crash_configs(report, records, 16 if quick else 64)
+
+    drops = [r for r in records if r["config"].startswith("drop_")
+             and r.get("drop", 1.0) <= 0.01]
+    payload = {
+        "benchmark": "ccmlb_fault",
+        "quick": quick,
+        "numpy": np.__version__,
+        "n_iter": N_ITER,
+        "quality_bar": QUALITY_BAR,
+        "results": records,
+        "inactive_spec_bitwise_ok": all(
+            r.get("bitwise_identical_to_fault_free", True) for r in records),
+        "low_drop_quality_worst": max(
+            r["quality_vs_fault_free"] for r in drops),
+        "low_drop_quality_ok": all(
+            r["quality_vs_fault_free"] <= QUALITY_BAR for r in drops),
+        "max_timeouts": max(r["timeouts"] for r in records),
+        "max_retries_exhausted": max(r["retries_exhausted"] for r in records),
+        "total_recovered_tasks": sum(
+            r.get("recovered_tasks", 0) for r in records),
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    report("ccmlb_fault_json", 0.0, f"written to {JSON_PATH}")
+
+
+def main():
+    quick = "--quick" in sys.argv
+    print("name,us_per_call,derived")
+
+    def report(name, us, derived=""):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    run(report, quick=quick)
+    # CI smoke assertions over the emitted JSON (the invariant gate and
+    # quality bars are asserted in-bench; these pin the headline fields)
+    with open(JSON_PATH) as f:
+        payload = json.load(f)
+    assert payload["inactive_spec_bitwise_ok"]
+    assert payload["low_drop_quality_ok"]
+    assert payload["low_drop_quality_worst"] <= payload["quality_bar"]
+    assert payload["max_timeouts"] > 0          # loss really exercised retry
+    assert payload["total_recovered_tasks"] > 0
+    print("ccmlb_fault_ok,0.0,bitwise+quality+recovery checks passed",
+          flush=True)
+
+
+if __name__ == "__main__":
+    main()

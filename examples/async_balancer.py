@@ -11,13 +11,20 @@ event-loop simulator (core/async_sim.py):
      collide, deadlock-avoidance yields fire, and queued requests drain
      through multi-hop grant chains — while the balancer still converges;
   3. a contended start (half the ranks empty) drives the counters up, and
-     a gossip deadline makes stale information observable.
+     a gossip deadline makes stale information observable;
+  4. seeded faults (message loss, duplication, a rank killed
+     mid-iteration) exercise the hardened protocol: timeouts retry with
+     backoff, duplicate grants/releases are absorbed idempotently, dead
+     ranks' locks are reclaimed and their work migrates to survivors —
+     and the transfer log still replays exactly onto the final
+     assignment.
 
   PYTHONPATH=src python examples/async_balancer.py
 """
 import numpy as np
 
-from repro.core import CCMParams, ccm_lb, ccm_lb_async, random_phase
+from repro.core import (CCMParams, FaultSpec, ccm_lb, ccm_lb_async,
+                        random_phase)
 from repro.core.problem import initial_assignment
 
 
@@ -59,6 +66,33 @@ def main():
                          latency=("uniform", 0.5, 1.5), gossip_timeout=1.0)
     counters("contended+deadline", stale)
     print(f"  -> gossip deliveries dropped as stale: {stale.gossip_dropped}")
+    print()
+
+    print("4) faults: message loss + duplication, then a rank death")
+    lossy = FaultSpec(drop=0.03, dup=0.1, req_timeout=3.0, seed=7)
+    res = ccm_lb_async(phase, a0, params, latency=("uniform", 0.5, 1.5),
+                       fault=lossy, **lb)
+    counters("lossy+dup", res)
+    fs = res.fault_stats
+    print(f"  -> injected: dropped={fs.dropped} duplicated={fs.duplicated};"
+          f" absorbed: timeouts={res.timeouts}"
+          f" retries_exhausted={res.retries_exhausted}"
+          f" stale_grants={fs.stale_grants}"
+          f" stale_releases={fs.stale_releases}"
+          f" wedged_reclaimed={fs.wedged_reclaimed}")
+
+    crash = FaultSpec(kill=((3, 1, 0.5),), seed=9)
+    res = ccm_lb_async(phase, a0, params, latency=("uniform", 0.5, 1.5),
+                       fault=crash, **lb)
+    counters("rank 3 killed @it1", res)
+    replay = a0.copy()
+    for tasks, r_from, r_to in res.transfer_log:
+        replay[np.asarray(tasks, np.int64)] = r_to
+    assert np.array_equal(replay, res.assignment)
+    assert not (res.assignment == 3).any()
+    print(f"  -> dead={res.dead_ranks}"
+          f" recovered_tasks={res.fault_stats.recovered_tasks};"
+          " transfer log replays exactly, no task left on the dead rank")
 
 
 if __name__ == "__main__":

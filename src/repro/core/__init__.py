@@ -1,7 +1,8 @@
 """The paper's primary contribution: the CCM work model and the CCM-LB
 distributed load balancer, plus the MILP certification path (core/milp) and
 the vectorized evaluation engine (core/csr + core/engine)."""
-from repro.core.async_sim import (ccm_lb_async, make_latency,  # noqa: F401
+from repro.core.async_sim import (FaultSpec, FaultStats,  # noqa: F401
+                                  LivelockError, ccm_lb_async, make_latency,
                                   run_ccm_lb)
 from repro.core.ccm import CCMState, ExchangeEval, exchange_eval  # noqa: F401
 from repro.core.ccmlb import CCMLBResult, ProtocolStats, ccm_lb  # noqa: F401

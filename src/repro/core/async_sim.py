@@ -44,6 +44,16 @@ Event <-> paper mapping (§IV, Fig. 1)
                 requester is granted next — consecutive handoffs on one
                 target form a *grant chain* (lengths are accounted in
                 ``ProtocolStats`` / ``CCMLBResult.max_grant_chain``).
+  ``TIMEOUT``   fault-hardening only (local timer at the requester): a
+                lock request unanswered for ``FaultSpec.req_timeout`` is
+                aborted (a RELEASE closes whatever state it reached) and
+                retried with exponential backoff, bounded by
+                ``max_retries``.  Never scheduled on a fault-free run.
+  ``FAIL``      a ``FaultSpec.kill`` firing: the rank dies mid-iteration.
+                Its queued requests are purged, locks it held are
+                force-released (granting to the next live requester), its
+                own lock table is reclaimed, and after the stage the
+                survivor set is warm-started (see "Fault injection").
 
 Determinism and the zero-latency parity bar
 -------------------------------------------
@@ -53,8 +63,8 @@ deterministically in creation order, and message events (class 0) always
 precede local DECIDE timers (class 1) at the same timestamp.  Latency
 draws come from a dedicated seeded stream, gossip peer picks from the
 same per-iteration stream the synchronous driver uses — the whole run is
-a pure function of ``(phase, params, seed, latency, ...)`` (determinism
-asserted in tests/test_async_protocol.py).
+a pure function of ``(phase, params, seed, latency, fault, ...)``
+(determinism asserted in tests/test_async_protocol.py).
 
 With zero latency this schedule *serializes*: a DECIDE's entire
 REQ→GRANT→transfer→RELEASE cascade lands at the same timestamp and class
@@ -66,6 +76,44 @@ tests/test_async_sim.py and benchmarks/ccmlb_async.py).  Under nonzero
 latency the interleaving is arbitrary-but-seeded; safety and liveness
 invariants are property-tested in tests/test_async_protocol.py.
 
+Fault injection
+---------------
+``ccm_lb_async(fault=FaultSpec(...))`` degrades the network and the
+ranks themselves, seeded and per-link:
+
+  * ``drop`` / ``dup`` / ``reorder`` — per-message probabilities (float,
+    ``{(src, dst): p}`` dict, or ``fn(src, dst) -> p``) applied to every
+    network send, gossip included; a reordered or duplicated copy is
+    delayed by an extra Exp(``reorder_scale``) draw;
+  * ``pause`` — ``(rank, iteration, start, end)`` windows (sim-time
+    relative to that iteration's stage-2 start) during which every event
+    addressed to the rank is deferred to the window's end;
+  * ``kill`` — ``(rank, iteration, offset)``: the rank dies at stage-2
+    start + offset and stays dead (messages to it vanish, messages it
+    sent before dying still deliver).
+
+The protocol survives by construction, not by luck: every LOCK_REQ
+carries a unique ``req_id`` token that travels REQ→GRANT→RELEASE, making
+duplicate requests, stale grants and stale releases token-checked no-ops
+(repro/core/locks.py); unanswered requests time out, abort and retry
+with bounded exponential backoff; locks wedged by dropped RELEASEs are
+reclaimed at the stage-end barrier (safe: an open request always keeps a
+TIMEOUT queued, so an empty heap means no live requester is waiting);
+dead ranks' lock state is reclaimed at death and the survivor set is
+re-warm-started through ``repro.core.pipeline.warm_start_assignment``
+over ``repro.runtime.elastic.survivor_resize``'s renumbering — the same
+elastic-resize framing a mesh shrink uses.  Killing every rank raises
+:class:`repro.runtime.fault.RankDeath` (a ``NodeFailure``), handing the
+problem to the checkpoint-restart layer where it belongs.
+
+The parity bar under faults: a ``fault=None`` or all-inactive
+``FaultSpec`` run is BITWISE-identical to the fault-free driver (no
+extra events, no extra rng draws, same trace); an active fault changes
+trajectories but never invariants — at most one live lock per rank,
+transfers only under mutual exclusion and never to/from dead ranks,
+transfer-log replay == final assignment, quiescent termination
+(tests/test_async_protocol.py).
+
 Differences from the synchronous driver, by design:
 
   * a requester whose LOCK_REQ is queued WAITS for the eventual grant
@@ -73,16 +121,18 @@ Differences from the synchronous driver, by design:
     an immediate boolean answer, a message protocol does not);
   * a yield re-queues the attempt at most ``max_retries`` times, bounding
     total work (the sync loop re-queues unboundedly; its yield branch is
-    unreachable so termination never depended on it);
+    unreachable so termination never depended on it).  Work items dropped
+    at the cap are counted in ``retries_exhausted`` — never silently;
   * ``batch_lock_events`` stays a synchronous-driver knob: deferred
     disjoint-event scoring relies on the turn order being independent of
     scoring outcomes, which no longer holds once grants interleave.
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
-from collections import deque
-from typing import Callable, Dict, List, Optional
+import itertools
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
@@ -91,19 +141,183 @@ from repro.core.ccmlb import (CCMLBResult, ProtocolStats, build_work_lists,
                               ccm_lb, execute_transfer, iteration_summaries,
                               lock_release, lock_request, note_yield)
 from repro.core.engine import PhaseEngine
-from repro.core.gossip import gossip_deliver, pick_peers
+from repro.core.gossip import gossip_deliver, gossip_seed, pick_peers
 from repro.core.locks import LockManager
+from repro.core.pipeline import warm_start_assignment
 from repro.core.problem import CCMParams, Phase
+from repro.runtime.elastic import survivor_resize
+from repro.runtime.fault import RankDeath
 
-__all__ = ["ccm_lb_async", "run_ccm_lb", "make_latency", "EVENT_KINDS"]
+__all__ = ["ccm_lb_async", "run_ccm_lb", "make_latency", "EVENT_KINDS",
+           "FaultSpec", "FaultStats", "LivelockError"]
 
-# event kinds (values appear in traces; names in EVENT_KINDS)
-GOSSIP, LOCK_REQ, GRANT, RELEASE, DECIDE = range(5)
-EVENT_KINDS = ("GOSSIP", "LOCK_REQ", "GRANT", "RELEASE", "DECIDE")
+# event kinds (values appear in traces; names in EVENT_KINDS).  TIMEOUT
+# and FAIL only ever fire under an active FaultSpec — the first five
+# values are pinned so fault-free traces stay bitwise-comparable across
+# versions.
+GOSSIP, LOCK_REQ, GRANT, RELEASE, DECIDE, TIMEOUT, FAIL = range(7)
+EVENT_KINDS = ("GOSSIP", "LOCK_REQ", "GRANT", "RELEASE", "DECIDE",
+               "TIMEOUT", "FAIL")
 
 # priority classes: messages always beat same-time local DECIDE timers —
 # this is what serializes the zero-latency schedule into sync turn order
 _MSG, _LOCAL = 0, 1
+
+
+class LivelockError(RuntimeError):
+    """The event budget ran out before the protocol drained.
+
+    Structured so fault sweeps can report WHY a config livelocked instead
+    of losing all accumulated accounting: ``processed`` / ``queued`` /
+    ``sim_time`` are set at raise time inside the event loop;
+    :func:`ccm_lb_async` enriches the in-flight exception with the
+    partial ``stats`` (:class:`~repro.core.ccmlb.ProtocolStats`),
+    ``fault_stats`` and the ``iteration`` it died in before re-raising.
+    Subclasses ``RuntimeError`` with "events" in the message, so guards
+    written against the old bare error keep matching.
+    """
+
+    def __init__(self, max_events: int, processed: int, queued: int,
+                 sim_time: float):
+        super().__init__(
+            f"async sim exceeded {max_events} events — protocol liveness "
+            f"bug or fault storm ({processed} processed, {queued} still "
+            f"queued at sim time {sim_time:.3f})")
+        self.max_events = max_events
+        self.processed = processed
+        self.queued = queued
+        self.sim_time = sim_time
+        self.stats: Optional[ProtocolStats] = None
+        self.fault_stats: Optional["FaultStats"] = None
+        self.iteration: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Seeded fault model for the async driver (see module docstring).
+
+    ``drop`` / ``dup`` / ``reorder`` accept a float probability, a
+    per-link ``{(src, dst): p}`` dict (unlisted links are fault-free), or
+    a callable ``(src, dst) -> p``.  ``pause`` entries are ``(rank,
+    iteration, start, end)``, ``kill`` entries ``(rank, iteration,
+    offset)`` — times in sim-time units relative to that iteration's
+    stage-2 start.  ``req_timeout`` is the base lock-request timeout,
+    multiplied by ``backoff ** attempt`` on each retry.  All fault
+    randomness comes from a dedicated stream keyed on ``seed`` — a run
+    with an inactive spec (everything zero/empty) draws nothing from it
+    and is bitwise-identical to ``fault=None``.
+    """
+
+    drop: object = 0.0
+    dup: object = 0.0
+    reorder: object = 0.0
+    reorder_scale: float = 1.0
+    pause: tuple = ()
+    kill: tuple = ()
+    req_timeout: float = 4.0
+    backoff: float = 2.0
+    seed: int = 0
+
+    def active(self) -> bool:
+        def nonzero(p):
+            if callable(p):
+                return True
+            if isinstance(p, dict):
+                return any(float(v) != 0.0 for v in p.values())
+            return float(p) != 0.0
+        return (nonzero(self.drop) or nonzero(self.dup)
+                or nonzero(self.reorder) or bool(self.pause)
+                or bool(self.kill))
+
+    def validate(self, n_ranks: int, n_iter: int) -> None:
+        for name in ("drop", "dup", "reorder"):
+            p = getattr(self, name)
+            if callable(p):
+                continue
+            vals = p.values() if isinstance(p, dict) else [p]
+            for v in vals:
+                if not 0.0 <= float(v) <= 1.0:
+                    raise ValueError(f"{name} probability {v!r} not in "
+                                     "[0, 1]")
+        if self.reorder_scale < 0:
+            raise ValueError("reorder_scale must be >= 0")
+        if self.req_timeout <= 0:
+            raise ValueError("req_timeout must be > 0")
+        if self.backoff < 1.0:
+            raise ValueError("backoff must be >= 1")
+        for entry in self.pause:
+            r, it, start, end = entry
+            if not (0 <= r < n_ranks and 0 <= it < n_iter
+                    and 0 <= start <= end):
+                raise ValueError(f"bad pause entry {entry!r}")
+        for entry in self.kill:
+            r, it, off = entry
+            if not (0 <= r < n_ranks and 0 <= it < n_iter and off >= 0):
+                raise ValueError(f"bad kill entry {entry!r}")
+
+
+@dataclasses.dataclass
+class FaultStats:
+    """What the injector did and how the hardened protocol absorbed it."""
+
+    # injector side
+    dropped: int = 0            # messages destroyed in flight
+    duplicated: int = 0         # extra delayed copies injected
+    reordered: int = 0          # messages given an extra delay
+    dead_dropped: int = 0       # messages addressed to a dead rank
+    paused_deferrals: int = 0   # deliveries deferred past a pause window
+    killed: int = 0             # ranks killed
+    # protocol side (each counter is one hardening mechanism firing)
+    dup_requests: int = 0       # duplicate LOCK_REQ deliveries ignored
+    regrants: int = 0           # GRANT retransmitted on a duplicate REQ
+    stale_grants: int = 0       # grants for aborted/consumed requests
+    stale_releases: int = 0     # releases whose grant epoch already closed
+    aborted_dequeues: int = 0   # timed-out requests removed from a queue
+    purged_requests: int = 0    # dead ranks' requests purged/refused
+    reclaimed_locks: int = 0    # lock-table entries freed at rank death
+    wedged_reclaimed: int = 0   # stage-end reclaims of wedged locks
+    dead_peer_skips: int = 0    # decisions/transfers skipped on dead peers
+    recovered_tasks: int = 0    # tasks migrated off dead ranks at recovery
+
+
+class _FaultCtx:
+    """Live fault-injection state threaded through one async run."""
+
+    def __init__(self, spec: FaultSpec, n_ranks: int):
+        self.spec = spec
+        # dedicated stream: fault draws must never perturb the latency
+        # stream, or an inactive spec would change fault-free trajectories
+        self.rng = np.random.default_rng([int(spec.seed), 0xFA01])
+        self.stats = FaultStats()
+        self.dead: Set[int] = set()
+        self.recovered: Set[int] = set()
+        self.n_ranks = n_ranks
+        self._pauses: Dict[int, list] = {}
+
+    def register_iteration(self, it: int, sim: "_Sim") -> None:
+        """Anchor this iteration's pause windows and kill timers at the
+        current sim time (= this iteration's stage-2 start)."""
+        t0 = sim.now
+        for r, kit, start, end in self.spec.pause:
+            if kit == it:
+                self._pauses.setdefault(int(r), []).append(
+                    (t0 + float(start), t0 + float(end)))
+        for r, kit, off in self.spec.kill:
+            if kit == it:
+                sim.push(t0 + float(off), _MSG, FAIL, int(r), int(r))
+
+    def pause_until(self, rank: int, time: float) -> Optional[float]:
+        for s, e in self._pauses.get(rank, ()):
+            if s <= time < e:
+                return e
+        return None
+
+    def prob(self, p, src: int, dst: int) -> float:
+        if callable(p):
+            return float(p(src, dst))
+        if isinstance(p, dict):
+            return float(p.get((src, dst), 0.0))
+        return float(p)
 
 
 def make_latency(spec) -> Callable:
@@ -146,10 +360,19 @@ class _Sim:
     tolerate this, and the protocol must stay safe under any such
     interleaving (the property suite's job).  Only constant latency gives
     per-link FIFO delivery (equal delays + ``(time, class, seq)``
-    tie-break in send order)."""
+    tie-break in send order).
+
+    ``fault`` (a :class:`_FaultCtx`, or None) makes the network lossy:
+    sends may be dropped, duplicated or extra-delayed; pops addressed to
+    a dead rank vanish, pops addressed to a paused rank are re-queued at
+    the pause's end — both signalled to the caller by ``pop`` returning
+    ``None`` (nothing was delivered: not counted, not traced, no handler
+    runs).  ``FAIL`` events are exempt from both gates (death fires even
+    while paused, and a dead rank's FAIL is handled idempotently).
+    """
 
     def __init__(self, latency_fn, rng, max_events: int,
-                 trace: Optional[list]):
+                 trace: Optional[list], fault: Optional[_FaultCtx] = None):
         self.heap: list = []
         self.seq = 0
         self.now = 0.0
@@ -159,6 +382,7 @@ class _Sim:
         self.latency = latency_fn
         self.rng = rng
         self.trace = trace
+        self.fault = fault
 
     def push(self, time: float, klass: int, kind: int, src: int, dst: int,
              data=None) -> None:
@@ -167,18 +391,51 @@ class _Sim:
         self.seq += 1
 
     def send(self, kind: int, src: int, dst: int, data=None) -> None:
-        """Network send: delivery at now + one seeded latency draw."""
-        self.push(self.now + self.latency(self.rng, src, dst), _MSG, kind,
-                  src, dst, data)
+        """Network send: delivery at now + one seeded latency draw.  With
+        an active fault context the message additionally runs the
+        drop → reorder → dup gauntlet (fixed draw order from the
+        dedicated fault stream, so runs stay deterministic)."""
+        delay = self.latency(self.rng, src, dst)
+        f = self.fault
+        if f is not None:
+            sp = f.spec
+            if f.rng.random() < f.prob(sp.drop, src, dst):
+                f.stats.dropped += 1
+                return
+            extra = 0.0
+            if f.rng.random() < f.prob(sp.reorder, src, dst):
+                extra = float(f.rng.exponential(sp.reorder_scale))
+                f.stats.reordered += 1
+            if f.rng.random() < f.prob(sp.dup, src, dst):
+                f.stats.duplicated += 1
+                self.push(self.now + delay
+                          + float(f.rng.exponential(sp.reorder_scale)),
+                          _MSG, kind, src, dst, data)
+        else:
+            extra = 0.0
+        self.push(self.now + delay + extra, _MSG, kind, src, dst, data)
 
     def pop(self):
+        """Deliver the next event, or return ``None`` when the fault
+        gates swallowed it (dead destination) or deferred it (pause)."""
         time, klass, seq, kind, src, dst, data = heapq.heappop(self.heap)
         self.now = time
         self.processed += 1
         if self.processed > self.max_events:
-            raise RuntimeError(
-                f"async sim exceeded {self.max_events} events — "
-                "protocol liveness bug (a message loop that never drains)")
+            raise LivelockError(self.max_events, self.processed,
+                                len(self.heap), self.now)
+        f = self.fault
+        if f is not None and kind != FAIL:
+            if dst in f.dead:
+                if klass == _MSG:
+                    f.stats.dead_dropped += 1
+                return None
+            until = f.pause_until(dst, time)
+            if until is not None:
+                f.stats.paused_deferrals += 1
+                heapq.heappush(self.heap,
+                               (until, klass, seq, kind, src, dst, data))
+                return None
         if klass == _MSG:
             self.messages += 1
         if self.trace is not None:
@@ -187,7 +444,8 @@ class _Sim:
 
 
 def _run_gossip(sim: _Sim, summaries, info, *, k_rounds: int, fanout: int,
-                seed: int, deadline: Optional[float]) -> int:
+                seed, deadline: Optional[float],
+                dead: frozenset = frozenset()) -> int:
     """Stage 1a: the augmented-inform epidemic as latency-delayed messages.
 
     Same message set, rng stream and merge/dedupe rule as the synchronous
@@ -196,20 +454,28 @@ def _run_gossip(sim: _Sim, summaries, info, *, k_rounds: int, fanout: int,
     ``info`` maps are identical.  Nonzero latency permutes delivery (and
     therefore the forward peer picks); a ``deadline`` drops deliveries
     that arrive too late to inform this iteration's scoring — stale
-    gossip made observable.  Returns the number of dropped deliveries.
+    gossip made observable.  ``dead`` ranks neither seed, forward, nor
+    receive (their deliveries vanish at the pop gate), so no dead rank's
+    summary ever enters a live work list.  Returns the number of
+    deadline-dropped deliveries.
     """
     n = len(summaries)
     rng = np.random.default_rng(seed)
     dropped = 0
     if k_rounds >= 1:
         for r in range(n):
-            peers = pick_peers(rng, n, r, fanout, visited={r})
+            if r in dead:
+                continue
+            peers = pick_peers(rng, n, r, fanout, visited={r} | set(dead))
             snap = dict(info[r])        # shared: payloads are read-only
             for p in peers:
                 sim.send(GOSSIP, r, int(p),
                          (1, frozenset([r]) | {int(p)}, snap))
     while sim.heap:
-        time, kind, src, dst, data = sim.pop()
+        ev = sim.pop()
+        if ev is None:
+            continue
+        time, kind, src, dst, data = ev
         assert kind == GOSSIP
         rnd, visited, payload = data
         if deadline is not None and time > deadline:
@@ -218,7 +484,8 @@ def _run_gossip(sim: _Sim, summaries, info, *, k_rounds: int, fanout: int,
         if not gossip_deliver(info[dst], payload):
             continue
         if rnd < k_rounds:
-            peers = pick_peers(rng, n, dst, fanout, visited=set(visited))
+            peers = pick_peers(rng, n, dst, fanout,
+                               visited=set(visited) | set(dead))
             snap = dict(info[dst])
             for p in peers:
                 sim.send(GOSSIP, dst, int(p),
@@ -229,44 +496,108 @@ def _run_gossip(sim: _Sim, summaries, info, *, k_rounds: int, fanout: int,
 def _run_stage2(sim: _Sim, phase, state, clusters, work_lists, engine,
                 locks: LockManager, stats: ProtocolStats, *,
                 max_candidates: int, max_clusters_per_rank,
-                max_retries: int, on_event) -> None:
+                max_retries: int, on_event,
+                fault: Optional[_FaultCtx] = None) -> None:
     """Stage 2: the lock/transfer protocol as mailbox events (see the
-    module docstring for the event <-> Fig. 1 mapping)."""
+    module docstring for the event <-> Fig. 1 mapping, and the "Fault
+    injection" section for the TIMEOUT/FAIL hardening paths — none of
+    which schedules an event or draws randomness when ``fault`` is
+    None, keeping fault-free runs bitwise-identical)."""
     n = phase.num_ranks
-    waiting = [False] * n        # sent LOCK_REQ, grant not yet received
-    attempt: List[Optional[tuple]] = [None] * n   # (diff, p) in flight
+    f = fault
+    # open_req[r] = (req_id, diff, p): the single in-flight lock request
+    # of rank r (a rank never has two — DECIDEs are only scheduled when
+    # the slot clears)
+    open_req: List[Optional[Tuple[int, float, int]]] = [None] * n
     retries: List[Dict[int, int]] = [dict() for _ in range(n)]
+    req_ids = itertools.count()     # grant tokens, unique per stage
+    # per-target sets of request tokens already seen (duplicate-REQ
+    # idempotence; only consulted under an active fault)
+    seen_req: List[Set[int]] = [set() for _ in range(n)]
     spins = 0
     max_spins = 50 * n + 1000    # mirrors the sync driver's turn cap
 
     for r in range(n):
-        if work_lists[r]:
+        if work_lists[r] and (f is None or r not in f.dead):
             sim.push(sim.now, _LOCAL, DECIDE, r, r)
 
     while sim.heap:
-        time, kind, src, dst, data = sim.pop()
+        ev = sim.pop()
+        if ev is None:
+            continue
+        time, kind, src, dst, data = ev
         if kind == DECIDE:
             r = dst
-            assert not waiting[r], f"rank {r} decided while awaiting a grant"
+            if f is None:
+                assert open_req[r] is None, \
+                    f"rank {r} decided while awaiting a grant"
+            elif open_req[r] is not None:
+                # a deferred DECIDE can land after a retry re-opened a
+                # request; deciding is idempotent — skip
+                continue
             if spins >= max_spins or not work_lists[r]:
                 continue
             spins += 1
             diff, p = work_lists[r].popleft()
-            waiting[r] = True
-            attempt[r] = (diff, p)
-            sim.send(LOCK_REQ, r, p)
+            if f is not None and p in f.dead:
+                f.stats.dead_peer_skips += 1
+                if work_lists[r]:
+                    sim.push(sim.now, _LOCAL, DECIDE, r, r)
+                continue
+            rid = next(req_ids)
+            open_req[r] = (rid, diff, p)
+            sim.send(LOCK_REQ, r, p, rid)
+            if f is not None:
+                # the request might never be answered on a lossy network;
+                # arm the abort timer (exponential backoff per retry)
+                wait = (f.spec.req_timeout
+                        * f.spec.backoff ** retries[r].get(p, 0))
+                sim.push(sim.now + wait, _LOCAL, TIMEOUT, r, r,
+                         (rid, diff, p))
         elif kind == LOCK_REQ:
             r, p = src, dst
-            if lock_request(locks, stats, r, p):
-                sim.send(GRANT, p, r)
+            rid = data
+            if f is not None:
+                if r in f.dead:
+                    # sent before the requester died — a dead rank must
+                    # never be granted a lock
+                    f.stats.purged_requests += 1
+                    continue
+                if rid in seen_req[p]:
+                    f.stats.dup_requests += 1
+                    if locks.holds_grant(r, p, rid):
+                        # the original GRANT may have been dropped —
+                        # retransmit (idempotent at the requester)
+                        f.stats.regrants += 1
+                        sim.send(GRANT, p, r, rid)
+                    continue
+                seen_req[p].add(rid)
+            if lock_request(locks, stats, r, p, rid):
+                sim.send(GRANT, p, r, rid)
             # else: queued FIFO at p — the grant arrives on a release
         elif kind == GRANT:
             p, r = src, dst
-            assert waiting[r], f"rank {r} granted without an open request"
-            waiting[r] = False
-            diff, p_req = attempt[r]
-            attempt[r] = None
-            assert p_req == p
+            rid = data
+            if f is None:
+                assert open_req[r] is not None, \
+                    f"rank {r} granted without an open request"
+            elif open_req[r] is None or open_req[r][0] != rid:
+                # the request was aborted by its timeout, or this is a
+                # duplicate of an already-consumed grant — hand the lock
+                # straight back (token-checked no-op if it, too, is stale)
+                f.stats.stale_grants += 1
+                sim.send(RELEASE, r, p, rid)
+                continue
+            rid2, diff, p_req = open_req[r]
+            open_req[r] = None
+            assert p_req == p and rid2 == rid
+            if f is not None and p in f.dead:
+                # target died after granting; its lock table died with it
+                # — nothing to use, nothing to release
+                f.stats.dead_peer_skips += 1
+                if work_lists[r]:
+                    sim.push(sim.now, _LOCAL, DECIDE, r, r)
+                continue
             if locks.must_yield(r, p):
                 # Fig. 1 line 45: release unused, retry later (bounded —
                 # unlike the sync driver's unbounded re-queue, so a yield
@@ -276,28 +607,154 @@ def _run_stage2(sim: _Sim, phase, state, clusters, work_lists, engine,
                 if cnt < max_retries:
                     retries[r][p] = cnt + 1
                     work_lists[r].append((diff, p))
+                else:
+                    stats.retries_exhausted += 1
             else:
-                # mutation under mutual exclusion: r must be p's holder of
-                # record for the whole (instantaneous) evaluation
-                assert locks.locked_by[p] == r
+                # mutation under mutual exclusion: r must hold p's lock
+                # under exactly this grant token for the whole
+                # (instantaneous) evaluation
+                assert locks.holds_grant(r, p, rid)
                 execute_transfer(state, clusters, engine, stats, r, p,
                                  max_candidates, max_clusters_per_rank)
-            sim.send(RELEASE, r, p)
+            sim.send(RELEASE, r, p, rid)
             if work_lists[r]:
                 sim.push(sim.now, _LOCAL, DECIDE, r, r)
         elif kind == RELEASE:
             r, p = src, dst
-            nxt = lock_release(locks, stats, r, p)
-            if nxt is not None:
-                sim.send(GRANT, p, nxt)
+            rid = data
+            if f is None:
+                nxt = lock_release(locks, stats, r, p)
+                if nxt is not None:
+                    sim.send(GRANT, p, nxt, locks.grant_id[p])
+            elif locks.holds_grant(r, p, rid):
+                nxt = lock_release(locks, stats, r, p)
+                while nxt is not None and nxt in f.dead:
+                    # defensive: dead requesters are purged at death and
+                    # their late REQs refused, so the queue should never
+                    # surface one — but never hand a dead rank a lock
+                    f.stats.purged_requests += 1
+                    nxt = lock_release(locks, stats, nxt, p)
+                if nxt is not None:
+                    sim.send(GRANT, p, nxt, locks.grant_id[p])
+            elif locks.dequeue(r, p, rid):
+                # a timed-out request aborted while still queued
+                f.stats.aborted_dequeues += 1
+            else:
+                # duplicate of a consumed release, or abort of a REQ
+                # that never arrived — token mismatch makes it a no-op
+                f.stats.stale_releases += 1
+        elif kind == TIMEOUT:
+            r = dst
+            rid, diff, p = data
+            if open_req[r] is None or open_req[r][0] != rid:
+                continue        # answered (or aborted) before the timer
+            stats.timeouts += 1
+            open_req[r] = None
+            # abort: frees the grant if it was granted (GRANT lost),
+            # dequeues if still queued, no-ops if the REQ itself was lost
+            sim.send(RELEASE, r, p, rid)
+            cnt = retries[r].get(p, 0)
+            if cnt < max_retries:
+                retries[r][p] = cnt + 1
+                work_lists[r].append((diff, p))
+            else:
+                stats.retries_exhausted += 1
+            if work_lists[r]:
+                sim.push(sim.now, _LOCAL, DECIDE, r, r)
+        elif kind == FAIL:
+            assert f is not None, "FAIL event without a fault context"
+            d = dst
+            if d in f.dead:
+                continue        # duplicate kill entry — already dead
+            f.dead.add(d)
+            f.stats.killed += 1
+            # a dead rank must never be granted a lock it can't release
+            f.stats.purged_requests += locks.purge_requester(d)
+            # locks d held on others would wedge them forever — force-
+            # release, handing each to its next live queued requester
+            for t in locks.held_by(d):
+                nxt = lock_release(locks, stats, d, t)
+                while nxt is not None and nxt in f.dead:
+                    f.stats.purged_requests += 1
+                    nxt = lock_release(locks, stats, nxt, t)
+                if nxt is not None:
+                    sim.send(GRANT, t, nxt, locks.grant_id[t])
+            # d's own lock table (holder of record, queue) dies with it
+            f.stats.reclaimed_locks += locks.reclaim(d)
+            open_req[d] = None
+            work_lists[d].clear()
+            if len(f.dead) >= n:
+                raise RankDeath("all ranks dead — no survivor set left "
+                                "to balance; restart from checkpoint")
         else:  # pragma: no cover - defensive
             raise AssertionError(f"unknown event kind {kind}")
         if on_event is not None:
             on_event(time, kind, src, dst, locks, state)
 
     # liveness at termination: every request answered, every lock released
-    assert not any(waiting), "rank still awaiting a grant at termination"
-    assert locks.quiescent(), "locks/queues not drained at termination"
+    if f is None:
+        assert not any(o is not None for o in open_req), \
+            "rank still awaiting a grant at termination"
+        assert locks.quiescent(), "locks/queues not drained at termination"
+    else:
+        # an open request always keeps a TIMEOUT queued, so an empty heap
+        # proves no live rank is still waiting...
+        assert all(o is None for o in open_req), \
+            "open request at stage end despite timeout timers"
+        # ...which makes anything still held or queued a wedge left by a
+        # dropped RELEASE (or an un-dequeued abort) — reclaim at the
+        # barrier, where no requester can race us
+        for t in range(n):
+            if locks.locked_by[t] is not None or locks.queue[t]:
+                f.stats.wedged_reclaimed += locks.reclaim(t)
+        assert locks.quiescent(), \
+            "locks/queues not drained after stage-end reclamation"
+
+
+def _recover_survivors(phase, state: CCMState, f: _FaultCtx,
+                       recovery_log: list) -> None:
+    """Post-crash warm start of the survivor set (elastic resize framing).
+
+    The survivor set is renumbered contiguously (``survivor_resize``),
+    the current assignment is mapped through it — dead ranks land OUT of
+    the survivor range — and ``warm_start_assignment`` re-places exactly
+    the stranded tasks via its rank clipping while every surviving task
+    keeps its rank.  Migrations are applied through
+    ``state.apply_transfer`` in the ORIGINAL rank numbering, so they flow
+    through the transfer listener like protocol transfers and the
+    transfer-log replay invariant keeps covering crash recovery.
+    """
+    newly = sorted(f.dead - f.recovered)
+    if not newly:
+        return
+    rs = survivor_resize(phase.num_ranks, f.dead)
+    o2n = rs.old_to_new
+    # the restricted phase only needs valid rank-indexed arrays; only the
+    # round_robin fallback below ever reads it, and that reads none of
+    # the block/comm structure
+    bh = (np.minimum(o2n[phase.block_home], rs.n_new - 1)
+          if phase.num_blocks > 0 else phase.block_home)
+    surv_phase = Phase(
+        task_load=phase.task_load, task_mem=phase.task_mem,
+        task_overhead=phase.task_overhead, task_block=phase.task_block,
+        block_size=phase.block_size, block_home=bh,
+        comm_src=phase.comm_src, comm_dst=phase.comm_dst,
+        comm_vol=phase.comm_vol,
+        rank_mem_base=phase.rank_mem_base[rs.survivors],
+        rank_mem_cap=phase.rank_mem_cap[rs.survivors],
+        rank_speed=phase.rank_speed[rs.survivors])
+    prev = o2n[state.assignment]            # dead ranks -> out of range
+    warm, _ = warm_start_assignment(phase, prev, surv_phase,
+                                    mode="round_robin")
+    target = rs.survivors[warm]             # back to original numbering
+    for d in newly:
+        stranded = np.nonzero(state.assignment == d)[0]
+        for s in np.unique(target[stranded]):
+            tasks = stranded[target[stranded] == s]
+            state.apply_transfer(tasks, d, int(s))
+            recovery_log.append((tuple(int(x) for x in tasks), d, int(s)))
+            f.stats.recovered_tasks += int(tasks.size)
+    f.recovered |= set(newly)
 
 
 def ccm_lb_async(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
@@ -310,7 +767,8 @@ def ccm_lb_async(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
                  incremental: bool = True, csr=None,
                  collect_trace: bool = False,
                  max_events: Optional[int] = None,
-                 on_event=None) -> CCMLBResult:
+                 on_event=None,
+                 fault: Optional[FaultSpec] = None) -> CCMLBResult:
     """CCM-LB through the asynchronous event-loop driver.
 
     Same optimization knobs as :func:`repro.core.ccmlb.ccm_lb` (engine /
@@ -322,24 +780,39 @@ def ccm_lb_async(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
     ``gossip_timeout``  per-iteration gossip deadline in sim-time units;
                         deliveries past it are dropped (stale).  ``None``
                         drains the epidemic fully.
-    ``max_retries``     per-(rank, peer) bound on yield re-queues.
+    ``max_retries``     per-(rank, peer) bound on yield/timeout re-queues;
+                        items dropped at the cap are counted in
+                        ``retries_exhausted``.
     ``collect_trace``   record the ``(time, seq, kind, src, dst)`` event
                         trace into ``CCMLBResult.events``.
     ``on_event``        optional hook ``(time, kind, src, dst, locks,
                         state)`` called after every stage-2 event — the
                         protocol-safety suite's invariant probe.
+    ``fault``           a :class:`FaultSpec` degrading the network and
+                        the ranks (module docstring, "Fault injection").
+                        ``None`` or an inactive spec is bitwise-identical
+                        to the fault-free driver.  Killing every rank
+                        raises :class:`repro.runtime.fault.RankDeath`;
+                        exceeding the event budget raises
+                        :class:`LivelockError` carrying partial stats.
 
     Iterations stay globally synchronized (the paper's outer loop);
     asynchrony lives inside each iteration's gossip and lock/transfer
     stages.  ``CCMLBResult.lock_conflicts`` / ``yields`` /
     ``grant_chains`` / ``max_grant_chain`` are meaningful here, and
     ``transfer_log`` replays onto the initial assignment to the returned
-    one exactly.
+    one exactly — crash-recovery migrations included (they are also
+    listed separately in ``recovery_log``).
     """
+    f: Optional[_FaultCtx] = None
+    if fault is not None and fault.active():
+        fault.validate(phase.num_ranks, n_iter)
+        f = _FaultCtx(fault, phase.num_ranks)
     state = CCMState.build(phase, assignment, params, csr=csr)
     engine = (PhaseEngine(state, backend=backend, incremental=incremental)
               if use_engine else None)
     transfer_log: list = []
+    recovery_log: list = []
     state.add_transfer_listener(
         lambda t, a, b: transfer_log.append(
             (tuple(int(x) for x in t), int(a), int(b))))
@@ -352,8 +825,12 @@ def ccm_lb_async(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
         max_events = 8 * n_iter * (
             4 * (50 * phase.num_ranks + 1000)
             + phase.num_ranks * max(fanout, 1) ** max(k_rounds, 1))
+        if f is not None:
+            # timeout aborts, retries, duplicates and pause re-deliveries
+            # legitimately need more than the polite-network budget
+            max_events *= 4
     trace: Optional[list] = [] if collect_trace else None
-    sim = _Sim(latency_fn, rng_lat, max_events, trace)
+    sim = _Sim(latency_fn, rng_lat, max_events, trace, fault=f)
     stats = ProtocolStats()
     gossip_dropped = 0
 
@@ -361,25 +838,41 @@ def ccm_lb_async(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
     trace_tot = [state.total_work()]
     trace_imb = [state.imbalance()]
 
-    for it in range(n_iter):
-        clusters, summaries = iteration_summaries(state, phase,
-                                                  max_clusters_per_rank)
-        info = {r: {r: summaries[r]} for r in range(phase.num_ranks)}
-        deadline = (None if gossip_timeout is None
-                    else sim.now + gossip_timeout)
-        gossip_dropped += _run_gossip(
-            sim, summaries, info, k_rounds=k_rounds, fanout=fanout,
-            seed=seed * 1000 + it, deadline=deadline)
-        work_lists = build_work_lists(phase, summaries, info, params, engine)
-        locks = LockManager(phase.num_ranks)
-        _run_stage2(sim, phase, state, clusters, work_lists, engine, locks,
-                    stats, max_candidates=max_candidates,
-                    max_clusters_per_rank=max_clusters_per_rank,
-                    max_retries=max_retries, on_event=on_event)
+    it = 0
+    try:
+        for it in range(n_iter):
+            clusters, summaries = iteration_summaries(state, phase,
+                                                      max_clusters_per_rank)
+            info = {r: {r: summaries[r]} for r in range(phase.num_ranks)}
+            deadline = (None if gossip_timeout is None
+                        else sim.now + gossip_timeout)
+            dead_now = frozenset(f.dead) if f is not None else frozenset()
+            gossip_dropped += _run_gossip(
+                sim, summaries, info, k_rounds=k_rounds, fanout=fanout,
+                seed=gossip_seed(seed, it), deadline=deadline,
+                dead=dead_now)
+            work_lists = build_work_lists(phase, summaries, info, params,
+                                          engine)
+            locks = LockManager(phase.num_ranks)
+            if f is not None:
+                f.register_iteration(it, sim)
+            _run_stage2(sim, phase, state, clusters, work_lists, engine,
+                        locks, stats, max_candidates=max_candidates,
+                        max_clusters_per_rank=max_clusters_per_rank,
+                        max_retries=max_retries, on_event=on_event,
+                        fault=f)
+            if f is not None and f.dead - f.recovered:
+                _recover_survivors(phase, state, f, recovery_log)
 
-        trace_max.append(state.max_work())
-        trace_tot.append(state.total_work())
-        trace_imb.append(state.imbalance())
+            trace_max.append(state.max_work())
+            trace_tot.append(state.total_work())
+            trace_imb.append(state.imbalance())
+    except LivelockError as e:
+        # attach the partial accounting so sweeps can report WHY
+        e.stats = stats
+        e.fault_stats = f.stats if f is not None else None
+        e.iteration = it
+        raise
 
     return CCMLBResult(state.assignment.copy(), state, trace_max, trace_tot,
                        trace_imb, stats.transfers, stats.conflicts,
@@ -388,13 +881,20 @@ def ccm_lb_async(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
                        max_grant_chain=stats.max_grant_chain,
                        messages=sim.messages, sim_time=sim.now,
                        gossip_dropped=gossip_dropped, events=trace,
-                       transfer_log=transfer_log)
+                       transfer_log=transfer_log,
+                       timeouts=stats.timeouts,
+                       retries_exhausted=stats.retries_exhausted,
+                       fault_stats=f.stats if f is not None else None,
+                       recovery_log=(recovery_log if f is not None
+                                     else None),
+                       dead_ranks=(sorted(f.dead) if f is not None
+                                   else None))
 
 
 def run_ccm_lb(phase, a0, params, *, async_mode: bool = False, latency=0.0,
                gossip_timeout=None, batch_lock_events: int = 1,
                spec_window: int = 1, spec_mode: str = "scan",
-               **kw) -> CCMLBResult:
+               fault: Optional[FaultSpec] = None, **kw) -> CCMLBResult:
     """Dispatch one balancing run to the synchronous driver or — with
     ``async_mode=True`` — to this module's event-loop simulator, which
     models message latency and makes the §IV-B conflict/yield/chain
@@ -404,9 +904,9 @@ def run_ccm_lb(phase, a0, params, *, async_mode: bool = False, latency=0.0,
     (the async turn order depends on grant interleavings, so neither the
     deferred disjoint-event batching nor the speculative scan — whose
     event sequence must be derivable up front — applies there); conversely
-    ``latency`` / ``gossip_timeout`` only exist under ``async_mode=True``
-    — either inconsistency raises instead of silently dropping the
-    knob."""
+    ``latency`` / ``gossip_timeout`` / ``fault`` only exist under
+    ``async_mode=True`` — either inconsistency raises instead of silently
+    dropping the knob."""
     if not async_mode:
         if not (latency is None or latency == 0.0 or latency == "zero"):
             raise ValueError("latency is an async-driver knob; pass "
@@ -414,6 +914,10 @@ def run_ccm_lb(phase, a0, params, *, async_mode: bool = False, latency=0.0,
         if gossip_timeout is not None:
             raise ValueError("gossip_timeout is an async-driver knob; pass "
                              "async_mode=True")
+        if fault is not None:
+            raise ValueError("fault is an async-driver knob (the sync "
+                             "round-robin loop has no network to degrade); "
+                             "pass async_mode=True")
         return ccm_lb(phase, a0, params, batch_lock_events=batch_lock_events,
                       spec_window=spec_window, spec_mode=spec_mode, **kw)
     if batch_lock_events != 1:
@@ -424,4 +928,4 @@ def run_ccm_lb(phase, a0, params, *, async_mode: bool = False, latency=0.0,
                          "async event sequence is not derivable up front); "
                          "unsupported with async_mode=True")
     return ccm_lb_async(phase, a0, params, latency=latency,
-                        gossip_timeout=gossip_timeout, **kw)
+                        gossip_timeout=gossip_timeout, fault=fault, **kw)

@@ -106,7 +106,7 @@ from repro.core.clusters import (build_clusters, summarize_clusters,
                                  summarize_rank)
 from repro.core.engine import (ExchangeEvent, PhaseEngine, batch_peer_diffs,
                                build_summary_tables)
-from repro.core.gossip import build_peer_networks
+from repro.core.gossip import build_peer_networks, gossip_seed
 from repro.core.locks import LockManager
 from repro.core.problem import CCMParams, Phase, same_topology
 from repro.core.spec import SpecInstance, event_sequence, run_spec
@@ -140,6 +140,13 @@ class CCMLBResult:
     # r_to); replaying it onto the initial assignment reproduces
     # ``assignment`` exactly (asserted by the async protocol-safety suite)
     transfer_log: Optional[list] = None
+    # fault-injection observability (async driver with an active FaultSpec
+    # only; zero / empty everywhere else — see repro/core/async_sim.py)
+    timeouts: int = 0              # lock-request timeouts fired
+    retries_exhausted: int = 0     # work items dropped at the retry cap
+    fault_stats: Optional[object] = None    # FaultStats when fault active
+    recovery_log: Optional[list] = None     # crash-recovery migrations
+    dead_ranks: Optional[list] = None       # ranks killed mid-run
     # speculative-scan observability (zero/None off the spec driver)
     spec_rollbacks: int = 0        # window events rolled back + re-queued
     spec_windows: int = 0          # compiled window launches
@@ -172,6 +179,11 @@ class ProtocolStats:
     grant_chains: int = 0
     max_grant_chain: int = 0
     transfers: int = 0
+    # fault-injection counters (async driver under an active FaultSpec;
+    # ``retries_exhausted`` also counts the fault-free async driver's
+    # yield-retry cap drops — the house "no silent caps" rule)
+    timeouts: int = 0
+    retries_exhausted: int = 0
     # speculative-scan counters (core/spec.py; zero on the other drivers)
     spec_rollbacks: int = 0
     spec_windows: int = 0
@@ -185,11 +197,13 @@ class ProtocolStats:
 # drivers cannot drift apart in semantics or accounting.
 
 def lock_request(locks: LockManager, stats: ProtocolStats, r: int,
-                 p: int) -> bool:
+                 p: int, req_id: Optional[int] = None) -> bool:
     """Fig. 1 line 42: rank ``r`` requests ``p``'s lock.  A busy target
     queues the request FIFO (granted later through a release handoff) and
-    counts one conflict."""
-    granted = locks.request(r, p)
+    counts one conflict.  ``req_id`` is the grant token the async driver
+    threads through under fault injection (see repro/core/locks.py); the
+    synchronous drivers never pass one."""
+    granted = locks.request(r, p, req_id)
     if not granted:
         stats.conflicts += 1
     return granted
@@ -368,7 +382,8 @@ def ccm_lb(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
             clusters, summaries = iteration_summaries(state, phase,
                                                       max_clusters_per_rank)
             info = build_peer_networks(summaries, k_rounds=k_rounds,
-                                       fanout=fanout, seed=seed * 1000 + it)
+                                       fanout=fanout,
+                                       seed=gossip_seed(seed, it))
             work_lists = build_work_lists(phase, summaries, info, params,
                                           engine)
 

@@ -52,7 +52,7 @@ from repro.core.ccm import CCMState
 from repro.core.ccmlb import (CCMLBResult, ProtocolStats, _rebuild_local,
                               build_work_lists, iteration_summaries)
 from repro.core.engine import PhaseEngine
-from repro.core.gossip import build_peer_networks
+from repro.core.gossip import build_peer_networks, gossip_seed
 from repro.core.problem import CCMParams, Phase
 from repro.core.spec import SpecInstance, event_sequence, run_spec
 
@@ -153,7 +153,7 @@ def ccm_lb_many(phases: Sequence[Phase],
                     caches[i].clear()   # entries captured OLD cluster lists
                 info = build_peer_networks(summaries, k_rounds=k_rounds,
                                            fanout=fanout,
-                                           seed=seeds[i] * 1000 + it)
+                                           seed=gossip_seed(seeds[i], it))
                 work_lists = build_work_lists(phases[i], summaries, info,
                                               params, engines[i])
                 seq = event_sequence(phases[i].num_ranks, work_lists)

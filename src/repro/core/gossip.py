@@ -32,6 +32,20 @@ import numpy as np
 from repro.core.clusters import RankSummary
 
 
+def gossip_seed(seed: int, it: int) -> list:
+    """Collision-free per-iteration gossip stream key.
+
+    ``default_rng`` accepts a sequence seed, which SeedSequence mixes
+    entropy-pool style — distinct ``(seed, it)`` pairs give distinct
+    streams, unlike the old ``seed * 1000 + it`` arithmetic where e.g.
+    ``(seed=1, it=1000)`` and ``(seed=2, it=0)`` collided.  Every driver
+    (sync ``ccm_lb``, async ``ccm_lb_async``, vmapped ``ccm_lb_many``)
+    derives its per-iteration gossip stream through this one helper so
+    the cross-driver bitwise parity bars stay aligned.
+    """
+    return [int(seed), int(it)]
+
+
 def gossip_deliver(known: Dict[int, RankSummary],
                    payload: Dict[int, RankSummary]) -> bool:
     """Deliver one gossip payload into a rank's ``info_known`` map.

@@ -114,6 +114,13 @@ def warm_start_assignment(prev_phase: Phase, prev_assignment: np.ndarray,
     unmatched tasks start from ``initial_assignment(next_phase, mode)``.
     Returns ``(assignment, carried)`` where ``carried`` counts the matched
     tasks.
+
+    The rank clipping doubles as the crash-recovery path: the async fault
+    harness (repro/core/async_sim.py) renumbers the survivor set with
+    ``repro.runtime.elastic.survivor_resize`` — dead ranks map OUT of
+    range — and warm-starts through here, so exactly the tasks stranded
+    on dead ranks fall back to the fresh initial placement while every
+    surviving task keeps its rank.
     """
     prev_assignment = np.asarray(prev_assignment, np.int64)
     base = initial_assignment(next_phase, mode)

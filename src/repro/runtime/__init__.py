@@ -1,2 +1,3 @@
-from repro.runtime.fault import FaultInjector, run_with_restarts  # noqa: F401
+from repro.runtime.fault import (FaultInjector, RankDeath,  # noqa: F401
+                                 run_with_restarts)
 from repro.runtime.straggler import StragglerTracker  # noqa: F401

@@ -1,4 +1,5 @@
-"""Elastic scaling: restore a checkpoint onto a DIFFERENT mesh.
+"""Elastic scaling: restore a checkpoint onto a DIFFERENT mesh, and the
+rank-renumbering frame for shrinking a balancer onto its survivor set.
 
 Because parameters are saved as full logical arrays with their logical axes
 derivable from the model config (repro.sharding rules), growing or shrinking
@@ -7,23 +8,30 @@ NamedShardings -> restore() with them.  Divisibility-aware rules fall back
 to replication, so any mesh whose axes divide the big dims works — e.g. a
 16x16 run resumes on 8x16 after losing a slice, or on 2x16x16 when a second
 pod joins.
+
+:func:`survivor_resize` is the balancer-side counterpart: when ranks die
+mid-run (the async fault harness, repro/core/async_sim.py), the survivor
+set is renumbered contiguously so the CCM-LB problem can be restated at
+the smaller rank count and warm-started via
+``repro.core.pipeline.warm_start_assignment`` — same framing as a mesh
+shrink, one level down.  It is pure numpy on purpose: the async simulator
+imports it without pulling jax (the jax-heavy checkpoint/model imports
+below are deferred into :func:`resume_on_mesh`).
 """
 from __future__ import annotations
 
-from typing import Tuple
+import dataclasses
+from typing import Iterable, Tuple
 
-import jax
-from jax.sharding import Mesh
-
-from repro.checkpoint import CheckpointManager
-from repro.configs.base import ModelConfig
-from repro.launch.steps import abstract_opt, abstract_params
-from repro.models.model import build_model
+import numpy as np
 
 
-def resume_on_mesh(cfg: ModelConfig, mesh: Mesh, ckpt_dir: str,
-                   with_opt: bool = True) -> Tuple:
+def resume_on_mesh(cfg, mesh, ckpt_dir: str, with_opt: bool = True) -> Tuple:
     """Returns (model, params, opt_state_or_None, step) placed on ``mesh``."""
+    from repro.checkpoint import CheckpointManager
+    from repro.launch.steps import abstract_opt, abstract_params
+    from repro.models.model import build_model
+
     model = build_model(cfg, mesh)
     params_sds, p_sh = abstract_params(model)
     mgr = CheckpointManager(ckpt_dir)
@@ -34,3 +42,38 @@ def resume_on_mesh(cfg: ModelConfig, mesh: Mesh, ckpt_dir: str,
         return model, params, opt_state, step
     params, step = mgr.restore(params_sds, p_sh)
     return model, params, None, step
+
+
+@dataclasses.dataclass(frozen=True)
+class SurvivorResize:
+    """Contiguous renumbering of a rank set after deaths.
+
+    ``survivors[j]`` is the ORIGINAL id of new rank ``j`` (sorted
+    ascending, so relative order is preserved); ``old_to_new[r]`` maps an
+    original id to its new id, with dead ranks mapped to ``n_new`` — one
+    PAST the last valid new rank, so ``old_to_new[assignment]`` feeds
+    straight into ``warm_start_assignment``'s out-of-range clipping
+    (``prev < next.num_ranks``): tasks stranded on dead ranks are exactly
+    the ones that fall back to the fresh initial placement.
+    """
+
+    survivors: np.ndarray     # (n_new,) original ids of the live ranks
+    old_to_new: np.ndarray    # (n_old,) original id -> new id (dead -> n_new)
+
+    @property
+    def n_new(self) -> int:
+        return int(self.survivors.size)
+
+
+def survivor_resize(n_ranks: int, dead: Iterable[int]) -> SurvivorResize:
+    """Build the renumbering frame for ``n_ranks`` minus the ``dead`` set."""
+    dead = set(int(d) for d in dead)
+    if not all(0 <= d < n_ranks for d in dead):
+        raise ValueError(f"dead ranks out of range [0, {n_ranks})")
+    survivors = np.array([r for r in range(n_ranks) if r not in dead],
+                         np.int64)
+    if survivors.size == 0:
+        raise ValueError("no survivors to resize onto")
+    old_to_new = np.full(n_ranks, survivors.size, np.int64)
+    old_to_new[survivors] = np.arange(survivors.size, dtype=np.int64)
+    return SurvivorResize(survivors, old_to_new)

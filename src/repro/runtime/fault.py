@@ -19,6 +19,17 @@ class NodeFailure(RuntimeError):
     pass
 
 
+class RankDeath(NodeFailure):
+    """A balancer rank (or the whole survivor set) died mid-run.
+
+    Raised by the async fault harness (repro/core/async_sim.py) when a
+    ``FaultSpec.kill`` leaves no live rank to continue on — the balancer
+    cannot recover in-process and the caller's restart loop
+    (:func:`run_with_restarts`) is the right layer to handle it, which is
+    why this subclasses :class:`NodeFailure`: existing restart policies
+    apply unchanged."""
+
+
 @dataclasses.dataclass
 class FaultInjector:
     """Deterministically raise NodeFailure at the given global steps."""

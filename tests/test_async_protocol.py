@@ -28,12 +28,16 @@ async driver MUST produce lock conflicts, yields and a grant chain of
 length >= 2 — so the §IV-B branches (structurally unreachable through the
 synchronous round-robin drivers) can never silently go dead again.
 """
+from collections import Counter
+
 import numpy as np
 import pytest
 
-from repro.core import CCMParams, ccm_lb, ccm_lb_async, random_phase
-from repro.core.async_sim import GRANT, RELEASE
+from repro.core import (CCMParams, FaultSpec, LivelockError, ccm_lb,
+                        ccm_lb_async, random_phase)
+from repro.core.async_sim import FAIL, GRANT, RELEASE, TIMEOUT
 from repro.core.problem import initial_assignment
+from repro.runtime.fault import NodeFailure, RankDeath
 
 PARAMS = CCMParams(delta=1e-9)
 LATENCIES = (0.0, 0.2, ("uniform", 0.1, 0.6), ("uniform", 0.5, 1.5),
@@ -162,11 +166,241 @@ def test_max_events_guard_raises_not_hangs():
 
 def test_yield_retries_are_bounded():
     """max_retries bounds re-queues: with zero retries allowed a yielding
-    rank drops the attempt instead of looping, and the run still
+    rank drops the attempt instead of looping, the drop is COUNTED (the
+    house "no silent caps" rule — satellite bugfix), and the run still
     terminates safely."""
     phase, a0 = _contended_instance()
     res = ccm_lb_async(phase, a0, PARAMS, n_iter=3, seed=3, fanout=6,
                        latency=("uniform", 0.5, 1.5), max_retries=0)
     assert res.yields > 0
+    assert res.retries_exhausted > 0   # every yield at cap 0 is a drop
+    assert res.retries_exhausted == res.yields
     np.testing.assert_array_equal(_replay(a0, res.transfer_log),
                                   res.assignment)
+
+
+# ------------------------------------------------------------ fault suite
+#
+# Invariants under an ACTIVE FaultSpec (the faulted parity bar: invariant-
+# preserving, not trajectory-identical):
+#   * at most one live lock per rank — "live" reconstructed conservatively
+#     from the event stream (grants consumed minus releases landed, plus a
+#     slack for timeout-aborted grants the probe cannot attribute to a
+#     peer: over-discounting can only weaken the check, never false-fire);
+#   * transfers never target a dead rank (transfer-listener assert) and the
+#     final assignment strands no task on one;
+#   * transfer-log replay == final assignment (lost/duplicated mutations
+#     both fail the source-rank match), crash-recovery moves included;
+#   * quiescent termination (asserted inside the driver at every stage-end
+#     barrier, wedge reclamation included).
+
+FAULT_LAT = ("uniform", 0.1, 2.0)
+
+
+def _run_faulted(spec: FaultSpec, *, seed=3, n_iter=3, max_retries=4):
+    """Run the contended instance under ``spec`` with the fault-tolerant
+    safety probe attached; returns the result (replay already checked)."""
+    phase, a0 = _contended_instance()
+    dead = set()
+    pending = Counter()     # (holder, target) releases in flight
+    slack = Counter()       # holder -> timeout aborts (peer unknown)
+
+    def on_transfer(tasks, r_from, r_to):
+        assert r_to not in dead, \
+            f"transfer {r_from}->{r_to} targets a dead rank"
+
+    hooked = [False]
+
+    def probe(time, kind, src, dst, locks, state):
+        if not hooked[0]:
+            hooked[0] = True
+            state.add_transfer_listener(on_transfer)
+        if kind == FAIL:
+            dead.add(dst)
+            # the dead rank's lock state was reclaimed/force-released;
+            # drop only ITS bookkeeping (other pairs' releases are still
+            # genuinely in flight)
+            for key in [k for k in pending if dst in k]:
+                del pending[key]
+            slack.pop(dst, None)
+            return
+        if kind == GRANT:
+            pending[(dst, src)] += 1
+        elif (kind == RELEASE and locks.locked_by[dst] != src
+                and pending[(src, dst)] > 0):
+            # only count the release as landed if it actually freed the
+            # holder of record — a stale (token-mismatched) duplicate
+            # must not spend the marker of a still-in-flight release
+            pending[(src, dst)] -= 1
+        elif kind == TIMEOUT:
+            slack[dst] += 1
+        for h in range(locks.n_ranks):
+            live = [t for t in locks.held_by(h)
+                    if pending[(h, t)] == 0]
+            assert len(live) <= 1 + slack[h], \
+                f"rank {h} holds live locks {live} at t={time}"
+
+    res = ccm_lb_async(phase, a0, PARAMS, n_iter=n_iter, seed=seed,
+                       fanout=6, latency=FAULT_LAT, max_retries=max_retries,
+                       on_event=probe, fault=spec)
+    np.testing.assert_array_equal(_replay(a0, res.transfer_log),
+                                  res.assignment)
+    return res
+
+
+def test_inactive_fault_spec_is_bitwise_noop():
+    """The zero-fault parity bar: an all-inactive FaultSpec must add zero
+    events, zero rng draws — bitwise-identical trace and trajectory."""
+    phase, a0 = _contended_instance()
+    kw = dict(n_iter=3, seed=3, fanout=6, latency=FAULT_LAT,
+              collect_trace=True)
+    ref = ccm_lb_async(phase, a0, PARAMS, **kw)
+    res = ccm_lb_async(phase, a0, PARAMS, fault=FaultSpec(), **kw)
+    assert not FaultSpec().active()
+    np.testing.assert_array_equal(res.assignment, ref.assignment)
+    assert res.transfer_log == ref.transfer_log
+    assert res.events == ref.events
+    assert res.max_work == ref.max_work
+    assert res.fault_stats is None and res.dead_ranks is None
+
+
+@pytest.mark.parametrize("spec", [
+    FaultSpec(drop=0.05, seed=11),
+    FaultSpec(dup=0.10, seed=12),
+    FaultSpec(reorder=0.15, reorder_scale=2.0, seed=13),
+    FaultSpec(drop=0.03, dup=0.05, reorder=0.05, seed=14),
+], ids=["drop", "dup", "reorder", "combined"])
+def test_protocol_safe_under_message_faults(spec):
+    """Drop/dup/reorder sweeps: invariants hold, the hardening paths that
+    MUST fire for each fault class actually fire, and nothing is lost."""
+    res = _run_faulted(spec)
+    fs = res.fault_stats
+    assert fs is not None
+    injected = fs.dropped + fs.duplicated + fs.reordered
+    assert injected > 0, "the spec was supposed to inject faults"
+    if fs.dropped:
+        # lost REQ/GRANT/RELEASE messages surface as timeouts and/or
+        # stage-end wedge reclaims — never as a hang or a lost transfer
+        assert res.timeouts > 0
+    if fs.duplicated:
+        # duplicates are idempotent no-ops: token-checked at each handler
+        assert (fs.dup_requests + fs.stale_grants + fs.stale_releases) > 0
+    assert res.transfers > 0
+
+
+def test_lost_messages_timeout_and_retry():
+    """A heavy-drop link: requests time out, abort, retry with backoff —
+    and the exhausted retries are counted, not silently dropped."""
+    res = _run_faulted(FaultSpec(drop=0.15, req_timeout=2.0, seed=21),
+                      max_retries=2)
+    fs = res.fault_stats
+    assert res.timeouts > 0
+    assert fs.dropped > 0
+    # aborts land as grant-frees, queue dequeues or stale no-ops
+    assert (fs.aborted_dequeues + fs.stale_releases + fs.stale_grants
+            + fs.wedged_reclaimed) > 0
+
+
+def test_duplicate_storm_is_idempotent():
+    """Every message duplicated half the time: the duplicate-REQ /
+    stale-GRANT / stale-RELEASE paths all fire and the trajectory stays
+    invariant-clean (the probe + replay in _run_faulted)."""
+    res = _run_faulted(FaultSpec(dup=0.5, seed=22))
+    fs = res.fault_stats
+    assert fs.duplicated > 0
+    assert fs.dup_requests > 0
+    assert fs.stale_releases > 0
+
+
+def test_max_retries_zero_terminates_under_faults():
+    """The retry bound holds even when faults force timeouts: cap 0 means
+    every timeout/yield drops its work item (counted), and the stage
+    still drains to quiescence with the replay invariant intact."""
+    res = _run_faulted(FaultSpec(drop=0.1, req_timeout=2.0, seed=23),
+                      max_retries=0)
+    assert res.timeouts > 0
+    assert res.retries_exhausted > 0
+
+
+def test_rank_death_reclamation_and_recovery():
+    """Kills mid-iteration: the dead ranks' lock state is reclaimed, no
+    task is stranded on them at the end, the recovery migrations are
+    logged separately AND flow through the transfer log (replay covers
+    them), and later iterations keep balancing the survivor set."""
+    spec = FaultSpec(kill=((3, 1, 0.5), (7, 1, 3.0)), seed=24)
+    res = _run_faulted(spec, n_iter=4)
+    fs = res.fault_stats
+    assert res.dead_ranks == [3, 7]
+    assert fs.killed == 2
+    assert not np.isin(res.assignment, res.dead_ranks).any()
+    assert fs.recovered_tasks > 0
+    assert res.recovery_log, "recovery migrations must be logged"
+    for tasks, r_from, r_to in res.recovery_log:
+        assert r_from in (3, 7) and r_to not in (3, 7)
+        assert (tasks, r_from, r_to) in res.transfer_log
+    # the balancer keeps improving on the survivors after the crash
+    assert res.transfers > 0
+
+
+def test_kill_under_message_loss():
+    """The hard combination: a rank dies while messages are also being
+    dropped — reclamation, timeouts and recovery must compose."""
+    spec = FaultSpec(drop=0.05, kill=((5, 1, 1.0),), seed=25)
+    res = _run_faulted(spec, n_iter=4)
+    assert res.dead_ranks == [5]
+    assert not np.isin(res.assignment, [5]).any()
+    assert res.timeouts > 0
+
+
+def test_all_ranks_dead_raises_rank_death():
+    """Killing the whole set cannot be balanced away — it must raise the
+    checkpoint-restart layer's NodeFailure vocabulary."""
+    phase, a0 = _contended_instance()
+    kill = tuple((r, 0, 0.5) for r in range(phase.num_ranks))
+    with pytest.raises(RankDeath):
+        ccm_lb_async(phase, a0, PARAMS, n_iter=2, seed=3,
+                     latency=FAULT_LAT, fault=FaultSpec(kill=kill, seed=26))
+    assert issubclass(RankDeath, NodeFailure)   # restart loops catch it
+
+
+def test_pause_defers_delivery():
+    """A paused rank receives nothing inside its window; deliveries are
+    deferred to the window's end, not lost."""
+    res = _run_faulted(FaultSpec(pause=((2, 0, 0.0, 8.0),
+                                        (9, 1, 0.0, 5.0)), seed=27))
+    assert res.fault_stats.paused_deferrals > 0
+
+
+def test_livelock_error_is_structured():
+    """The event-budget guard must carry the partial accounting (satellite
+    bugfix): processed/queued counts, sim time, partial ProtocolStats and
+    the iteration it died in — not a bare assertion that loses it all."""
+    phase, a0 = _contended_instance()
+    with pytest.raises(LivelockError) as ei:
+        ccm_lb_async(phase, a0, PARAMS, n_iter=2, seed=3,
+                     latency=FAULT_LAT, max_events=50,
+                     fault=FaultSpec(drop=0.05, seed=28))
+    e = ei.value
+    assert isinstance(e, RuntimeError) and "events" in str(e)
+    assert e.processed == e.max_events + 1 == 51
+    assert e.queued >= 0 and e.sim_time >= 0.0
+    assert e.stats is not None          # partial ProtocolStats attached
+    assert e.fault_stats is not None
+    assert e.iteration == 0
+
+
+def test_fault_runs_are_deterministic():
+    """The whole faulted run is a pure function of (instance, seed, spec):
+    same spec -> identical trajectory, different fault seed -> (on this
+    instance) a different one."""
+    phase, a0 = _contended_instance()
+    kw = dict(n_iter=3, seed=3, fanout=6, latency=FAULT_LAT)
+    spec = FaultSpec(drop=0.05, dup=0.05, seed=31)
+    r1 = ccm_lb_async(phase, a0, PARAMS, fault=spec, **kw)
+    r2 = ccm_lb_async(phase, a0, PARAMS, fault=spec, **kw)
+    np.testing.assert_array_equal(r1.assignment, r2.assignment)
+    assert r1.transfer_log == r2.transfer_log
+    assert r1.fault_stats == r2.fault_stats     # FaultStats is a dataclass
+    r3 = ccm_lb_async(phase, a0, PARAMS,
+                      fault=FaultSpec(drop=0.05, dup=0.05, seed=32), **kw)
+    assert r1.transfer_log != r3.transfer_log

@@ -16,7 +16,7 @@ from repro.core import (CCMParams, ccm_lb, ccm_lb_async, make_latency,
 from repro.core.async_sim import _Sim, _run_gossip
 from repro.core.ccmlb import iteration_summaries
 from repro.core.ccm import CCMState
-from repro.core.gossip import build_peer_networks
+from repro.core.gossip import build_peer_networks, gossip_seed
 from repro.core.problem import initial_assignment, scaling_phase
 
 PARAMS = CCMParams(delta=1e-9)
@@ -88,6 +88,32 @@ def test_async_gossip_matches_sync_epidemic_at_zero_latency():
     for r in info:          # payloads alias the same summary objects
         for p, s in info[r].items():
             assert s is ref[r][p]
+
+
+def test_gossip_seed_keys_are_collision_free():
+    """Satellite regression: the old per-iteration stream derivation
+    ``seed * 1000 + it`` collided across nearby (seed, it) pairs —
+    (1, 1000), (2, 0) and (0, 2000) all drew the SAME gossip stream.
+    ``gossip_seed`` keys the SeedSequence on the pair itself, so those
+    runs now see distinct epidemics (while staying deterministic)."""
+    phase = random_phase(9, num_ranks=20, num_tasks=80, num_blocks=10,
+                        num_comms=80, mem_cap=1e12)
+    state = CCMState.build(phase, initial_assignment(phase), PARAMS)
+    _, summaries = iteration_summaries(state, phase, None)
+
+    def net(seed):
+        got = build_peer_networks(summaries, k_rounds=2, fanout=3, seed=seed)
+        return {r: tuple(sorted(m)) for r, m in got.items()}
+
+    colliding = [(1, 1000), (2, 0), (0, 2000)]
+    # the arithmetic scheme collapses all three onto one stream...
+    old = [net(s * 1000 + it) for s, it in colliding]
+    assert old[0] == old[1] == old[2]
+    # ...the pair key keeps them pairwise distinct
+    new = [net(gossip_seed(s, it)) for s, it in colliding]
+    assert new[0] != new[1] and new[0] != new[2] and new[1] != new[2]
+    # and stays reproducible: same pair -> same epidemic
+    assert net(gossip_seed(1, 1000)) == new[0]
 
 
 def test_deterministic_event_trace_and_assignment():

@@ -11,7 +11,8 @@ from repro import configs
 from repro.checkpoint import CheckpointManager, latest_step, restore, save
 from repro.launch.mesh import make_local_mesh
 from repro.launch.train import train_loop
-from repro.runtime.fault import FaultInjector, NodeFailure, run_with_restarts
+from repro.runtime.fault import (FaultInjector, NodeFailure, RankDeath,
+                                 run_with_restarts)
 
 MESH = make_local_mesh(1, 1)
 
@@ -107,6 +108,70 @@ def test_restart_reproduces_uninterrupted_run(tmp_path):
     # the restarted segment covers steps 3..8; compare overlap exactly
     restarted = losses_parts[-1]
     np.testing.assert_allclose(restarted, ref_losses[3:], rtol=1e-6)
+
+
+def test_run_with_restarts_gives_up_after_max_restarts():
+    """Satellite: the max_restarts-exceeded path — a driver that never
+    stops failing must come back ``completed=False`` with the attempt
+    count intact (max_restarts + 1 failures: the initial try plus one per
+    allowed restart), not loop forever or raise out of the wrapper."""
+    calls = []
+
+    def always_fails():
+        calls.append(1)
+        raise NodeFailure("permanent")
+
+    stats = run_with_restarts(always_fails, max_restarts=3)
+    assert not stats.completed
+    assert stats.restarts == 4          # gave up on the 4th failure
+    assert len(calls) == 4              # initial attempt + 3 restarts
+    assert stats.wall_s >= 0.0
+
+    # max_restarts=0: one attempt, zero retries
+    calls.clear()
+    stats = run_with_restarts(always_fails, max_restarts=0)
+    assert not stats.completed and len(calls) == 1 and stats.restarts == 1
+
+    # RankDeath (async-harness total loss) rides the same policy
+    def all_ranks_die():
+        calls.append(1)
+        raise RankDeath("every rank dead")
+
+    calls.clear()
+    stats = run_with_restarts(all_ranks_die, max_restarts=2)
+    assert not stats.completed and len(calls) == 3
+
+
+def test_run_with_restarts_honors_backoff(monkeypatch):
+    """backoff_s sleeps between failures — but never after the final
+    give-up failure, and never when backoff is zero."""
+    import repro.runtime.fault as fault_mod
+
+    naps = []
+    monkeypatch.setattr(fault_mod.time, "sleep", lambda s: naps.append(s))
+
+    attempts = []
+
+    def fails_twice_then_succeeds():
+        attempts.append(1)
+        if len(attempts) < 3:
+            raise NodeFailure("transient")
+
+    stats = run_with_restarts(fails_twice_then_succeeds, max_restarts=5,
+                              backoff_s=0.25)
+    assert stats.completed and stats.restarts == 2
+    assert naps == [0.25, 0.25]         # one nap per restart taken
+
+    naps.clear()
+    stats = run_with_restarts(lambda: (_ for _ in ()).throw(
+        NodeFailure("permanent")), max_restarts=2, backoff_s=0.5)
+    assert not stats.completed
+    assert naps == [0.5, 0.5]           # no sleep after the give-up
+
+    naps.clear()
+    attempts.clear()
+    run_with_restarts(fails_twice_then_succeeds, max_restarts=5)
+    assert naps == []                   # backoff_s=0.0 never sleeps
 
 
 def test_elastic_restore_other_mesh(tmp_path):

@@ -182,7 +182,9 @@ def test_handle_grant_deferred_matches_reference(yield_first):
         locks = LockManager(phase.num_ranks)
         p = 2
         locks.locked_by[p] = 5
-        locks.queue[p] = deque([0, 3])
+        # queue entries are (requester, req_id); req_id None = untracked
+        # (the sync driver's path — tokens only matter under faults)
+        locks.queue[p] = deque([(0, None), (3, None)])
         if yield_first:
             locks.locked_by[0] = 1      # 1 <= 2 -> rank 0 must yield
         work_lists = {r: deque([(1.0, p)]) for r in range(phase.num_ranks)}
