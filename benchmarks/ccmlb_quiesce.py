@@ -1,0 +1,207 @@
+"""Quiescence amortization: converged-iteration cost, incremental vs the
+full-rebuild reference (repro/core/quiesce.py).
+
+CCM-LB converges in a handful of iterations and then mostly *confirms*
+quiescence; the QuiesceTracker makes the four host cost centers of such
+an iteration — cluster/summary rebuilds, gossip network construction,
+work-list assembly, exact scoring — incremental in the number of dirty
+ranks, with bitwise-identical trajectories as the bar.  This benchmark
+runs long solo balances on the ``ccmlb_scaling`` instance family so the
+tail is fully converged, and measures that tail both ways:
+
+  * **tail stage cost** — per-iteration sum of the ``profile=True`` stage
+    timings over the converged (zero-transfer) tail.  This is the direct
+    measure of the four cost centers, immune to the warm-phase wall noise
+    of a shared VM; the incremental tail must undercut the rebuild tail
+    by ``TAIL_FLOOR`` (hard-asserted at >= 64 ranks in full mode —
+    measured ratios sit in the hundreds, the floor is a regression trip
+    wire, not the expectation);
+  * **end-to-end wall** — min-of-reps full-run seconds.  The warm phase
+    is identical work in both configs, so the ratio is diluted by
+    design; the ``E2E_FLOOR`` bar is asserted at 256 ranks in full mode.
+
+Every config pair is checked for bitwise identity (assignment AND
+transfer log), the converged tail is checked for ZERO tracker activity
+(no cluster builds, no gossip redraws, no work-list rescoring — diffed
+from ``quiesce_counters``), and the ``quiesce_after`` early-exit knob is
+checked lossless: under per-root epoch-keyed gossip a zero-transfer
+iteration reproduces itself exactly (nothing dirty => same summaries,
+same stream keys, same work lists), so quiescence is absorbing and
+stopping early cannot change the answer.
+
+Standalone:  PYTHONPATH=src python benchmarks/ccmlb_quiesce.py [--quick]
+(--quick runs the small-rank configs for CI and downgrades the timing
+bars to warnings — shared-runner wall times; also wired into
+benchmarks/run.py).  Results land in ``BENCH_ccmlb_quiesce.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.core import CCMParams, ccm_lb
+from repro.core.problem import initial_assignment, scaling_phase
+
+JSON_PATH = os.environ.get("BENCH_CCMLB_QUIESCE_JSON",
+                           "BENCH_ccmlb_quiesce.json")
+RANKS = (64, 256, 1024)
+QUICK_RANKS = (16, 64)
+# long enough that >= MIN_TAIL converged iterations exist at every size
+N_TOTAL = {16: 16, 64: 24, 256: 32, 1024: 12}
+QUICK_N_TOTAL = {16: 12, 64: 12}
+MIN_TAIL = 5
+REPS = 2
+TAIL_FLOOR = 5.0    # converged-iteration stage cost: incremental vs rebuild
+E2E_FLOOR = 1.3     # end-to-end solo wall at 256 ranks
+ZERO_KEYS = ("cluster_rank_builds", "gossip_redraws", "worklist_rescored",
+             "tables_rebuilds")
+
+
+def _timed_run(phase, a0, params, n_iter, reps, **kw):
+    """Min-of-reps wall seconds + the last run's result (trajectories are
+    deterministic, so every rep returns the same result)."""
+    best, res = float("inf"), None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        res = ccm_lb(phase, a0, params, n_iter=n_iter, k_rounds=2, fanout=4,
+                     seed=0, profile=True, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return best, res
+
+
+def _tail_stats(res):
+    """(tail start, per-iteration stage seconds over the converged tail,
+    tracker-activity deltas over the tail).
+
+    The tail starts ONE past the first zero-transfer iteration: that
+    iteration still folds in the dirt left by the last committed transfer
+    (and iteration 0 always pays the initial full build), so the truly
+    quiescent iterations — nothing dirty, caches replayed verbatim — begin
+    at ``last_nonzero + 2``."""
+    deltas = res.iter_transfers
+    nz = [i for i, d in enumerate(deltas) if d]
+    start = (nz[-1] + 2) if nz else 1
+    tail = res.stage_timings[start:]
+    per_iter = (sum(sum(tm.values()) for tm in tail) / len(tail)
+                if tail else 0.0)
+    qc = res.quiesce_counters
+    activity = {k: qc[-1].get(k, 0) - qc[start - 1].get(k, 0)
+                for k in ZERO_KEYS}
+    return start, per_iter, activity
+
+
+def run(report, quick: bool = False):
+    quick = quick or os.environ.get("BENCH_QUICK") == "1"
+    ranks_sweep = QUICK_RANKS if quick else RANKS
+    totals = QUICK_N_TOTAL if quick else N_TOTAL
+    params = CCMParams(delta=1e-9)
+    records = []
+    tail_ratio_256 = None
+    e2e_ratio_256 = None
+
+    def bar(ok: bool, msg: str):
+        if ok:
+            return
+        if quick:
+            report("ccmlb_quiesce_WARN", 0.0,
+                   f"{msg} (quick mode: warning only — shared-runner "
+                   "wall times)")
+        else:
+            raise AssertionError(msg)
+
+    for ranks in ranks_sweep:
+        phase = scaling_phase(ranks)
+        a0 = initial_assignment(phase)
+        n_iter = totals[ranks]
+        walls, results = {}, {}
+        for tag, kw in (("incremental", dict(incremental=True)),
+                        ("rebuild", dict(incremental=False))):
+            reps = 1 if ranks >= 1024 else REPS
+            walls[tag], results[tag] = _timed_run(phase, a0, params, n_iter,
+                                                  reps, **kw)
+        ri, rr = results["incremental"], results["rebuild"]
+        # the whole point: the amortized path IS the reference trajectory
+        assert np.array_equal(ri.assignment, rr.assignment), \
+            f"incremental/rebuild assignments diverged at {ranks} ranks"
+        assert ri.transfer_log == rr.transfer_log, \
+            f"incremental/rebuild transfer logs diverged at {ranks} ranks"
+        start, tail_incr, activity = _tail_stats(ri)
+        start_r, tail_reb, _ = _tail_stats(rr)
+        assert start == start_r
+        tail_len = n_iter - start
+        assert tail_len >= MIN_TAIL, \
+            (f"only {tail_len} converged iterations at {ranks} ranks — "
+             f"raise N_TOTAL ({n_iter}) to keep the tail measurable")
+        assert all(v == 0 for v in activity.values()), \
+            (f"converged tail did work at {ranks} ranks: {activity} "
+             "(expected zero cluster builds / gossip redraws / rescoring)")
+        tail_ratio = tail_reb / tail_incr if tail_incr > 0 else float("inf")
+        e2e_ratio = walls["rebuild"] / walls["incremental"]
+        # quiesce_after is lossless: quiescence is absorbing (docstring)
+        rq = ccm_lb(phase, a0, params, n_iter=n_iter, k_rounds=2, fanout=4,
+                    seed=0, incremental=True, quiesce_after=1)
+        assert np.array_equal(rq.assignment, ri.assignment), \
+            f"quiesce_after changed the answer at {ranks} ranks"
+        saved = n_iter - len(rq.iter_transfers)
+        report(f"ccmlb_quiesce_{ranks}", walls["incremental"] * 1e6,
+               f"tail {tail_incr*1e3:.2f}ms/iter vs rebuild "
+               f"{tail_reb*1e3:.2f}ms/iter ({tail_ratio:.0f}x), e2e "
+               f"{e2e_ratio:.2f}x, quiesce_after=1 saved {saved}/{n_iter} "
+               "iterations, identical assignments")
+        records.append({
+            "ranks": ranks, "tasks": phase.num_tasks,
+            "comms": phase.num_comms, "n_iter": n_iter,
+            "converged_at": start, "tail_iterations": tail_len,
+            "tail_seconds_per_iter_incremental": tail_incr,
+            "tail_seconds_per_iter_rebuild": tail_reb,
+            "tail_ratio": tail_ratio,
+            "seconds_incremental": walls["incremental"],
+            "seconds_rebuild": walls["rebuild"],
+            "e2e_ratio": e2e_ratio,
+            "memo_hits": int(ri.memo_hits),
+            "gossip_noop_merges": int(ri.gossip_noop_merges),
+            "quiesce_after_saved_iterations": saved,
+            "identical_assignments": True,
+        })
+        if ranks >= 64:
+            bar(tail_ratio >= TAIL_FLOOR,
+                f"converged-tail ratio {tail_ratio:.1f}x under the "
+                f"{TAIL_FLOOR}x floor at {ranks} ranks")
+        if ranks == 256:
+            tail_ratio_256 = tail_ratio
+            e2e_ratio_256 = e2e_ratio
+            bar(e2e_ratio >= E2E_FLOOR,
+                f"end-to-end ratio {e2e_ratio:.2f}x under the "
+                f"{E2E_FLOOR}x floor at 256 ranks")
+
+    payload = {
+        "benchmark": "ccmlb_quiesce",
+        "numpy": np.__version__,
+        "quick": quick,
+        "results": records,
+        "tail_ratio_256": tail_ratio_256,
+        "e2e_ratio_256": e2e_ratio_256,
+        "tail_floor": TAIL_FLOOR,
+        "e2e_floor": E2E_FLOOR,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    report("ccmlb_quiesce_json", 0.0, f"written to {JSON_PATH}")
+
+
+def main():
+    quick = "--quick" in sys.argv
+    print("name,us_per_call,derived")
+
+    def report(name, us, derived=""):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    run(report, quick=quick)
+
+
+if __name__ == "__main__":
+    main()

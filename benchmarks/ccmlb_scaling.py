@@ -18,6 +18,11 @@ XLA compile latency is reported separately as ``jit_warmup_seconds``.
 Every run of a config is checked for assignment identity (recorded as
 ``identical_assignments`` and asserted here; see repro/core/engine.py for
 the contract), so the speedup columns are apples to apples.
+
+Each rank count also gets one UNTIMED ``profile=True`` run recording
+where the host iteration spends its time (clusters / gossip / work lists
+/ scoring / commit, summed per stage) — the breakdown that motivates the
+quiescence caches measured in benchmarks/ccmlb_quiesce.py.
 """
 from __future__ import annotations
 
@@ -128,6 +133,28 @@ def run(report):
         batched_jit_seconds_largest = times["batched_jit"]
         spec_seconds_largest = times["spec"]
         spec_over_batched_largest = spec_over_batched
+
+        # untimed profiled run: where the host iteration spends its time
+        # (per-stage seconds summed over all iterations; profile=True adds
+        # perf_counter calls, so this run is kept out of the timed configs
+        # — benchmarks/ccmlb_quiesce.py owns the converged-tail assertions)
+        resp = ccm_lb(phase, a0, params, n_iter=N_ITER, k_rounds=2,
+                      fanout=4, seed=0, profile=True)
+        stage_totals = {}
+        for tm in resp.stage_timings:
+            for stage, sec in tm.items():
+                stage_totals[stage] = stage_totals.get(stage, 0.0) + sec
+        report(f"ccmlb_ranks_{ranks}_stages", 0.0,
+               " ".join(f"{s}={v*1e3:.1f}ms"
+                        for s, v in sorted(stage_totals.items())))
+        records.append({
+            "ranks": ranks, "tasks": phase.num_tasks,
+            "comms": phase.num_comms, "n_iter": N_ITER,
+            "engine": True, "profiled": True,
+            "stage_seconds": stage_totals,
+            "memo_hits": int(resp.memo_hits),
+            "gossip_noop_merges": int(resp.gossip_noop_merges),
+        })
 
     # fanout/round sweep at 64 ranks (engine path — the default)
     phase = random_phase(2, num_ranks=64, num_tasks=1600, num_blocks=192,

@@ -111,7 +111,9 @@ def plan_expert_placement(counts: np.ndarray, cfg: ModelConfig,
                           spec_mode: str = "scan",
                           async_mode: bool = False,
                           latency=0.0,
-                          gossip_timeout=None) -> PlacementPlan:
+                          gossip_timeout=None,
+                          quiesce_after: Optional[int] = None
+                          ) -> PlacementPlan:
     """Plan an expert placement with CCM-LB.  ``use_engine`` selects the
     vectorized evaluation engine (default; the scalar reference path gives
     identical plans — the knob exists for A/B benchmarking); ``backend``
@@ -124,7 +126,9 @@ def plan_expert_placement(counts: np.ndarray, cfg: ModelConfig,
     (core/spec.py — compiled-vs-host parity tier).  ``async_mode`` plans
     through the distributed event-loop simulator instead (``latency`` /
     ``gossip_timeout`` as in repro/core/async_sim.py; at the default zero
-    latency the plan is identical to the synchronous one)."""
+    latency the plan is identical to the synchronous one).
+    ``quiesce_after`` stops early after that many consecutive
+    zero-transfer iterations (repro/core/quiesce.py)."""
     l_n, e_n = counts.shape
     assert e_n % n_devices == 0
     phase = phase_from_router_stats(counts, cfg, n_devices,
@@ -137,7 +141,8 @@ def plan_expert_placement(counts: np.ndarray, cfg: ModelConfig,
                      batch_lock_events=batch_lock_events,
                      spec_window=spec_window, spec_mode=spec_mode,
                      async_mode=async_mode, latency=latency,
-                     gossip_timeout=gossip_timeout)
+                     gossip_timeout=gossip_timeout,
+                     quiesce_after=quiesce_after)
     return _project_plan(counts, res, n_devices)
 
 
@@ -187,7 +192,8 @@ def plan_expert_placement_sequence(
         fanout: int = 4, seed: int = 0, warm_start: bool = True,
         use_engine: bool = True, backend: str = "numpy",
         batch_lock_events: int = 1, spec_window: int = 1,
-        spec_mode: str = "scan") -> List[PlacementPlan]:
+        spec_mode: str = "scan",
+        quiesce_after: Optional[int] = None) -> List[PlacementPlan]:
     """Plan placements for a SEQUENCE of router-stat windows (paper §III-B
     iterative executions): each window's phase shares the (layer, expert)
     task/block grid, so phase ``k+1`` warm-starts from phase ``k``'s
@@ -215,7 +221,8 @@ def plan_expert_placement_sequence(
                            n_iter=n_iter, fanout=fanout,
                            use_engine=use_engine, backend=backend,
                            batch_lock_events=batch_lock_events,
-                           spec_window=spec_window, spec_mode=spec_mode)
+                           spec_window=spec_window, spec_mode=spec_mode,
+                           quiesce_after=quiesce_after)
     return [_project_plan(c, run.result, n_devices)
             for c, run in zip(counts_seq, pipe.runs)]
 

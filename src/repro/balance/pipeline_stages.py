@@ -122,7 +122,8 @@ def plan_pipeline_stages(cfg: ModelConfig, n_stages: int, *,
                          spec_mode: str = "scan",
                          async_mode: bool = False,
                          latency=0.0,
-                         gossip_timeout=None) -> StagePlan:
+                         gossip_timeout=None,
+                         quiesce_after: Optional[int] = None) -> StagePlan:
     """``backend`` selects the engine's stage-2 scorer ("numpy"/"jit"/
     "pallas"/"pallas_compiled" — the f64 tiers plan identically; see
     kernels/ccm_scorer/README.md); ``batch_lock_events`` defers and
@@ -131,7 +132,9 @@ def plan_pipeline_stages(cfg: ModelConfig, n_stages: int, *,
     (core/spec.py).  ``async_mode`` plans
     through the distributed event-loop simulator (``latency`` /
     ``gossip_timeout`` per repro/core/async_sim.py; zero latency plans
-    identically to the synchronous driver)."""
+    identically to the synchronous driver).  ``quiesce_after`` stops
+    early after that many consecutive zero-transfer iterations
+    (repro/core/quiesce.py)."""
     phase = _stage_phase(cfg, n_stages, tokens_per_microbatch,
                          hbm_budget_bytes)
     l_n = phase.num_tasks
@@ -143,7 +146,8 @@ def plan_pipeline_stages(cfg: ModelConfig, n_stages: int, *,
                      batch_lock_events=batch_lock_events,
                      spec_window=spec_window, spec_mode=spec_mode,
                      async_mode=async_mode, latency=latency,
-                     gossip_timeout=gossip_timeout)
+                     gossip_timeout=gossip_timeout,
+                     quiesce_after=quiesce_after)
     return _stage_plan(phase, res, n_stages)
 
 
@@ -154,7 +158,8 @@ def plan_pipeline_stages_schedule(
         warm_start: bool = True, use_engine: bool = True,
         backend: str = "numpy",
         batch_lock_events: int = 1, spec_window: int = 1,
-        spec_mode: str = "scan") -> List[StagePlan]:
+        spec_mode: str = "scan",
+        quiesce_after: Optional[int] = None) -> List[StagePlan]:
     """Re-plan the stage split as the microbatch size changes (sequence-
     length curriculum, serving traffic shifts): one CCM phase per entry of
     ``tokens_schedule``, run through :func:`ccm_lb_pipeline` so step ``k+1``
@@ -173,6 +178,7 @@ def plan_pipeline_stages_schedule(
                            n_iter=4, fanout=min(4, n_stages - 1),
                            use_engine=use_engine, backend=backend,
                            batch_lock_events=batch_lock_events,
-                           spec_window=spec_window, spec_mode=spec_mode)
+                           spec_window=spec_window, spec_mode=spec_mode,
+                           quiesce_after=quiesce_after)
     return [_stage_plan(phase, run.result, n_stages)
             for phase, run in zip(phases, pipe.runs)]

@@ -70,7 +70,9 @@ def rebalance_sequences(costs: np.ndarray, n_ranks: int, *,
                         spec_mode: str = "scan",
                         async_mode: bool = False,
                         latency=0.0,
-                        gossip_timeout=None) -> SeqPackResult:
+                        gossip_timeout=None,
+                        quiesce_after: Optional[int] = None
+                        ) -> SeqPackResult:
     """costs: (n_seqs,) predicted step-time contribution per sequence.
 
     ``backend`` selects the engine's stage-2 scorer ("numpy"/"jit"/
@@ -79,7 +81,9 @@ def rebalance_sequences(costs: np.ndarray, n_ranks: int, *,
     stage 2 through the speculative compiled scan (core/spec.py).
     ``async_mode`` packs through the
     distributed event-loop simulator (``latency``/``gossip_timeout`` per
-    repro/core/async_sim.py; zero latency packs identically)."""
+    repro/core/async_sim.py; zero latency packs identically).
+    ``quiesce_after`` stops early after that many consecutive
+    zero-transfer iterations (repro/core/quiesce.py)."""
     k = costs.shape[0]
     phase = _seq_phase(costs, n_ranks, rank_speed, act_bytes, mem_cap)
     a0 = (np.arange(k) % n_ranks).astype(np.int64)
@@ -90,7 +94,8 @@ def rebalance_sequences(costs: np.ndarray, n_ranks: int, *,
                      batch_lock_events=batch_lock_events,
                      spec_window=spec_window, spec_mode=spec_mode,
                      async_mode=async_mode, latency=latency,
-                     gossip_timeout=gossip_timeout)
+                     gossip_timeout=gossip_timeout,
+                     quiesce_after=quiesce_after)
     return _seq_result(res)
 
 
@@ -101,7 +106,8 @@ def rebalance_sequences_stream(
         warm_start: bool = True, use_engine: bool = True,
         backend: str = "numpy",
         batch_lock_events: int = 1, spec_window: int = 1,
-        spec_mode: str = "scan") -> List[SeqPackResult]:
+        spec_mode: str = "scan",
+        quiesce_after: Optional[int] = None) -> List[SeqPackResult]:
     """Rebalance a STREAM of DP batches (one phase per step): slot ``i`` of
     batch ``k+1`` warm-starts on the rank slot ``i`` of batch ``k`` landed
     on — under steady length distributions the previous map is already
@@ -123,5 +129,6 @@ def rebalance_sequences_stream(
                            n_iter=n_iter, fanout=4, use_engine=use_engine,
                            backend=backend,
                            batch_lock_events=batch_lock_events,
-                           spec_window=spec_window, spec_mode=spec_mode)
+                           spec_window=spec_window, spec_mode=spec_mode,
+                           quiesce_after=quiesce_after)
     return [_seq_result(run.result) for run in pipe.runs]

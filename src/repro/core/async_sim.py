@@ -132,19 +132,21 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+from time import perf_counter
 from typing import Callable, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
 from repro.core.ccm import CCMState
 from repro.core.ccmlb import (CCMLBResult, ProtocolStats, build_work_lists,
-                              ccm_lb, execute_transfer, iteration_summaries,
-                              lock_release, lock_request, note_yield)
+                              ccm_lb, execute_transfer, lock_release,
+                              lock_request, note_yield)
 from repro.core.engine import PhaseEngine
-from repro.core.gossip import gossip_deliver, gossip_seed, pick_peers
+from repro.core.gossip import gossip_deliver, gossip_root_key, pick_peers
 from repro.core.locks import LockManager
 from repro.core.pipeline import warm_start_assignment
 from repro.core.problem import CCMParams, Phase
+from repro.core.quiesce import QuiesceTracker
 from repro.runtime.elastic import survivor_resize
 from repro.runtime.fault import RankDeath
 
@@ -444,52 +446,63 @@ class _Sim:
 
 
 def _run_gossip(sim: _Sim, summaries, info, *, k_rounds: int, fanout: int,
-                seed, deadline: Optional[float],
-                dead: frozenset = frozenset()) -> int:
-    """Stage 1a: the augmented-inform epidemic as latency-delayed messages.
+                seed=None, root_seeds: Optional[Dict[int, list]] = None,
+                deadline: Optional[float],
+                dead: frozenset = frozenset(),
+                stats: Optional[dict] = None) -> int:
+    """Stage 1a: the per-root augmented-inform epidemics as latency-
+    delayed messages.
 
-    Same message set, rng stream and merge/dedupe rule as the synchronous
-    ``build_peer_networks(seed=...)`` — at zero latency the heap pops in
-    creation order, which IS the synchronous round order, so the resulting
-    ``info`` maps are identical.  Nonzero latency permutes delivery (and
-    therefore the forward peer picks); a ``deadline`` drops deliveries
-    that arrive too late to inform this iteration's scoring — stale
-    gossip made observable.  ``dead`` ranks neither seed, forward, nor
-    receive (their deliveries vanish at the pop gate), so no dead rank's
-    summary ever enters a live work list.  Returns the number of
-    deadline-dropped deliveries.
+    Each live root floods exactly ``{root: summaries[root]}``, drawing
+    forward targets from its PRIVATE stream keyed ``root_seeds[root]``
+    (default ``gossip_root_key(seed, root)``) — the same keys, message
+    set and merge/dedupe rule as the synchronous ``build_peer_networks``.
+    At zero latency the heap delivers each root's messages in creation
+    order, which IS that root's synchronous BFS round order; roots never
+    share a stream, so however the roots' deliveries interleave, each
+    root's draws and dedupe decisions — and therefore the resulting
+    ``info`` maps — are identical to the sync epidemic's.  (This per-root
+    independence is also what lets the quiescence path replay a quiet
+    root's cached reach: see repro/core/gossip.py.)  Nonzero latency
+    permutes delivery (and therefore the forward peer picks within each
+    root's stream); a ``deadline`` drops deliveries that arrive too late
+    to inform this iteration's scoring — stale gossip made observable.
+    ``dead`` ranks neither seed, forward, nor receive (their deliveries
+    vanish at the pop gate), so no dead rank's summary ever enters a
+    live work list.  Returns the number of deadline-dropped deliveries.
     """
     n = len(summaries)
-    rng = np.random.default_rng(seed)
+    rngs: Dict[int, np.random.Generator] = {}
+    payloads: Dict[int, dict] = {}
     dropped = 0
     if k_rounds >= 1:
         for r in range(n):
             if r in dead:
                 continue
-            peers = pick_peers(rng, n, r, fanout, visited={r} | set(dead))
-            snap = dict(info[r])        # shared: payloads are read-only
-            for p in peers:
-                sim.send(GOSSIP, r, int(p),
-                         (1, frozenset([r]) | {int(p)}, snap))
+            key = (root_seeds[r] if root_seeds is not None
+                   else gossip_root_key(seed, r))
+            rngs[r] = np.random.default_rng(key)
+            payloads[r] = {r: summaries[r]}     # shared, read-only
+            for p in pick_peers(rngs[r], n, r, fanout,
+                                visited={r} | set(dead)):
+                sim.send(GOSSIP, r, int(p), (r, 1, frozenset([r, int(p)])))
     while sim.heap:
         ev = sim.pop()
         if ev is None:
             continue
         time, kind, src, dst, data = ev
         assert kind == GOSSIP
-        rnd, visited, payload = data
+        root, rnd, visited = data
         if deadline is not None and time > deadline:
             dropped += 1                # arrived stale: no merge, no forward
             continue
-        if not gossip_deliver(info[dst], payload):
-            continue
+        if not gossip_deliver(info[dst], payloads[root], stats):
+            continue                    # dedupe: no forward
         if rnd < k_rounds:
-            peers = pick_peers(rng, n, dst, fanout,
-                               visited=set(visited) | set(dead))
-            snap = dict(info[dst])
-            for p in peers:
+            for p in pick_peers(rngs[root], n, dst, fanout,
+                                visited=set(visited) | set(dead)):
                 sim.send(GOSSIP, dst, int(p),
-                         (rnd + 1, frozenset(visited) | {int(p)}, snap))
+                         (root, rnd + 1, frozenset(visited) | {int(p)}))
     return dropped
 
 
@@ -768,7 +781,9 @@ def ccm_lb_async(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
                  collect_trace: bool = False,
                  max_events: Optional[int] = None,
                  on_event=None,
-                 fault: Optional[FaultSpec] = None) -> CCMLBResult:
+                 fault: Optional[FaultSpec] = None,
+                 quiesce_after: Optional[int] = None,
+                 profile: bool = False) -> CCMLBResult:
     """CCM-LB through the asynchronous event-loop driver.
 
     Same optimization knobs as :func:`repro.core.ccmlb.ccm_lb` (engine /
@@ -795,6 +810,21 @@ def ccm_lb_async(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
                         raises :class:`repro.runtime.fault.RankDeath`;
                         exceeding the event budget raises
                         :class:`LivelockError` carrying partial stats.
+    ``quiesce_after``   stop after this many consecutive zero-transfer
+                        iterations (same early-termination knob as the
+                        sync driver; ``None`` runs all ``n_iter``).
+    ``profile``         record per-iteration host-side stage timings into
+                        ``CCMLBResult.stage_timings`` (stage-2 scoring
+                        and commit time accumulate under "score" /
+                        "commit" as grants execute).
+
+    The same :class:`~repro.core.quiesce.QuiesceTracker` that amortizes
+    the sync driver runs here too: summaries are patched for dirty ranks
+    only (``incremental=True``), per-root gossip streams are keyed by the
+    tracker's epochs, and failed exact evaluations are memoized against
+    the state version.  Work lists are always rebuilt in full — the async
+    info maps are latency-dependent, so the sync driver's cached-list
+    replay does not apply.
 
     Iterations stay globally synchronized (the paper's outer loop);
     asynchrony lives inside each iteration's gossip and lock/transfer
@@ -804,6 +834,8 @@ def ccm_lb_async(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
     one exactly — crash-recovery migrations included (they are also
     listed separately in ``recovery_log``).
     """
+    if quiesce_after is not None and quiesce_after < 1:
+        raise ValueError("quiesce_after must be >= 1 (or None)")
     f: Optional[_FaultCtx] = None
     if fault is not None and fault.active():
         fault.validate(phase.num_ranks, n_iter)
@@ -811,20 +843,28 @@ def ccm_lb_async(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
     state = CCMState.build(phase, assignment, params, csr=csr)
     engine = (PhaseEngine(state, backend=backend, incremental=incremental)
               if use_engine else None)
+    tracker = QuiesceTracker(state, engine, params, seed=seed,
+                             k_rounds=k_rounds, fanout=fanout,
+                             max_clusters_per_rank=max_clusters_per_rank,
+                             caching=incremental)
     transfer_log: list = []
     recovery_log: list = []
     state.add_transfer_listener(
         lambda t, a, b: transfer_log.append(
             (tuple(int(x) for x in t), int(a), int(b))))
+    state.add_transfer_listener(tracker.note_transfer)
 
     latency_fn = make_latency(latency)
     rng_lat = np.random.default_rng([seed, 0x51D])   # latency-draw stream
     if max_events is None:
-        # DECIDEs are spin-capped, each spawns <= 3 protocol messages,
-        # gossip is <= n * fanout**k_rounds per iteration; x8 headroom
+        # DECIDEs are spin-capped, each spawns <= 3 protocol messages;
+        # each of the n per-root epidemics delivers <= fanout messages per
+        # reached rank per round, geometric in fanout over k_rounds;
+        # x8 headroom
         max_events = 8 * n_iter * (
             4 * (50 * phase.num_ranks + 1000)
-            + phase.num_ranks * max(fanout, 1) ** max(k_rounds, 1))
+            + phase.num_ranks * (1 + max(fanout, 1))
+            * max(fanout, 1) ** max(k_rounds, 1))
         if f is not None:
             # timeout aborts, retries, duplicates and pause re-deliveries
             # legitimately need more than the polite-network budget
@@ -832,7 +872,11 @@ def ccm_lb_async(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
     trace: Optional[list] = [] if collect_trace else None
     sim = _Sim(latency_fn, rng_lat, max_events, trace, fault=f)
     stats = ProtocolStats()
+    stats.memo = tracker.memo if tracker.caching else None
     gossip_dropped = 0
+    iter_transfers: List[int] = []
+    stage_timings: List[dict] = []
+    quiet = 0
 
     trace_max = [state.max_work()]
     trace_tot = [state.total_work()]
@@ -841,21 +885,37 @@ def ccm_lb_async(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
     it = 0
     try:
         for it in range(n_iter):
-            clusters, summaries = iteration_summaries(state, phase,
-                                                      max_clusters_per_rank)
+            tm = None
+            if profile:
+                tm = {"clusters": 0.0, "gossip": 0.0, "work_lists": 0.0,
+                      "score": 0.0, "commit": 0.0}
+                stats.timings = tm
+            tracker.begin_iteration(it)
+            t0 = perf_counter() if profile else 0.0
+            clusters, summaries = tracker.update_summaries()
+            if profile:
+                tm["clusters"] = perf_counter() - t0
+                t0 = perf_counter()
             info = {r: {r: summaries[r]} for r in range(phase.num_ranks)}
             deadline = (None if gossip_timeout is None
                         else sim.now + gossip_timeout)
             dead_now = frozenset(f.dead) if f is not None else frozenset()
             gossip_dropped += _run_gossip(
                 sim, summaries, info, k_rounds=k_rounds, fanout=fanout,
-                seed=gossip_seed(seed, it), deadline=deadline,
-                dead=dead_now)
+                root_seeds={r: tracker.root_key(r)
+                            for r in range(phase.num_ranks)},
+                deadline=deadline, dead=dead_now, stats=tracker.counters)
+            if profile:
+                tm["gossip"] = perf_counter() - t0
+                t0 = perf_counter()
             work_lists = build_work_lists(phase, summaries, info, params,
                                           engine)
+            if profile:
+                tm["work_lists"] = perf_counter() - t0
             locks = LockManager(phase.num_ranks)
             if f is not None:
                 f.register_iteration(it, sim)
+            before = stats.transfers
             _run_stage2(sim, phase, state, clusters, work_lists, engine,
                         locks, stats, max_candidates=max_candidates,
                         max_clusters_per_rank=max_clusters_per_rank,
@@ -863,16 +923,26 @@ def ccm_lb_async(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
                         fault=f)
             if f is not None and f.dead - f.recovered:
                 _recover_survivors(phase, state, f, recovery_log)
+            iter_transfers.append(stats.transfers - before)
+            tracker.end_iteration()
+            if profile:
+                stage_timings.append(tm)
 
             trace_max.append(state.max_work())
             trace_tot.append(state.total_work())
             trace_imb.append(state.imbalance())
+            if quiesce_after is not None:
+                quiet = quiet + 1 if iter_transfers[-1] == 0 else 0
+                if quiet >= quiesce_after:
+                    break
     except LivelockError as e:
         # attach the partial accounting so sweeps can report WHY
         e.stats = stats
         e.fault_stats = f.stats if f is not None else None
         e.iteration = it
         raise
+    finally:
+        state.remove_transfer_listener(tracker.note_transfer)
 
     return CCMLBResult(state.assignment.copy(), state, trace_max, trace_tot,
                        trace_imb, stats.transfers, stats.conflicts,
@@ -888,7 +958,14 @@ def ccm_lb_async(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
                        recovery_log=(recovery_log if f is not None
                                      else None),
                        dead_ranks=(sorted(f.dead) if f is not None
-                                   else None))
+                                   else None),
+                       iter_transfers=iter_transfers,
+                       stage_timings=stage_timings if profile else None,
+                       quiesce_counters=tracker.iter_counters,
+                       memo_hits=stats.memo_hits,
+                       gossip_noop_merges=tracker.counters.get(
+                           "gossip_noop_merges", 0),
+                       tracker=tracker)
 
 
 def run_ccm_lb(phase, a0, params, *, async_mode: bool = False, latency=0.0,

@@ -102,6 +102,10 @@ class CCMState:
         # was garbage-collected (see add_transfer_listener).
         self._transfer_listeners: List[Callable[
             [], Optional[TransferListener]]] = []
+        # per-rank task counts: lets apply_transfer keep mem_overhead_max
+        # exact without a full `assignment == r` scan per commit
+        self.task_count = np.bincount(self.assignment,
+                                      minlength=ph.num_ranks).astype(np.int64)
         present = self.block_count > 0                     # (I, N)
         off_home = present.copy()
         off_home[ph.block_home, np.arange(ph.num_blocks)] = False
@@ -125,13 +129,16 @@ class CCMState:
 
     def remove_transfer_listener(self, cb: TransferListener) -> None:
         """Detach a listener previously registered with
-        :meth:`add_transfer_listener`, matched by identity through the
-        resolver entries (weak bound-method entries match their referent).
-        Unknown callbacks are a no-op; already-collected entries are pruned
-        on the way through."""
+        :meth:`add_transfer_listener`, matched by equality through the
+        resolver entries.  Equality (not identity) because accessing a
+        bound method creates a fresh object each time — ``obj.m is obj.m``
+        is False while ``obj.m == obj.m`` compares the underlying
+        (receiver, function) pair; plain functions compare by identity
+        either way.  Unknown callbacks are a no-op; already-collected
+        entries are pruned on the way through."""
         self._transfer_listeners = [
             e for e in self._transfer_listeners
-            if e() is not None and e() is not cb]
+            if e() is not None and e() != cb]
 
     def retarget(self, phase: Phase, params: CCMParams) -> None:
         """Re-bind this state to a NEW phase with the same adjacency
@@ -162,6 +169,10 @@ class CCMState:
         self.params = params
         self.version += 1
         self._work_cache.clear()
+        # the heavy-edge threshold cache is keyed on quantile but derived
+        # from phase.comm_vol — a drifted phase must not reuse it
+        if getattr(self, "_quantile_cache", None) is not None:
+            self._quantile_cache.clear()
         load = np.bincount(a, weights=phase.task_load, minlength=i_n)
         if phase.rank_speed is not None:
             load = load / 1.0  # mirror build(): speed applied at W() time
@@ -291,11 +302,25 @@ class CCMState:
         moved_mem = ph.task_mem[tasks].sum()
         self.mem_task[r_from] -= moved_mem
         self.mem_task[r_to] += moved_mem
-        # overhead maxima (cheap exact recompute for the two ranks)
-        for r in (r_from, r_to):
-            sel = self.assignment == r
-            self.mem_overhead_max[r] = (
-                ph.task_overhead[sel].max() if sel.any() else 0.0)
+        # overhead maxima: exact incremental update.  The receiving max
+        # only grows (toward the moved max); the sender needs a rescan
+        # only when the departing set could have held its maximum —
+        # float max has no rounding, so the rescan-on-demand value is
+        # bitwise what the old full `assignment == r` scans computed.
+        k = int(tasks.size)
+        mo = float(ph.task_overhead[tasks].max()) if k else 0.0
+        old_from = float(self.mem_overhead_max[r_from])
+        if self.task_count[r_to] == 0:
+            self.mem_overhead_max[r_to] = mo
+        elif mo > self.mem_overhead_max[r_to]:
+            self.mem_overhead_max[r_to] = mo
+        self.task_count[r_from] -= k
+        self.task_count[r_to] += k
+        if self.task_count[r_from] == 0:
+            self.mem_overhead_max[r_from] = 0.0
+        elif k and mo >= old_from:
+            self.mem_overhead_max[r_from] = \
+                ph.task_overhead[self.assignment == r_from].max()
         if self._transfer_listeners:
             dead = False
             for entry in self._transfer_listeners:

@@ -97,6 +97,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
+from time import perf_counter
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -109,6 +110,7 @@ from repro.core.engine import (ExchangeEvent, PhaseEngine, batch_peer_diffs,
 from repro.core.gossip import build_peer_networks, gossip_seed
 from repro.core.locks import LockManager
 from repro.core.problem import CCMParams, Phase, same_topology
+from repro.core.quiesce import QuiesceTracker, phase_values_equal
 from repro.core.spec import SpecInstance, event_sequence, run_spec
 from repro.core.transfer import (approx_best_diff, select_best,
                                  shortlist_pairs, try_transfer)
@@ -155,6 +157,17 @@ class CCMLBResult:
     # result (ccm_lb_pipeline carry_engine=True) instead of built fresh
     engine: Optional[PhaseEngine] = None
     engine_carried: bool = False
+    # quiescence observability (repro/core/quiesce.py): per-iteration
+    # transfer counts, optional per-iteration stage timing dicts
+    # (``profile=True``), cumulative tracker-counter snapshots, and the
+    # live tracker itself (carried alongside the engine by
+    # ``ccm_lb(carry=...)`` so quiet phases stay amortized)
+    iter_transfers: Optional[List[int]] = None
+    stage_timings: Optional[List[dict]] = None
+    quiesce_counters: Optional[List[dict]] = None
+    memo_hits: int = 0
+    gossip_noop_merges: int = 0
+    tracker: Optional[QuiesceTracker] = None
 
 
 @dataclasses.dataclass
@@ -187,6 +200,20 @@ class ProtocolStats:
     # speculative-scan counters (core/spec.py; zero on the other drivers)
     spec_rollbacks: int = 0
     spec_windows: int = 0
+    # failed-evaluation memo (repro/core/quiesce.py): (r, p) -> the
+    # ``state.version`` at which the pair's exact evaluation last failed.
+    # A hit at the CURRENT version proves nothing has mutated since, so
+    # the evaluation is skipped — bitwise-neutral, because the skipped
+    # path's only effect would be returning False again.  ``None`` (the
+    # rebuild reference and the scalar path) disables the memo.  The
+    # lock dance is NEVER skipped: the memo is consulted only after the
+    # grant, so conflict/yield/grant-chain patterns are unchanged.
+    memo: Optional[Dict[tuple, int]] = None
+    memo_hits: int = 0
+    # per-iteration stage-timing dict (``ccm_lb(profile=True)``): the
+    # stage-2 drivers split their time into "score" (exact evaluation)
+    # and "commit" (state mutation + cluster rebuild) buckets
+    timings: Optional[dict] = None
     # target -> current consecutive queue-handoff count (internal)
     _chain_run: Dict[int, int] = dataclasses.field(default_factory=dict)
 
@@ -238,13 +265,31 @@ def execute_transfer(state, clusters, engine, stats: ProtocolStats, r: int,
                      max_clusters_per_rank) -> bool:
     """Fig. 1 lines 46–48 (recvUpdate / TryTransfer / sendUpdate): exact
     evaluation with fresh info, execute the best positive exchange, rebuild
-    the two touched ranks' clusters.  Returns True iff a transfer ran."""
+    the two touched ranks' clusters.  Returns True iff a transfer ran.
+
+    ``stats.memo`` (when enabled) short-circuits a pair whose exact
+    evaluation already failed at the current ``state.version`` — the
+    dominant cost of a converged iteration, where every candidate scores
+    positive on stale info and fails the fresh-info evaluation again."""
+    memo = stats.memo
+    if memo is not None and memo.get((r, p)) == state.version:
+        stats.memo_hits += 1
+        return False
+    tm = stats.timings
+    t0 = perf_counter() if tm is not None else 0.0
     best = try_transfer(state, clusters[r], clusters[p], r, p,
                         max_candidates, engine=engine)
+    if tm is not None:
+        tm["score"] += perf_counter() - t0
     if best is None:
+        if memo is not None:
+            memo[(r, p)] = state.version
         return False
     stats.transfers += 1
+    t0 = perf_counter() if tm is not None else 0.0
     _rebuild_local(state, clusters, engine, max_clusters_per_rank, r, p)
+    if tm is not None:
+        tm["commit"] += perf_counter() - t0
     return True
 
 
@@ -308,11 +353,27 @@ def ccm_lb(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
            batch_lock_events: int = 1, incremental: bool = True,
            csr=None, spec_window: int = 1, spec_mode: str = "scan",
            spec_fill: str = "disjoint", spec_trace: bool = False,
-           carry=None) -> CCMLBResult:
+           carry=None, quiesce_after: Optional[int] = None,
+           profile: bool = False) -> CCMLBResult:
     """``incremental`` keeps the engine's per-rank segments current via the
     transfer hook (default; ``False`` re-gathers per event — the rebuild
     reference).  ``csr`` is an optional prebuilt ``PhaseCSR`` for this
     phase's topology (multi-phase pipelines amortize it).
+
+    ``incremental`` also enables the quiescence caches
+    (repro/core/quiesce.py): dirty-rank gossip replay, patched cluster/
+    rank summaries and summary tables, cached sorted work lists, and the
+    failed-evaluation memo — bitwise-identical trajectories to the
+    ``incremental=False`` rebuild reference (tests/test_quiesce.py), with
+    converged iterations costing O(dirty ranks) instead of
+    O(ranks + tasks + edges).
+
+    ``quiesce_after=k`` stops the iteration loop after ``k`` consecutive
+    zero-transfer iterations (the paper's algorithm converges in a
+    handful of iterations and then only confirms quiescence); ``None``
+    (default) always runs ``n_iter``.  ``profile=True`` records a
+    per-iteration host-cost breakdown (clusters / gossip / work_lists /
+    score / commit seconds) in ``CCMLBResult.stage_timings``.
 
     ``spec_window > 1`` routes stage 2 through the speculative-scan driver
     (core/spec.py): windows of up to ``spec_window`` lock events score in
@@ -346,7 +407,9 @@ def ccm_lb(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
     if spec_window > 1 and batch_lock_events > 1:
         raise ValueError("spec_window and batch_lock_events are mutually "
                          "exclusive stage-2 drivers")
-    state = engine = None
+    if quiesce_after is not None and quiesce_after < 1:
+        raise ValueError("quiesce_after must be >= 1 (or None)")
+    state = engine = tracker = None
     engine_carried = False
     if carry is not None:
         cstate = getattr(carry, "state", None)
@@ -358,34 +421,79 @@ def ccm_lb(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
                 and np.array_equal(cstate.assignment,
                                    np.asarray(assignment, np.int64))
                 and same_topology(cstate.phase, phase)):
+            old_phase, old_params = cstate.phase, cstate.params
             cstate.retarget(phase, params)
             state, engine, engine_carried = cstate, cengine, True
+            ctracker = getattr(carry, "tracker", None)
+            if (ctracker is not None and ctracker.state is state
+                    and ctracker.engine is engine
+                    and ctracker.k_rounds == k_rounds
+                    and ctracker.fanout == fanout
+                    and ctracker.mcpr == max_clusters_per_rank
+                    and ctracker.caching == bool(incremental)):
+                # caches stay bitwise-valid only when the new phase's
+                # value arrays and params equal the old ones (then the
+                # carried summaries/reach sets are exactly what a fresh
+                # build computes); otherwise the rebind resets to
+                # all-dirty.  Epochs restart at 0 either way — identical
+                # to a fresh run, which is the pipeline parity contract.
+                ctracker.rebind(seed=seed, params=params,
+                                keep=(old_params == params
+                                      and phase_values_equal(old_phase,
+                                                             phase)))
+                tracker = ctracker
     if state is None:
         state = CCMState.build(phase, assignment, params, csr=csr)
         engine = (PhaseEngine(state, backend=backend,
                               incremental=incremental)
                   if use_engine else None)
+    if tracker is None:
+        tracker = QuiesceTracker(state, engine, params, seed=seed,
+                                 k_rounds=k_rounds, fanout=fanout,
+                                 max_clusters_per_rank=max_clusters_per_rank,
+                                 caching=incremental)
     transfer_log: list = []
 
     def _log_cb(t, a, b):
         transfer_log.append((tuple(int(x) for x in t), int(a), int(b)))
 
     state.add_transfer_listener(_log_cb)
+    state.add_transfer_listener(tracker.note_transfer)
     trace_max = [state.max_work()]
     trace_tot = [state.total_work()]
     trace_imb = [state.imbalance()]
     stats = ProtocolStats()
+    stats.memo = tracker.memo if tracker.caching else None
     strace: Optional[list] = [] if spec_trace else None
+    stage_timings: Optional[List[dict]] = [] if profile else None
+    iter_transfers: List[int] = []
+    quiet = 0
 
     try:
         for it in range(n_iter):
-            clusters, summaries = iteration_summaries(state, phase,
-                                                      max_clusters_per_rank)
-            info = build_peer_networks(summaries, k_rounds=k_rounds,
-                                       fanout=fanout,
-                                       seed=gossip_seed(seed, it))
-            work_lists = build_work_lists(phase, summaries, info, params,
-                                          engine)
+            tm = ({"clusters": 0.0, "gossip": 0.0, "work_lists": 0.0,
+                   "score": 0.0, "commit": 0.0} if profile else None)
+            stats.timings = tm
+            tracker.begin_iteration(it)
+            t0 = perf_counter() if profile else 0.0
+            clusters, summaries = tracker.update_summaries()
+            if profile:
+                t1 = perf_counter()
+                tm["clusters"] = t1 - t0
+                t0 = t1
+            info = tracker.update_gossip()
+            if profile:
+                t1 = perf_counter()
+                tm["gossip"] = t1 - t0
+                t0 = t1
+            if tracker.caching:
+                work_lists = tracker.update_work_lists(info)
+            else:
+                work_lists = build_work_lists(phase, summaries, info, params,
+                                              engine)
+            if profile:
+                tm["work_lists"] = perf_counter() - t0
+            before = stats.transfers
 
             # stage 2: lock/transfer event loop
             if spec_window > 1:
@@ -401,13 +509,25 @@ def ccm_lb(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
                 _stage2(phase, state, clusters, work_lists, engine,
                         max_candidates, max_clusters_per_rank, stats)
 
+            delta = stats.transfers - before
+            iter_transfers.append(delta)
+            tracker.end_iteration()
             trace_max.append(state.max_work())
             trace_tot.append(state.total_work())
             trace_imb.append(state.imbalance())
+            if profile:
+                stage_timings.append(tm)
+            if quiesce_after is not None:
+                quiet = quiet + 1 if delta == 0 else 0
+                if quiet >= quiesce_after:
+                    break
     finally:
         # a carried state outlives this run — the log listener must not
-        # keep appending into a dead list on the next phase's transfers
+        # keep appending into a dead list on the next phase's transfers,
+        # and the tracker must not double-fire once the next phase
+        # re-registers it (ccm_lb(carry=...) re-adds the carried one)
         state.remove_transfer_listener(_log_cb)
+        state.remove_transfer_listener(tracker.note_transfer)
 
     return CCMLBResult(state.assignment.copy(), state, trace_max, trace_tot,
                        trace_imb, stats.transfers, stats.conflicts,
@@ -418,7 +538,14 @@ def ccm_lb(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
                        spec_rollbacks=stats.spec_rollbacks,
                        spec_windows=stats.spec_windows,
                        spec_trace=strace, engine=engine,
-                       engine_carried=engine_carried)
+                       engine_carried=engine_carried,
+                       iter_transfers=iter_transfers,
+                       stage_timings=stage_timings,
+                       quiesce_counters=tracker.iter_counters,
+                       memo_hits=stats.memo_hits,
+                       gossip_noop_merges=tracker.counters.get(
+                           "gossip_noop_merges", 0),
+                       tracker=tracker)
 
 
 def _stage2_spec(phase, state, clusters, work_lists, engine, max_candidates,
@@ -543,21 +670,57 @@ def _stage2_batched(phase, state, clusters, work_lists, engine,
     def flush():
         if not pending:
             return
+        tm = stats.timings
+        t0 = perf_counter() if tm is not None else 0.0
         results = engine.batch_exchange_eval_multi([
             ExchangeEvent(e.r, e.p, e.cand_a, e.cand_b, e.pairs,
                           e.agg_a, e.agg_b) for e in pending])
+        if tm is not None:
+            t1 = perf_counter()
+            tm["score"] += t1 - t0
+            t0 = t1
+        # commit bookkeeping is batched: swaps run per event in original
+        # order (their float accumulation order is load-bearing), the
+        # cluster rebuilds fold into ONE build_clusters call over all
+        # touched ranks.  Valid because the flushed events are pairwise
+        # rank-disjoint and nothing reads the cluster lists before the
+        # flush returns; bitwise because build_clusters is per-rank local
+        # (same labels, caps and thresholds either way).
+        touched: List[int] = []
         for e, (wa, wb, feas) in zip(pending, results):
             best = select_best(e.cand_a, e.cand_b, e.pairs, wa, wb, feas,
                                e.w_before)
             if best is not None:
                 state.swap(best.tasks_ab, e.r, best.tasks_ba, e.p)
                 stats.transfers += 1
-                _rebuild_local(state, clusters, engine,
-                               max_clusters_per_rank, e.r, e.p)
+                touched.extend((e.r, e.p))
+            elif stats.memo is not None:
+                # record at the current version — exactly what the
+                # sequential path would have recorded at this event's
+                # turn (earlier flush commits already bumped it)
+                stats.memo[(e.r, e.p)] = state.version
+        if touched:
+            rt = (engine.rank_tasks
+                  if engine is not None and engine.incremental else None)
+            local = build_clusters(state,
+                                   max_clusters_per_rank=max_clusters_per_rank,
+                                   only_ranks=touched, rank_tasks=rt)
+            for r in touched:
+                clusters[r] = local[r]
+        if tm is not None:
+            tm["commit"] += perf_counter() - t0
         pending.clear()
         busy.clear()
 
     def defer(r, p):
+        # the memo short-circuit mirrors execute_transfer's: a pair whose
+        # evaluation failed at the current version cannot succeed now
+        # (pending deferred events haven't mutated anything yet), so the
+        # event is dropped without joining the batch — the sequential
+        # path returns the same False
+        if stats.memo is not None and stats.memo.get((r, p)) == state.version:
+            stats.memo_hits += 1
+            return
         # capture candidates/shortlist now (invariant under the other
         # deferred events' transfers — disjoint ranks), score at flush
         cand_a, cand_b, pairs, agg_a, agg_b = shortlist_pairs(

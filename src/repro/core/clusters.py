@@ -308,11 +308,20 @@ def _split_by_load(tasks: np.ndarray, loads: np.ndarray,
 
 
 def summarize_clusters(state: CCMState,
-                       clusters: Dict[int, List[np.ndarray]]
+                       clusters: Dict[int, List[np.ndarray]],
+                       eids: Optional[np.ndarray] = None
                        ) -> Dict[int, List[ClusterSummary]]:
     """Cluster inform payloads, with the intra/external comm volumes of ALL
     clusters computed in one labelled pass over the edge list (the seed
-    rebuilt an O(num_tasks) membership mask per cluster)."""
+    rebuilt an O(num_tasks) membership mask per cluster).
+
+    ``eids``: optional ascending unique edge-id subset to scan instead of
+    the full edge list — the amortized prologue (repro/core/quiesce.py)
+    passes the edges incident to the dirty ranks' tasks.  Bitwise-exact
+    for any ``clusters`` whose member tasks' incident edges are all in
+    ``eids``: every edge contributing to a given cluster's bucket appears
+    in the same relative order as in the full pass, so the bincount
+    partial sums accumulate identically."""
     ph = state.phase
     flat: List[Tuple[int, int, np.ndarray]] = [
         (r, ci, tasks) for r, cls in clusters.items()
@@ -321,18 +330,25 @@ def summarize_clusters(state: CCMState,
     gids = np.full(ph.num_tasks, -1, np.int64)
     for gid, (_, _, tasks) in enumerate(flat):
         gids[tasks] = gid
+    if eids is None:
+        e_src, e_dst, e_vol = ph.comm_src, ph.comm_dst, ph.comm_vol
+        n_edges = ph.num_comms
+    else:
+        e_src, e_dst = ph.comm_src[eids], ph.comm_dst[eids]
+        e_vol = ph.comm_vol[eids]
+        n_edges = eids.shape[0]
     vol_intra = np.zeros(n)
     vol_ext = np.zeros(n)
-    if n and ph.num_comms:
-        ls, ld = gids[ph.comm_src], gids[ph.comm_dst]
+    if n and n_edges:
+        ls, ld = gids[e_src], gids[e_dst]
         intra = (ls == ld) & (ls >= 0)
-        vol_intra = np.bincount(ls[intra], weights=ph.comm_vol[intra],
+        vol_intra = np.bincount(ls[intra], weights=e_vol[intra],
                                 minlength=n)
         cut = ls != ld
         m = cut & (ls >= 0)
-        vol_ext = np.bincount(ls[m], weights=ph.comm_vol[m], minlength=n)
+        vol_ext = np.bincount(ls[m], weights=e_vol[m], minlength=n)
         m = cut & (ld >= 0)
-        vol_ext = vol_ext + np.bincount(ld[m], weights=ph.comm_vol[m],
+        vol_ext = vol_ext + np.bincount(ld[m], weights=e_vol[m],
                                         minlength=n)
     out: Dict[int, List[ClusterSummary]] = {r: [] for r in clusters}
     for gid, (r, ci, tasks) in enumerate(flat):

@@ -21,17 +21,19 @@ amortizations stack on top of the shared launches:
     ``("spec", mode, W, ...)`` shape bucket, so the fleet compiles exactly
     once no matter how many instances run (the benchmark records
     ``trace_count`` to pin this down);
-  * **quiet-iteration reuse** — an instance whose state version did not
-    change since its last prologue reuses its clusters/summaries AND its
-    per-``(r, p, version)`` speculative captures (:class:`SpecInstance`
-    ``cache``) verbatim.  Converged instances — the steady state of a
-    fleet, where most iterations transfer nothing — re-score repeated
-    events for the cost of a dict hit and a buffer fill.  Both reuses are
-    value-exact: the reused objects are deterministic functions of an
-    unchanged state, and the cache is cleared whenever a fresh prologue
-    rebuilds the cluster lists (entries capture cluster-derived
-    shortlists, so they may only outlive the exact lists they were built
-    from).
+  * **quiet-iteration reuse** — each instance owns a
+    :class:`~repro.core.quiesce.QuiesceTracker` (the same amortization
+    layer the solo drivers run): clusters/summaries are patched for
+    dirty ranks only, quiet gossip roots replay their cached epidemic
+    reach, and work lists re-score only ranks whose info maps changed.
+    Converged instances — the steady state of a fleet, where most
+    iterations transfer nothing — pay a small constant per iteration,
+    and their per-``(r, p, version)`` speculative captures
+    (:class:`SpecInstance` ``cache``) re-score repeated events for the
+    cost of a dict hit and a buffer fill.  Both reuses are value-exact:
+    the reused objects are deterministic functions of an unchanged
+    state, and every mutation bumps the state version, so stale
+    speculative captures are simply never looked up again.
 
 Parity contract: per-instance results are IDENTICAL (assignment and
 transfer log) to solo ``ccm_lb(phase_i, a_i, params, seed=seeds[i], ...)``
@@ -49,11 +51,10 @@ from typing import List, Optional, Sequence
 import numpy as np
 
 from repro.core.ccm import CCMState
-from repro.core.ccmlb import (CCMLBResult, ProtocolStats, _rebuild_local,
-                              build_work_lists, iteration_summaries)
+from repro.core.ccmlb import CCMLBResult, ProtocolStats, _rebuild_local
 from repro.core.engine import PhaseEngine
-from repro.core.gossip import build_peer_networks, gossip_seed
 from repro.core.problem import CCMParams, Phase
+from repro.core.quiesce import QuiesceTracker
 from repro.core.spec import SpecInstance, event_sequence, run_spec
 
 __all__ = ["ccm_lb_many"]
@@ -113,13 +114,14 @@ def ccm_lb_many(phases: Sequence[Phase],
 
     states: List[CCMState] = []
     engines: List[PhaseEngine] = []
+    trackers: List[QuiesceTracker] = []
     logs: List[list] = []
     cbs: List[object] = []
     stats: List[ProtocolStats] = []
     straces: List[Optional[list]] = []
+    # speculative captures are keyed (r, p, state.version): any mutation
+    # bumps the version, so stale entries are unreachable — no clearing
     caches: List[dict] = [dict() for _ in range(n)]
-    # i -> (state version at build time, clusters, summaries)
-    prologue: List[Optional[tuple]] = [None] * n
     t_max: List[List[float]] = []
     t_tot: List[List[float]] = []
     t_imb: List[List[float]] = []
@@ -127,9 +129,13 @@ def ccm_lb_many(phases: Sequence[Phase],
         st = CCMState.build(phases[i], assignments[i], params, csr=csrs[i])
         states.append(st)
         engines.append(PhaseEngine(st, backend=backend, incremental=True))
+        trackers.append(QuiesceTracker(
+            st, engines[i], params, seed=seeds[i], k_rounds=k_rounds,
+            fanout=fanout, max_clusters_per_rank=max_clusters_per_rank))
         log: list = []
         cb = _mk_log(log)
         st.add_transfer_listener(cb)
+        st.add_transfer_listener(trackers[i].note_transfer)
         logs.append(log)
         cbs.append(cb)
         stats.append(ProtocolStats())
@@ -143,19 +149,11 @@ def ccm_lb_many(phases: Sequence[Phase],
             insts: List[SpecInstance] = []
             for i in range(n):
                 st = states[i]
-                cached = prologue[i]
-                if cached is not None and cached[0] == st.version:
-                    clusters, summaries = cached[1], cached[2]
-                else:
-                    clusters, summaries = iteration_summaries(
-                        st, phases[i], max_clusters_per_rank)
-                    prologue[i] = (st.version, clusters, summaries)
-                    caches[i].clear()   # entries captured OLD cluster lists
-                info = build_peer_networks(summaries, k_rounds=k_rounds,
-                                           fanout=fanout,
-                                           seed=gossip_seed(seeds[i], it))
-                work_lists = build_work_lists(phases[i], summaries, info,
-                                              params, engines[i])
+                tr = trackers[i]
+                tr.begin_iteration(it)
+                clusters, summaries = tr.update_summaries()
+                info = tr.update_gossip()
+                work_lists = tr.update_work_lists(info)
                 seq = event_sequence(phases[i].num_ranks, work_lists)
                 if seq:
                     insts.append(SpecInstance(
@@ -168,12 +166,14 @@ def ccm_lb_many(phases: Sequence[Phase],
             if insts:
                 run_spec(insts, params, window=win, mode=mode)
             for i in range(n):
+                trackers[i].end_iteration()
                 t_max[i].append(states[i].max_work())
                 t_tot[i].append(states[i].total_work())
                 t_imb[i].append(states[i].imbalance())
     finally:
-        for st, cb in zip(states, cbs):
-            st.remove_transfer_listener(cb)
+        for i in range(n):
+            states[i].remove_transfer_listener(cbs[i])
+            states[i].remove_transfer_listener(trackers[i].note_transfer)
 
     return [CCMLBResult(states[i].assignment.copy(), states[i], t_max[i],
                         t_tot[i], t_imb[i], stats[i].transfers,

@@ -1,35 +1,46 @@
 """Augmented inform stage (paper §IV-A, Fig. 1 BuildPeerNetwork).
 
-Epidemic propagation: over ``k_rounds`` asynchronous rounds each rank sends
-its accumulated ``info_known`` to ``fanout`` randomly selected peers; a
-recipient merges the payload and, if the message's round is below k_rounds,
-forwards to ``fanout`` peers the message has not visited.
+Epidemic propagation: each rank ROOTS one epidemic that floods its own
+``RankSummary`` (rank info + cluster summaries — the augmentation over
+load-only gossip [22] that CCM requires) over ``k_rounds`` rounds of
+``fanout`` randomly selected peers.  A recipient that learns the root's
+summary forwards the message; one that already knows it drops it (dedupe:
+the delivery cannot change the destination's knowledge).
 
-This is a deterministic discrete-event simulation of R ranks: messages sent
-in round k are delivered at round k+1; randomness is seeded per
-(iteration, rank, message) so runs are reproducible.  Payload entries are
-``RankSummary`` objects (rank info + cluster summaries) — the augmentation
-over load-only gossip [22] that CCM requires.
+**Per-root streams.**  Every root draws its forward targets from its OWN
+``default_rng`` stream, keyed ``[seed, iteration, root]`` via
+:func:`gossip_root_key` (SeedSequence mixes the tuple, so distinct keys
+give distinct, collision-free streams).  Because roots never share a
+stream, one root's epidemic is completely independent of every other's —
+this is what makes the amortized ("quiescence") path possible: a rank
+whose summary did not change since iteration ``e`` keeps the key
+``[seed, e, root]``, so its epidemic is *bitwise the same draw* whether it
+is re-run from scratch (the rebuild reference) or replayed from a cached
+reach set (:func:`update_peer_networks`).  Only roots whose summary
+actually changed advance their iteration stamp and re-draw.
 
-Delivery dedupe: the message count grows roughly ``fanout**k_rounds`` and
-most late-round deliveries carry only already-known summaries.  A delivery
-whose payload keys are a subset of the destination's ``info_known`` is
-dropped (no merge, no forward) — it cannot change the destination's
-knowledge, and any forward it would have generated carries exactly the
-destination's current knowledge, which the destination's OWN earlier
-forwards already propagate.  Forward payload snapshots are also shared
-across the fanout peers of one delivery (payloads are read-only once
-enqueued) instead of copied per peer.  This changes which peers end up
-known vs the seed's flood (fewer redundant paths), but stays a valid,
-deterministic epidemic under the same seed.
+The payload of a root's epidemic is exactly ``{root: summaries[root]}``
+and is never copied or merged with other roots' knowledge: a rank's
+``info_known`` map is the set-union of the roots whose floods reached it
+(plus itself).  The union is order-independent, so the incremental and
+full paths produce identical maps even though they assemble them in
+different orders; downstream work-list scoring canonicalizes by sorting
+on ``(-diff, peer)``.
+
+This is a deterministic discrete-event simulation of R ranks: messages
+sent in round k are delivered at round k+1.  repro/core/async_sim.py
+delivers the SAME messages through a latency-aware event queue and
+degenerates to this per-root order at zero latency.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Set
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from repro.core.clusters import RankSummary
+
+GossipKey = Tuple[int, ...]
 
 
 def gossip_seed(seed: int, it: int) -> list:
@@ -46,65 +57,152 @@ def gossip_seed(seed: int, it: int) -> list:
     return [int(seed), int(it)]
 
 
+def gossip_root_key(seed, root: int) -> list:
+    """Per-root epidemic stream key: ``seed`` (an int, or the
+    ``gossip_seed(seed, it)`` pair) extended with the root rank."""
+    base = list(seed) if isinstance(seed, (list, tuple)) else [int(seed)]
+    return base + [int(root)]
+
+
 def gossip_deliver(known: Dict[int, RankSummary],
-                   payload: Dict[int, RankSummary]) -> bool:
+                   payload: Dict[int, RankSummary],
+                   stats: Optional[dict] = None) -> bool:
     """Deliver one gossip payload into a rank's ``info_known`` map.
 
     Returns False when the payload carries nothing new (the dedupe rule:
-    no merge, and the caller must not forward — see the module docstring);
-    True after merging at least one new summary.  Shared by the
-    synchronous round-driven :func:`build_peer_networks` and the async
+    no merge, and the caller must not forward); True after merging at
+    least one new summary.  No-op merges never allocate — the payload
+    object is shared, read-only, and simply dropped — and are counted in
+    ``stats['gossip_noop_merges']`` when a stats dict is supplied.
+    Shared by the synchronous :func:`root_epidemic` flood and the async
     event-loop driver (repro/core/async_sim.py), so both epidemics apply
     the exact same merge/dedupe semantics.
     """
     if payload.keys() <= known.keys():
+        if stats is not None:
+            stats["gossip_noop_merges"] = stats.get("gossip_noop_merges", 0) + 1
         return False
     for k, v in payload.items():
         known.setdefault(k, v)
     return True
 
 
+def root_epidemic(n: int, root: int, *, k_rounds: int, fanout: int,
+                  key, exclude: Set[int] = frozenset(),
+                  stats: Optional[dict] = None) -> List[int]:
+    """Flood one root's summary; returns the reached ranks in delivery
+    order (root excluded).
+
+    Deterministic in ``(n, root, k_rounds, fanout, key, exclude)`` alone —
+    the root's rng stream is private, so re-running with the same key
+    reproduces the same reach bitwise no matter what other roots do.
+    ``exclude`` removes ranks (e.g. dead ones under the async fault
+    harness) from the candidate peer sets.
+    """
+    rng = np.random.default_rng(key)
+    reached = {root}
+    order: List[int] = []
+    base_visited = {root} | set(exclude)
+    msgs: List[tuple] = [
+        (1, p, frozenset([root, p]))
+        for p in pick_peers(rng, n, root, fanout, visited=base_visited)]
+    while msgs:
+        nxt: List[tuple] = []
+        for rnd, dst, visited in msgs:
+            if dst in reached:      # dedupe: no merge, no forward
+                if stats is not None:
+                    stats["gossip_noop_merges"] = \
+                        stats.get("gossip_noop_merges", 0) + 1
+                continue
+            reached.add(dst)
+            order.append(dst)
+            if rnd < k_rounds:
+                for p in pick_peers(rng, n, dst, fanout,
+                                    visited=set(visited) | set(exclude)):
+                    nxt.append((rnd + 1, p, frozenset(visited) | {p}))
+        msgs = nxt
+    return order
+
+
 def build_peer_networks(summaries: Dict[int, RankSummary], *, k_rounds: int,
-                        fanout: int, seed: int,
+                        fanout: int, seed=0,
+                        root_seeds: Optional[Dict[int, list]] = None,
+                        reach_out: Optional[Dict[int, List[int]]] = None,
+                        stats: Optional[dict] = None,
                         ) -> Dict[int, Dict[int, RankSummary]]:
-    """Returns per-rank ``info_known``: rank -> {peer -> RankSummary}."""
+    """Returns per-rank ``info_known``: rank -> {peer -> RankSummary}.
+
+    The full (rebuild) path: every root's epidemic is re-run.  ``seed``
+    may be an int or a ``gossip_seed(seed, it)`` pair; ``root_seeds``
+    overrides the per-root key outright (the drivers pass
+    ``gossip_root_key(gossip_seed(seed, epoch[root]), root)`` so a quiet
+    root replays the iteration it last changed in).  ``reach_out``, when
+    given, receives each root's delivery-order reach list — the cacheable
+    artifact :func:`update_peer_networks` patches incrementally.
+    """
     ranks = sorted(summaries)
     n = len(ranks)
-    rng = np.random.default_rng(seed)
     info_known: Dict[int, Dict[int, RankSummary]] = {
         r: {r: summaries[r]} for r in ranks}
-
-    # message = (round, visited set, payload snapshot keys)
-    # round k messages, delivered synchronously at round boundary (async in
-    # the real runtime; the simulation just needs *an* admissible ordering —
-    # repro/core/async_sim.py delivers the SAME messages through a latency-
-    # aware event queue and degenerates to this order at zero latency).
-    msgs: List[tuple] = []
-    for r in ranks:
-        peers = pick_peers(rng, n, r, fanout, visited={r})
-        snap = dict(info_known[r])      # shared: payloads are read-only
-        for p in peers:
-            msgs.append((1, p, frozenset([r]) | {p}, snap))
-
-    for _ in range(k_rounds):
-        nxt: List[tuple] = []
-        for rnd, dst, visited, payload in msgs:
-            if not gossip_deliver(info_known[dst], payload):
-                continue    # dedupe: nothing new — skip merge AND forward
-            if rnd < k_rounds:
-                peers = pick_peers(rng, n, dst, fanout, visited=set(visited))
-                snap = dict(info_known[dst])
-                for p in peers:
-                    nxt.append((rnd + 1, p, frozenset(visited) | {p}, snap))
-        msgs = nxt
+    for root in ranks:
+        key = (root_seeds[root] if root_seeds is not None
+               else gossip_root_key(seed, root))
+        order = root_epidemic(n, root, k_rounds=k_rounds, fanout=fanout,
+                              key=key, stats=stats)
+        if reach_out is not None:
+            reach_out[root] = order
+        payload = summaries[root]
+        for dst in order:
+            info_known[dst][root] = payload
     return info_known
+
+
+def update_peer_networks(summaries: Dict[int, RankSummary],
+                         info_known: Dict[int, Dict[int, RankSummary]],
+                         reach: Dict[int, List[int]], *,
+                         k_rounds: int, fanout: int,
+                         root_seeds: Dict[int, list],
+                         dirty_roots: Sequence[int],
+                         stats: Optional[dict] = None) -> Set[int]:
+    """Patch a peer network in place: re-run ONLY the epidemics rooted at
+    ``dirty_roots`` (roots whose summary — and hence key — changed),
+    splicing their old reach out of and new reach into the per-rank maps.
+
+    Returns the set of ranks whose ``info_known`` content changed (union
+    of old and new reach of every dirty root, plus the dirty roots
+    themselves) — exactly the ranks whose work lists need re-scoring.
+    Bitwise-equal to a full :func:`build_peer_networks` under the same
+    ``root_seeds`` because clean roots' epidemics are pure functions of
+    their unchanged keys.
+    """
+    n = len(summaries)
+    affected: Set[int] = set()
+    for root in sorted(dirty_roots):
+        root = int(root)
+        affected.add(root)
+        old = reach.get(root, [])
+        for dst in old:
+            info_known[dst].pop(root, None)
+            affected.add(dst)
+        order = root_epidemic(n, root, k_rounds=k_rounds, fanout=fanout,
+                              key=root_seeds[root], stats=stats)
+        reach[root] = order
+        payload = summaries[root]
+        info_known[root][root] = payload    # re-bind the fresh summary
+        for dst in order:
+            info_known[dst][root] = payload
+            affected.add(dst)
+        if stats is not None:
+            stats["gossip_redraws"] = stats.get("gossip_redraws", 0) + 1
+    return affected
 
 
 def pick_peers(rng, n: int, me: int, fanout: int, visited: Set[int]):
     """``fanout`` forward targets excluding ``visited`` — the epidemic's
     only source of randomness; consumption order must match between the
     two drivers for the zero-latency parity bar (it does: both pick at
-    delivery time, and zero latency reproduces the round order)."""
+    delivery time from the root's private stream, and zero latency
+    reproduces each root's round order)."""
     candidates = [r for r in range(n) if r != me and r not in visited]
     if not candidates:
         return []

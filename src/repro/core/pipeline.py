@@ -173,17 +173,23 @@ def ccm_lb_pipeline(phases: Sequence[Union[Phase, PipelinePhase]],
     and the warm start carried the full assignment, the CCMState is
     retargeted in place (bitwise-equal to a rebuild; see
     ``CCMState.retarget``) and the incremental engine — segments, edge
-    caches — survives across the phase boundary.  ``ccm_lb`` falls back
-    to a fresh build silently whenever the carry conditions fail, so
-    enabling this can only remove redundant work; ``PhaseRun.
+    caches — survives across the phase boundary, as does the phase's
+    :class:`~repro.core.quiesce.QuiesceTracker`: when the new phase's
+    value arrays and params are unchanged too, its cluster/summary/gossip
+    caches stay live across the boundary (epochs restart at 0 and the new
+    seed forces the same full gossip redraw a fresh run performs, so
+    trajectories are bitwise those of an uncarried run).  ``ccm_lb``
+    falls back to a fresh build silently whenever the carry conditions
+    fail, so enabling this can only remove redundant work; ``PhaseRun.
     engine_carried`` reports which happened per phase.  Requires
     ``warm_start`` (a cold start discards the assignment the carried
     state serves).
     Remaining keyword arguments (``n_iter``, ``fanout``, ``use_engine``,
     ``backend`` — including the compiled ``"jit"`` scorer runtime, whose
     shape buckets persist across phases so a long stream compiles exactly
-    once — ``batch_lock_events``, ...) pass through to every
-    :func:`ccm_lb` call.
+    once — ``batch_lock_events``, ``quiesce_after`` for early exit once a
+    phase stops transferring, ...) pass through to every :func:`ccm_lb`
+    call.
     """
     if not phases:
         raise ValueError("ccm_lb_pipeline needs at least one phase")
