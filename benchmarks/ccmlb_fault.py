@@ -18,16 +18,36 @@ event-loop driver (``repro/core/async_sim.py``) under seeded faults:
   * ``pause`` — a rank frozen for a sim-time window mid-iteration
     (deferred deliveries, then catch-up);
   * ``crash`` / ``crash_lossy`` — ranks killed mid-iteration: locks
-    reclaimed, work migrated off the dead ranks, survivors finish.
+    reclaimed, work migrated off the dead ranks, survivors finish;
+  * ``partition_*`` — split-brain windows: a gossip-stage split keeps
+    work lists island-local (cross-island summaries never arrive), a
+    stage-2 split exercises the partition-aware decision skip
+    (``partition_skips``); healed partitions must re-merge, reach
+    quiescence, and stay within ``QUALITY_BAR`` of fault-free; a
+    never-healing partition is recorded without a bar;
+  * ``corrupt_*`` — seeded gossip-payload mutation: every corrupted
+    payload must be caught by the checksum/stamp validation
+    (``corrupted == corrupt_quarantined`` asserted), and <= 1%
+    corruption stays within ``QUALITY_BAR``;
+  * ``crash_stage1`` — a root killed MID-EPIDEMIC: the flood must not
+    wedge, the epoch-keyed quiesce caches are purged, survivors finish;
+  * ``join`` / ``crash_then_join`` — membership growth: fresh ranks
+    join mid-stream, inherit gossip state through the ordinary flood
+    and end up owning tasks; combined with a crash, the mesh shrinks
+    then re-grows within one run.
 
 Every faulted record passes the same invariant gate: the transfer log
 replays from the initial assignment to the final one, the final
-assignment is memory-feasible, and no task lands on a dead rank.
+assignment is memory-feasible on the FINAL (possibly expanded) phase,
+and no task lands on a dead rank.
 
 Results land in ``BENCH_ccmlb_fault.json``.
 
 Standalone:  PYTHONPATH=src python benchmarks/ccmlb_fault.py [--quick]
-(--quick runs the 16-rank configs for CI; also wired into
+[--fault-seed-offset N]
+(--quick runs the 16-rank configs for CI; --fault-seed-offset shifts
+every FaultSpec seed so CI can sweep fault randomness — the invariant
+gate and quality bars are asserted for every offset; also wired into
 benchmarks/run.py as ``ccmlb_fault``.)
 """
 from __future__ import annotations
@@ -39,31 +59,40 @@ import time
 
 import numpy as np
 
-from repro.core import CCMParams, FaultSpec, ccm_lb_async
+from repro.core import CCMParams, FaultSpec, RankJoin, ccm_lb_async
 from repro.core.ccm import CCMState
 from repro.core.problem import initial_assignment, scaling_phase
 
 JSON_PATH = os.environ.get("BENCH_CCMLB_FAULT_JSON", "BENCH_ccmlb_fault.json")
 N_ITER = 4
 LAT = ("uniform", 0.5, 1.5)
-QUALITY_BAR = 1.15          # faulted / fault-free Wmax ratio, drop <= 1%
+QUALITY_BAR = 1.15          # faulted / fault-free Wmax ratio, low severity
 DROP_SWEEP = (0.002, 0.005, 0.01, 0.02, 0.05)
+CORRUPT_SWEEP = (0.005, 0.01, 0.05, 0.2)
+SEED_OFFSET = 0             # --fault-seed-offset: shifts every fault seed
 
 PARAMS = CCMParams(delta=1e-9)
 _instance = scaling_phase   # same instances as the async/scaling benches
 
 
+def _seed(base: int) -> int:
+    return base + SEED_OFFSET
+
+
 def _check_invariants(phase, a0, res, tag):
     """The safety gate every faulted run must pass: log replay, memory
-    feasibility, nothing stranded on a dead rank."""
+    feasibility, nothing stranded on a dead rank.  Feasibility is
+    checked on ``res.state.phase`` — the FINAL phase, which membership
+    joins may have expanded past the input ``phase``."""
     replay = np.asarray(a0, np.int64).copy()
     for tasks, r_from, r_to in res.transfer_log:
         idx = np.asarray(tasks, np.int64)
         assert (replay[idx] == r_from).all(), f"{tag}: replay diverged"
         replay[idx] = r_to
     assert np.array_equal(replay, res.assignment), f"{tag}: log incomplete"
-    final = CCMState.build(phase, res.assignment, PARAMS)
-    for r in range(phase.num_ranks):
+    fphase = res.state.phase
+    final = CCMState.build(fphase, res.assignment, PARAMS)
+    for r in range(fphase.num_ranks):
         assert final.memory_feasible(r), f"{tag}: rank {r} over memory"
     for r in (res.dead_ranks or ()):
         assert not (res.assignment == r).any(), \
@@ -103,6 +132,10 @@ def _record(records, tag, ranks, phase, res, seconds, ref=None, **extra):
             "paused_deferrals": fs.paused_deferrals,
             "killed": fs.killed,
             "recovered_tasks": fs.recovered_tasks,
+            "partitioned_dropped": fs.partitioned_dropped,
+            "partition_skips": fs.partition_skips,
+            "corrupted": fs.corrupted,
+            "corrupt_quarantined": fs.corrupt_quarantined,
         }),
         **({} if not res.dead_ranks else {"dead_ranks": res.dead_ranks}),
         **extra,
@@ -138,7 +171,7 @@ def _sweep_ranks(report, records, ranks: int):
            "bitwise==fault_free")
 
     for drop in DROP_SWEEP:
-        spec = FaultSpec(drop=drop, req_timeout=4.0, seed=7)
+        spec = FaultSpec(drop=drop, req_timeout=4.0, seed=_seed(7))
         res, dt = _run(phase, a0, spec)
         _check_invariants(phase, a0, res, f"drop_{drop}@{ranks}")
         q_ratio = _quality(res, phase) / _quality(ref, phase)
@@ -153,10 +186,10 @@ def _sweep_ranks(report, records, ranks: int):
                f"wedged={res.fault_stats.wedged_reclaimed}")
 
     for tag, spec in (
-            ("dup", FaultSpec(dup=0.2, seed=11)),
-            ("reorder", FaultSpec(reorder=0.2, reorder_scale=2.0, seed=12)),
+            ("dup", FaultSpec(dup=0.2, seed=_seed(11))),
+            ("reorder", FaultSpec(reorder=0.2, reorder_scale=2.0, seed=_seed(12))),
             ("combined", FaultSpec(drop=0.01, dup=0.1, reorder=0.1,
-                                   req_timeout=4.0, seed=13))):
+                                   req_timeout=4.0, seed=_seed(13)))):
         res, dt = _run(phase, a0, spec)
         _check_invariants(phase, a0, res, f"{tag}@{ranks}")
         fs = res.fault_stats
@@ -177,7 +210,7 @@ def _pause_config(report, records, ranks: int):
     phase = _instance(ranks)
     a0 = initial_assignment(phase)
     ref, _ = _run(phase, a0, None)
-    spec = FaultSpec(pause=((1, 1, 0.5, 6.0),), seed=17)
+    spec = FaultSpec(pause=((1, 1, 0.5, 6.0),), seed=_seed(17))
     res, dt = _run(phase, a0, spec)
     _check_invariants(phase, a0, res, f"pause@{ranks}")
     assert res.fault_stats.paused_deferrals > 0, "pause window never hit"
@@ -192,9 +225,9 @@ def _crash_configs(report, records, ranks: int):
     a0 = initial_assignment(phase)
     ref, _ = _run(phase, a0, None)
     for tag, spec in (
-            ("crash", FaultSpec(kill=((3, 1, 0.5),), seed=19)),
+            ("crash", FaultSpec(kill=((3, 1, 0.5),), seed=_seed(19))),
             ("crash_lossy", FaultSpec(drop=0.01, kill=((3, 1, 0.5),),
-                                      req_timeout=4.0, seed=23))):
+                                      req_timeout=4.0, seed=_seed(23)))):
         res, dt = _run(phase, a0, spec)
         _check_invariants(phase, a0, res, f"{tag}@{ranks}")
         assert res.dead_ranks == [3], f"{tag}@{ranks}: wrong dead set"
@@ -226,6 +259,136 @@ def _bitwise_only(report, records, ranks: int):
            "bitwise==fault_free")
 
 
+def _partition_configs(report, records, ranks: int):
+    phase = _instance(ranks)
+    a0 = initial_assignment(phase)
+    ref, _ = _run(phase, a0, None, collect_trace=True)
+    half = ranks // 2
+    isl_a, isl_b = tuple(range(half)), tuple(range(half, ranks))
+
+    # (a) gossip-stage split that heals: cross-island summaries never
+    # arrive while severed, so each island balances locally; after the
+    # window closes the mesh re-merges and must reach quiescence.
+    spec = FaultSpec(partition=((isl_a, isl_b, 0, 0.0, 25.0),),
+                     seed=_seed(29))
+    res, dt = _run(phase, a0, spec, n_iter=N_ITER + 6, quiesce_after=2)
+    _check_invariants(phase, a0, res, f"partition_healed@{ranks}")
+    fs = res.fault_stats
+    assert fs.partitioned_dropped > 0, \
+        f"partition_healed@{ranks}: window never severed a message"
+    q_ratio = _quality(res, phase) / _quality(ref, phase)
+    assert q_ratio <= QUALITY_BAR, \
+        f"partition_healed@{ranks}: quality {q_ratio:.3f}x > {QUALITY_BAR}x"
+    assert list(res.iter_transfers[-2:]) == [0, 0], \
+        f"partition_healed@{ranks}: no quiescence after heal " \
+        f"(iter_transfers={res.iter_transfers})"
+    _record(records, "partition_healed", ranks, phase, res, dt, ref=ref,
+            quality_bar=QUALITY_BAR, quiesced_after_heal=True)
+    report(f"ccmlb_fault_partition_healed_{ranks}", dt * 1e6,
+           f"severed={fs.partitioned_dropped} quality={q_ratio:.3f}x "
+           f"iters={len(res.iter_transfers)}")
+
+    # (b) stage-2-only split that never heals: gossip drains first, so
+    # the work lists are global and the DECIDE-time partition skip has
+    # to fire.  Degraded quality is recorded without a bar.
+    t_open = min(t for t, _, k, _, _ in ref.events if k == "DECIDE") - 0.01
+    spec = FaultSpec(partition=((isl_a, isl_b, 0, t_open, 1e9),),
+                     seed=_seed(5))
+    res, dt = _run(phase, a0, spec)
+    _check_invariants(phase, a0, res, f"partition_stage2@{ranks}")
+    fs = res.fault_stats
+    assert fs.partition_skips > 0, \
+        f"partition_stage2@{ranks}: decision-time skip never fired"
+    _record(records, "partition_stage2_unhealed", ranks, phase, res, dt,
+            ref=ref, quality_bar=None)
+    report(f"ccmlb_fault_partition_stage2_{ranks}", dt * 1e6,
+           f"skips={fs.partition_skips} severed={fs.partitioned_dropped} "
+           f"exhausted={res.retries_exhausted}")
+
+
+def _corruption_configs(report, records, ranks: int):
+    phase = _instance(ranks)
+    a0 = initial_assignment(phase)
+    ref, _ = _run(phase, a0, None)
+    for rate in CORRUPT_SWEEP:
+        spec = FaultSpec(corrupt=rate, seed=_seed(6))
+        res, dt = _run(phase, a0, spec)
+        _check_invariants(phase, a0, res, f"corrupt_{rate}@{ranks}")
+        fs = res.fault_stats
+        assert fs.corrupted > 0, \
+            f"corrupt_{rate}@{ranks}: no payload ever mutated"
+        assert fs.corrupted == fs.corrupt_quarantined, \
+            f"corrupt_{rate}@{ranks}: {fs.corrupted} corrupted but only " \
+            f"{fs.corrupt_quarantined} quarantined — validation leaked"
+        q_ratio = _quality(res, phase) / _quality(ref, phase)
+        if rate <= 0.01:
+            assert q_ratio <= QUALITY_BAR, \
+                f"corrupt={rate} quality {q_ratio:.3f}x > {QUALITY_BAR}x"
+        _record(records, f"corrupt_{rate:g}", ranks, phase, res, dt, ref=ref,
+                corrupt_rate=rate,
+                quality_bar=QUALITY_BAR if rate <= 0.01 else None)
+        report(f"ccmlb_fault_ranks_{ranks}_corrupt_{rate:g}", dt * 1e6,
+               f"quality={q_ratio:.3f}x corrupted={fs.corrupted} "
+               f"quarantined={fs.corrupt_quarantined}")
+
+
+def _stage1_kill_config(report, records, ranks: int):
+    phase = _instance(ranks)
+    a0 = initial_assignment(phase)
+    ref, _ = _run(phase, a0, None)
+    spec = FaultSpec(kill=((3, 1, 0.5, 1),), seed=_seed(7))
+    res, dt = _run(phase, a0, spec)
+    _check_invariants(phase, a0, res, f"crash_stage1@{ranks}")
+    assert res.dead_ranks == [3], f"crash_stage1@{ranks}: wrong dead set"
+    assert res.fault_stats.recovered_tasks > 0, \
+        f"crash_stage1@{ranks}: nothing migrated off the dead root"
+    _record(records, "crash_stage1", ranks, phase, res, dt, ref=ref)
+    report(f"ccmlb_fault_crash_stage1_{ranks}", dt * 1e6,
+           f"dead={res.dead_ranks} "
+           f"recovered={res.fault_stats.recovered_tasks} "
+           f"quality={_quality(res, phase) / _quality(ref, phase):.3f}x")
+
+
+def _join_configs(report, records, ranks: int):
+    phase = _instance(ranks)
+    a0 = initial_assignment(phase)
+
+    # (a) two fresh ranks join mid-stream and must attract real work
+    res, dt = _run(phase, a0, None,
+                   membership=(RankJoin(iteration=1, count=2),))
+    _check_invariants(phase, a0, res, f"join@{ranks}")
+    assert res.joined_ranks == [ranks, ranks + 1], \
+        f"join@{ranks}: wrong joined set {res.joined_ranks}"
+    on_joined = int(sum((res.assignment == r).sum()
+                        for r in res.joined_ranks))
+    assert on_joined > 0, f"join@{ranks}: joiners attracted no tasks"
+    _record(records, "join", ranks, res.state.phase, res, dt,
+            joined_ranks=res.joined_ranks, tasks_on_joined=on_joined)
+    report(f"ccmlb_fault_join_{ranks}", dt * 1e6,
+           f"joined={res.joined_ranks} tasks_on_joined={on_joined} "
+           f"wmax/mean={_quality(res, res.state.phase):.4f}")
+
+    # (b) shrink then re-grow in one run: a crash at iteration 1, a
+    # replacement rank joining at iteration 2
+    spec = FaultSpec(kill=((3, 1, 0.5),), seed=_seed(31))
+    res, dt = _run(phase, a0, spec,
+                   membership=(RankJoin(iteration=2, count=1),))
+    _check_invariants(phase, a0, res, f"crash_then_join@{ranks}")
+    assert res.dead_ranks == [3], \
+        f"crash_then_join@{ranks}: wrong dead set"
+    assert res.joined_ranks == [ranks], \
+        f"crash_then_join@{ranks}: wrong joined set {res.joined_ranks}"
+    assert res.fault_stats.recovered_tasks > 0, \
+        f"crash_then_join@{ranks}: nothing migrated off the dead rank"
+    on_joined = int((res.assignment == ranks).sum())
+    _record(records, "crash_then_join", ranks, res.state.phase, res, dt,
+            joined_ranks=res.joined_ranks, tasks_on_joined=on_joined)
+    report(f"ccmlb_fault_crash_then_join_{ranks}", dt * 1e6,
+           f"dead={res.dead_ranks} joined={res.joined_ranks} "
+           f"tasks_on_joined={on_joined} "
+           f"recovered={res.fault_stats.recovered_tasks}")
+
+
 def run(report, quick: bool = False):
     records = []
     for ranks in ((16,) if quick else (16, 64)):
@@ -234,16 +397,40 @@ def run(report, quick: bool = False):
         _bitwise_only(report, records, 256)
     _pause_config(report, records, 16)
     _crash_configs(report, records, 16 if quick else 64)
+    _partition_configs(report, records, 16)
+    _corruption_configs(report, records, 16)
+    _stage1_kill_config(report, records, 16 if quick else 64)
+    _join_configs(report, records, 16)
 
     drops = [r for r in records if r["config"].startswith("drop_")
              and r.get("drop", 1.0) <= 0.01]
+    corrupts = [r for r in records if r["config"].startswith("corrupt_")]
+    low_corrupts = [r for r in corrupts if r["corrupt_rate"] <= 0.01]
+    joins = [r for r in records if "tasks_on_joined" in r]
+    healed = [r for r in records if r["config"] == "partition_healed"]
     payload = {
         "benchmark": "ccmlb_fault",
         "quick": quick,
         "numpy": np.__version__,
         "n_iter": N_ITER,
         "quality_bar": QUALITY_BAR,
+        "fault_seed_offset": SEED_OFFSET,
         "results": records,
+        "corrupt_validation_ok": all(
+            r["corrupted"] == r["corrupt_quarantined"] for r in corrupts),
+        "low_corrupt_quality_worst": max(
+            r["quality_vs_fault_free"] for r in low_corrupts),
+        "low_corrupt_quality_ok": all(
+            r["quality_vs_fault_free"] <= QUALITY_BAR for r in low_corrupts),
+        "partition_heal_quality_worst": max(
+            r["quality_vs_fault_free"] for r in healed),
+        "partition_heal_quiesced": all(
+            r.get("quiesced_after_heal", False) for r in healed),
+        "partition_skips_exercised": any(
+            r["partition_skips"] > 0 for r in records
+            if "partition_skips" in r),
+        "join_tasks_on_new_ranks": sum(
+            r["tasks_on_joined"] for r in joins),
         "inactive_spec_bitwise_ok": all(
             r.get("bitwise_identical_to_fault_free", True) for r in records),
         "low_drop_quality_worst": max(
@@ -261,7 +448,10 @@ def run(report, quick: bool = False):
 
 
 def main():
+    global SEED_OFFSET
     quick = "--quick" in sys.argv
+    if "--fault-seed-offset" in sys.argv:
+        SEED_OFFSET = int(sys.argv[sys.argv.index("--fault-seed-offset") + 1])
     print("name,us_per_call,derived")
 
     def report(name, us, derived=""):
@@ -277,8 +467,14 @@ def main():
     assert payload["low_drop_quality_worst"] <= payload["quality_bar"]
     assert payload["max_timeouts"] > 0          # loss really exercised retry
     assert payload["total_recovered_tasks"] > 0
-    print("ccmlb_fault_ok,0.0,bitwise+quality+recovery checks passed",
-          flush=True)
+    assert payload["corrupt_validation_ok"]
+    assert payload["low_corrupt_quality_ok"]
+    assert payload["partition_heal_quality_worst"] <= payload["quality_bar"]
+    assert payload["partition_heal_quiesced"]
+    assert payload["partition_skips_exercised"]
+    assert payload["join_tasks_on_new_ranks"] > 0
+    print("ccmlb_fault_ok,0.0,bitwise+quality+recovery+partition+corrupt"
+          "+join checks passed", flush=True)
 
 
 if __name__ == "__main__":

@@ -2,8 +2,8 @@
 distributed load balancer, plus the MILP certification path (core/milp) and
 the vectorized evaluation engine (core/csr + core/engine)."""
 from repro.core.async_sim import (FaultSpec, FaultStats,  # noqa: F401
-                                  LivelockError, ccm_lb_async, make_latency,
-                                  run_ccm_lb)
+                                  LivelockError, RankJoin, ccm_lb_async,
+                                  make_latency, run_ccm_lb)
 from repro.core.ccm import CCMState, ExchangeEval, exchange_eval  # noqa: F401
 from repro.core.ccmlb import CCMLBResult, ProtocolStats, ccm_lb  # noqa: F401
 from repro.core.csr import CSR, PhaseCSR, rank_segments  # noqa: F401

@@ -88,9 +88,51 @@ ranks themselves, seeded and per-link:
   * ``pause`` — ``(rank, iteration, start, end)`` windows (sim-time
     relative to that iteration's stage-2 start) during which every event
     addressed to the rank is deferred to the window's end;
-  * ``kill`` — ``(rank, iteration, offset)``: the rank dies at stage-2
-    start + offset and stays dead (messages to it vanish, messages it
-    sent before dying still deliver).
+  * ``kill`` — ``(rank, iteration, offset)`` dies at stage-2 start +
+    offset; ``(rank, iteration, offset, stage)`` with ``stage=1`` dies
+    mid-epidemic, offset from the ITERATION (gossip) start.  Dead ranks
+    stay dead: messages to them vanish, messages they sent before dying
+    still deliver, and a root dying mid-flood neither wedges the
+    epidemic (live ranks keep forwarding its already-spread summary)
+    nor poisons the epoch-keyed quiesce replay (the tracker purges the
+    dead rank from every cache family — see ``QuiesceTracker.
+    purge_ranks``);
+  * ``partition`` — ``(ranks_a, ranks_b, iteration, start, end)``
+    link-level BIDIRECTIONAL outages: every message crossing between
+    the two groups while the window (sim-time relative to that
+    iteration's gossip start) is open is destroyed, at send or at
+    delivery time, splitting the mesh into islands.  Islands keep
+    making local progress: a rank deciding on a peer it cannot
+    currently reach skips the doomed request outright instead of
+    burning a ``req_timeout`` wait (counted ``partition_skips``,
+    bounded by the same per-(rank, peer) retry budget as yields), so
+    intra-island transfers proceed at full speed.  After the window
+    heals, the next iteration's gossip re-merges the islands — fresh
+    summaries flood globally, work lists span the whole mesh again —
+    without ever having violated mutual exclusion or the transfer-log
+    replay invariant (cross-island lock requests either never arrived
+    or timed out and were aborted/reclaimed like any lost message);
+  * ``corrupt`` — per-link probability of mutating a gossip payload in
+    flight (a seeded choice of flipped load, truncated cluster list,
+    or stale epoch stamp — always on a COPY; the shared payload object
+    is never touched).  Receivers validate a checksum
+    (``repro.core.gossip.summary_checksum``) and an iteration stamp on
+    every delivery and QUARANTINE mismatches — counted
+    ``corrupt_quarantined``, no merge, no forward — so a corrupted
+    summary can never enter a work list; the root's clean epidemic
+    keeps spreading through other paths.
+
+Membership is the inverse degradation: ``ccm_lb_async(membership=
+(RankJoin(iteration=k, count=m), ...))`` grows the mesh mid-stream.
+At iteration ``k`` the phase is expanded (``repro.runtime.elastic.
+expand_phase`` — fresh ranks default to median capacity/speed), the
+state/engine are rebuilt on the wider rank set (the CSR bundle is
+rank-independent and carries over), and the tracker is re-grown
+(``QuiesceTracker.regrow``).  The joined ranks inherit gossip state
+through the ordinary epidemic flood of their first iteration and,
+starting empty, attract transfers like any underloaded rank — the
+rebalance IS the protocol, no side channel.  Joined ranks are recorded
+in ``CCMLBResult.joined_ranks``.
 
 The protocol survives by construction, not by luck: every LOCK_REQ
 carries a unique ``req_id`` token that travels REQ→GRANT→RELEASE, making
@@ -112,7 +154,10 @@ extra events, no extra rng draws, same trace); an active fault changes
 trajectories but never invariants — at most one live lock per rank,
 transfers only under mutual exclusion and never to/from dead ranks,
 transfer-log replay == final assignment, quiescent termination
-(tests/test_async_protocol.py).
+(tests/test_async_protocol.py).  ``quiesce_after`` respects pending
+faults and joins: the quiet counter only advances while no partition or
+pause window is open and no kill/join is still scheduled, so early
+termination cannot race a scheduled perturbation.
 
 Differences from the synchronous driver, by design:
 
@@ -142,16 +187,17 @@ from repro.core.ccmlb import (CCMLBResult, ProtocolStats, build_work_lists,
                               ccm_lb, execute_transfer, lock_release,
                               lock_request, note_yield)
 from repro.core.engine import PhaseEngine
-from repro.core.gossip import gossip_deliver, gossip_root_key, pick_peers
+from repro.core.gossip import (gossip_deliver, gossip_root_key, pick_peers,
+                               summary_checksum)
 from repro.core.locks import LockManager
 from repro.core.pipeline import warm_start_assignment
 from repro.core.problem import CCMParams, Phase
 from repro.core.quiesce import QuiesceTracker
-from repro.runtime.elastic import survivor_resize
+from repro.runtime.elastic import RankJoin, expand_phase, survivor_resize
 from repro.runtime.fault import RankDeath
 
 __all__ = ["ccm_lb_async", "run_ccm_lb", "make_latency", "EVENT_KINDS",
-           "FaultSpec", "FaultStats", "LivelockError"]
+           "FaultSpec", "FaultStats", "LivelockError", "RankJoin"]
 
 # event kinds (values appear in traces; names in EVENT_KINDS).  TIMEOUT
 # and FAIL only ever fire under an active FaultSpec — the first five
@@ -198,12 +244,19 @@ class LivelockError(RuntimeError):
 class FaultSpec:
     """Seeded fault model for the async driver (see module docstring).
 
-    ``drop`` / ``dup`` / ``reorder`` accept a float probability, a
-    per-link ``{(src, dst): p}`` dict (unlisted links are fault-free), or
-    a callable ``(src, dst) -> p``.  ``pause`` entries are ``(rank,
-    iteration, start, end)``, ``kill`` entries ``(rank, iteration,
-    offset)`` — times in sim-time units relative to that iteration's
-    stage-2 start.  ``req_timeout`` is the base lock-request timeout,
+    ``drop`` / ``dup`` / ``reorder`` / ``corrupt`` accept a float
+    probability, a per-link ``{(src, dst): p}`` dict (unlisted links are
+    fault-free), or a callable ``(src, dst) -> p``; ``corrupt`` applies
+    to gossip payloads only (protocol messages carry tokens, not
+    summaries).  ``pause`` entries are ``(rank, iteration, start, end)``,
+    ``kill`` entries ``(rank, iteration, offset)`` (dies at stage-2
+    start + offset) or ``(rank, iteration, offset, stage)`` with
+    ``stage`` 1 (offset from the iteration's gossip start) or 2.
+    ``partition`` entries are ``(ranks_a, ranks_b, iteration, start,
+    end)``: two disjoint rank groups whose cross links are severed for
+    the sim-time window (relative to that iteration's gossip start; the
+    absolute window persists across stage — and iteration — boundaries
+    until it closes).  ``req_timeout`` is the base lock-request timeout,
     multiplied by ``backoff ** attempt`` on each retry.  All fault
     randomness comes from a dedicated stream keyed on ``seed`` — a run
     with an inactive spec (everything zero/empty) draws nothing from it
@@ -216,6 +269,8 @@ class FaultSpec:
     reorder_scale: float = 1.0
     pause: tuple = ()
     kill: tuple = ()
+    partition: tuple = ()
+    corrupt: object = 0.0
     req_timeout: float = 4.0
     backoff: float = 2.0
     seed: int = 0
@@ -228,11 +283,12 @@ class FaultSpec:
                 return any(float(v) != 0.0 for v in p.values())
             return float(p) != 0.0
         return (nonzero(self.drop) or nonzero(self.dup)
-                or nonzero(self.reorder) or bool(self.pause)
-                or bool(self.kill))
+                or nonzero(self.reorder) or nonzero(self.corrupt)
+                or bool(self.pause) or bool(self.kill)
+                or bool(self.partition))
 
     def validate(self, n_ranks: int, n_iter: int) -> None:
-        for name in ("drop", "dup", "reorder"):
+        for name in ("drop", "dup", "reorder", "corrupt"):
             p = getattr(self, name)
             if callable(p):
                 continue
@@ -247,15 +303,69 @@ class FaultSpec:
             raise ValueError("req_timeout must be > 0")
         if self.backoff < 1.0:
             raise ValueError("backoff must be >= 1")
+        by_rank_it: Dict[tuple, list] = {}
         for entry in self.pause:
             r, it, start, end = entry
             if not (0 <= r < n_ranks and 0 <= it < n_iter
                     and 0 <= start <= end):
                 raise ValueError(f"bad pause entry {entry!r}")
+            by_rank_it.setdefault((int(r), int(it)), []).append(
+                (float(start), float(end), entry))
+        for (r, it), wins in by_rank_it.items():
+            wins.sort()
+            for (s0, e0, a), (s1, e1, b) in zip(wins, wins[1:]):
+                if s1 < e0:
+                    raise ValueError(
+                        f"pause windows {a!r} and {b!r} overlap on rank "
+                        f"{r} in iteration {it}: a rank cannot be paused "
+                        "twice at once — merge them into one window")
+        seen_kill: Dict[int, tuple] = {}
         for entry in self.kill:
-            r, it, off = entry
+            if len(entry) == 4:
+                r, it, off, stage = entry
+                if stage not in (1, 2):
+                    raise ValueError(
+                        f"bad kill entry {entry!r}: stage must be 1 "
+                        "(gossip) or 2 (lock/transfer)")
+            elif len(entry) == 3:
+                r, it, off = entry
+            else:
+                raise ValueError(
+                    f"bad kill entry {entry!r}: expected (rank, iteration,"
+                    " offset) or (rank, iteration, offset, stage)")
             if not (0 <= r < n_ranks and 0 <= it < n_iter and off >= 0):
                 raise ValueError(f"bad kill entry {entry!r}")
+            if int(r) in seen_kill:
+                raise ValueError(
+                    f"duplicate kill entries {seen_kill[int(r)]!r} and "
+                    f"{entry!r} for rank {r}: a rank dies once — drop "
+                    "the later entry")
+            seen_kill[int(r)] = entry
+        for entry in self.partition:
+            if len(entry) != 5:
+                raise ValueError(
+                    f"bad partition entry {entry!r}: expected (ranks_a, "
+                    "ranks_b, iteration, start, end)")
+            ra, rb, it, start, end = entry
+            sa = {int(x) for x in ra}
+            sb = {int(x) for x in rb}
+            if not sa or not sb:
+                raise ValueError(f"bad partition entry {entry!r}: both "
+                                 "rank groups must be non-empty")
+            if sa & sb:
+                raise ValueError(
+                    f"bad partition entry {entry!r}: groups share ranks "
+                    f"{sorted(sa & sb)} — a rank cannot sit on both "
+                    "sides of a split")
+            bad = [x for x in sa | sb if not 0 <= x < n_ranks]
+            if bad:
+                raise ValueError(
+                    f"bad partition entry {entry!r}: ranks {sorted(bad)} "
+                    f"out of range [0, {n_ranks})")
+            if not (0 <= it < n_iter and 0 <= start <= end):
+                raise ValueError(f"bad partition entry {entry!r}: need "
+                                 "0 <= iteration < n_iter and "
+                                 "0 <= start <= end")
 
 
 @dataclasses.dataclass
@@ -269,6 +379,8 @@ class FaultStats:
     dead_dropped: int = 0       # messages addressed to a dead rank
     paused_deferrals: int = 0   # deliveries deferred past a pause window
     killed: int = 0             # ranks killed
+    partitioned_dropped: int = 0  # messages destroyed crossing a severed link
+    corrupted: int = 0          # gossip payloads mutated in flight
     # protocol side (each counter is one hardening mechanism firing)
     dup_requests: int = 0       # duplicate LOCK_REQ deliveries ignored
     regrants: int = 0           # GRANT retransmitted on a duplicate REQ
@@ -280,6 +392,8 @@ class FaultStats:
     wedged_reclaimed: int = 0   # stage-end reclaims of wedged locks
     dead_peer_skips: int = 0    # decisions/transfers skipped on dead peers
     recovered_tasks: int = 0    # tasks migrated off dead ranks at recovery
+    partition_skips: int = 0    # decisions skipped on unreachable peers
+    corrupt_quarantined: int = 0  # corrupted gossip payloads caught + dropped
 
 
 class _FaultCtx:
@@ -295,24 +409,103 @@ class _FaultCtx:
         self.recovered: Set[int] = set()
         self.n_ranks = n_ranks
         self._pauses: Dict[int, list] = {}
+        self._partitions: List[tuple] = []   # (set_a, set_b, t0, t1) absolute
+        # corruption draws are gated on this flag so legacy specs (no
+        # corrupt field) keep their exact fault-stream draw sequences
+        c = spec.corrupt
+        self.corrupt_active = bool(
+            callable(c) or (isinstance(c, dict)
+                            and any(float(v) != 0.0 for v in c.values()))
+            or (not isinstance(c, dict) and float(c) != 0.0))
+
+    def register_gossip(self, it: int, sim: "_Sim") -> None:
+        """Anchor this iteration's partition windows and stage-1 kill
+        timers at the current sim time (= this iteration's gossip
+        start).  Partition windows are absolute once anchored, so a long
+        window stays severed across the stage boundary and into later
+        iterations until it closes."""
+        t0 = sim.now
+        for ra, rb, pit, start, end in self.spec.partition:
+            if pit == it:
+                self._partitions.append(
+                    (frozenset(int(x) for x in ra),
+                     frozenset(int(x) for x in rb),
+                     t0 + float(start), t0 + float(end)))
+        for entry in self.spec.kill:
+            if len(entry) == 4 and entry[3] == 1 and entry[1] == it:
+                sim.push(t0 + float(entry[2]), _MSG, FAIL,
+                         int(entry[0]), int(entry[0]))
 
     def register_iteration(self, it: int, sim: "_Sim") -> None:
-        """Anchor this iteration's pause windows and kill timers at the
-        current sim time (= this iteration's stage-2 start)."""
+        """Anchor this iteration's pause windows and stage-2 kill timers
+        at the current sim time (= this iteration's stage-2 start)."""
         t0 = sim.now
         for r, kit, start, end in self.spec.pause:
             if kit == it:
                 self._pauses.setdefault(int(r), []).append(
                     (t0 + float(start), t0 + float(end)))
-        for r, kit, off in self.spec.kill:
-            if kit == it:
-                sim.push(t0 + float(off), _MSG, FAIL, int(r), int(r))
+        for entry in self.spec.kill:
+            stage = entry[3] if len(entry) == 4 else 2
+            if entry[1] == it and stage == 2:
+                sim.push(t0 + float(entry[2]), _MSG, FAIL,
+                         int(entry[0]), int(entry[0]))
 
     def pause_until(self, rank: int, time: float) -> Optional[float]:
         for s, e in self._pauses.get(rank, ()):
             if s <= time < e:
                 return e
         return None
+
+    def severed(self, a: int, b: int, time: float) -> bool:
+        """True while an anchored partition window separates ``a`` from
+        ``b`` at ``time`` (bidirectional: group order is irrelevant)."""
+        for sa, sb, s, e in self._partitions:
+            if s <= time < e and ((a in sa and b in sb)
+                                  or (a in sb and b in sa)):
+                return True
+        return False
+
+    def unsettled(self, it: int, now: float) -> bool:
+        """True while this fault spec can still perturb the run: a kill,
+        pause or partition scheduled for a LATER iteration, or an
+        already-anchored pause/partition window that has not closed.
+        ``quiesce_after`` consults this so early termination never races
+        a scheduled fault."""
+        if any(entry[1] > it for entry in self.spec.kill):
+            return True
+        if any(entry[1] > it for entry in self.spec.pause):
+            return True
+        if any(entry[2] > it for entry in self.spec.partition):
+            return True
+        if any(e > now for _, _, _, e in self._partitions):
+            return True
+        return any(e > now for wins in self._pauses.values()
+                   for _, e in wins)
+
+    def maybe_corrupt(self, src: int, dst: int, data):
+        """Send-side gossip corruption: with probability ``corrupt(src,
+        dst)`` return a mutated COPY of the in-flight gossip tuple
+        ``(root, rnd, visited, stamp, checksum, payload)`` — the shared
+        payload object is never touched.  Three seeded mutation modes:
+        flipped load, truncated cluster list, stale epoch stamp (the
+        last keeps payload and checksum valid so the stamp check is
+        load-bearing too)."""
+        if self.rng.random() >= self.prob(self.spec.corrupt, src, dst):
+            return data
+        root, rnd, visited, stamp, chk, payload = data
+        self.stats.corrupted += 1
+        mode = int(self.rng.integers(3))
+        s = payload[root]
+        if mode == 2:
+            return (root, rnd, visited, stamp - 1, chk, payload)
+        if mode == 1 and s.clusters:
+            bad = dataclasses.replace(
+                s, clusters=s.clusters[:len(s.clusters) // 2])
+        else:
+            # load flip doubles as the fallback when there is nothing to
+            # truncate (an emptied empty list would checksum-match)
+            bad = dataclasses.replace(s, load=-(s.load + 1.0))
+        return (root, rnd, visited, stamp, chk, {root: bad})
 
     def prob(self, p, src: int, dst: int) -> float:
         if callable(p):
@@ -401,6 +594,11 @@ class _Sim:
         f = self.fault
         if f is not None:
             sp = f.spec
+            if f._partitions and f.severed(src, dst, self.now):
+                f.stats.partitioned_dropped += 1
+                return
+            if kind == GOSSIP and f.corrupt_active and len(data) == 6:
+                data = f.maybe_corrupt(src, dst, data)
             if f.rng.random() < f.prob(sp.drop, src, dst):
                 f.stats.dropped += 1
                 return
@@ -432,6 +630,12 @@ class _Sim:
                 if klass == _MSG:
                     f.stats.dead_dropped += 1
                 return None
+            if (klass == _MSG and f._partitions
+                    and f.severed(src, dst, time)):
+                # severed at delivery time too: a message in flight when
+                # the window opened is cut with the link
+                f.stats.partitioned_dropped += 1
+                return None
             until = f.pause_until(dst, time)
             if until is not None:
                 f.stats.paused_deferrals += 1
@@ -449,7 +653,8 @@ def _run_gossip(sim: _Sim, summaries, info, *, k_rounds: int, fanout: int,
                 seed=None, root_seeds: Optional[Dict[int, list]] = None,
                 deadline: Optional[float],
                 dead: frozenset = frozenset(),
-                stats: Optional[dict] = None) -> int:
+                stats: Optional[dict] = None,
+                fault: Optional[_FaultCtx] = None, it: int = 0) -> int:
     """Stage 1a: the per-root augmented-inform epidemics as latency-
     delayed messages.
 
@@ -470,39 +675,81 @@ def _run_gossip(sim: _Sim, summaries, info, *, k_rounds: int, fanout: int,
     ``dead`` ranks neither seed, forward, nor receive (their deliveries
     vanish at the pop gate), so no dead rank's summary ever enters a
     live work list.  Returns the number of deadline-dropped deliveries.
+
+    Under an active ``fault`` context (``it`` is the iteration index)
+    the hardened path runs: every message carries an iteration stamp, a
+    :func:`~repro.core.gossip.summary_checksum` and the payload itself
+    (so in-flight corruption can mutate a copy without touching the
+    shared object), receivers validate stamp + checksum before merging
+    and QUARANTINE mismatches (counted, no merge, no forward — a later
+    clean copy still delivers), and ``FAIL`` events may fire mid-flood:
+    the killed rank joins the live ``fault.dead`` set, so subsequent
+    forwards exclude it and its queued deliveries vanish at the pop
+    gate, while its already-spread summary keeps flooding through live
+    ranks — a dying root cannot wedge the epidemic.  Fault-free runs
+    take none of these branches and stay bitwise-identical.
     """
     n = len(summaries)
     rngs: Dict[int, np.random.Generator] = {}
     payloads: Dict[int, dict] = {}
+    checks: Dict[int, int] = {}
+    dead_live = fault.dead if fault is not None else set(dead)
     dropped = 0
     if k_rounds >= 1:
         for r in range(n):
-            if r in dead:
+            if r in dead_live:
                 continue
             key = (root_seeds[r] if root_seeds is not None
                    else gossip_root_key(seed, r))
             rngs[r] = np.random.default_rng(key)
             payloads[r] = {r: summaries[r]}     # shared, read-only
+            if fault is not None:
+                checks[r] = summary_checksum(summaries[r])
             for p in pick_peers(rngs[r], n, r, fanout,
-                                visited={r} | set(dead)):
-                sim.send(GOSSIP, r, int(p), (r, 1, frozenset([r, int(p)])))
+                                visited={r} | set(dead_live)):
+                data = ((r, 1, frozenset([r, int(p)])) if fault is None
+                        else (r, 1, frozenset([r, int(p)]), it, checks[r],
+                              payloads[r]))
+                sim.send(GOSSIP, r, int(p), data)
     while sim.heap:
         ev = sim.pop()
         if ev is None:
             continue
         time, kind, src, dst, data = ev
+        if kind == FAIL:
+            assert fault is not None, "FAIL event without a fault context"
+            d = dst
+            if d in fault.dead:
+                continue        # duplicate kill — already dead
+            fault.dead.add(d)
+            fault.stats.killed += 1
+            if len(fault.dead) >= n:
+                raise RankDeath("all ranks dead — no survivor set left "
+                                "to balance; restart from checkpoint")
+            continue
         assert kind == GOSSIP
-        root, rnd, visited = data
+        root, rnd, visited = data[0], data[1], data[2]
         if deadline is not None and time > deadline:
             dropped += 1                # arrived stale: no merge, no forward
             continue
-        if not gossip_deliver(info[dst], payloads[root], stats):
+        if fault is not None:
+            stamp, chk, payload = data[3], data[4], data[5]
+            s = payload.get(root)
+            if stamp != it or s is None or summary_checksum(s) != chk:
+                fault.stats.corrupt_quarantined += 1
+                continue                # quarantine: no merge, no forward
+        else:
+            payload = payloads[root]
+        if not gossip_deliver(info[dst], payload, stats):
             continue                    # dedupe: no forward
         if rnd < k_rounds:
             for p in pick_peers(rngs[root], n, dst, fanout,
-                                visited=set(visited) | set(dead)):
-                sim.send(GOSSIP, dst, int(p),
-                         (root, rnd + 1, frozenset(visited) | {int(p)}))
+                                visited=set(visited) | set(dead_live)):
+                fwd = ((root, rnd + 1, frozenset(visited) | {int(p)})
+                       if fault is None
+                       else (root, rnd + 1, frozenset(visited) | {int(p)},
+                             it, checks[root], payloads[root]))
+                sim.send(GOSSIP, dst, int(p), fwd)
     return dropped
 
 
@@ -554,6 +801,25 @@ def _run_stage2(sim: _Sim, phase, state, clusters, work_lists, engine,
             diff, p = work_lists[r].popleft()
             if f is not None and p in f.dead:
                 f.stats.dead_peer_skips += 1
+                if work_lists[r]:
+                    sim.push(sim.now, _LOCAL, DECIDE, r, r)
+                continue
+            if (f is not None and f._partitions
+                    and f.severed(r, p, sim.now)):
+                # partition-aware timeout accounting: the REQ would be
+                # destroyed on the severed link and the rank would idle a
+                # full req_timeout before retrying — skip the doomed send
+                # outright so the island keeps making local progress.
+                # Bounded by the same per-(rank, peer) retry budget as
+                # yields; the item re-queues at the back, so reachable
+                # intra-island peers are tried first.
+                f.stats.partition_skips += 1
+                cnt = retries[r].get(p, 0)
+                if cnt < max_retries:
+                    retries[r][p] = cnt + 1
+                    work_lists[r].append((diff, p))
+                else:
+                    stats.retries_exhausted += 1
                 if work_lists[r]:
                     sim.push(sim.now, _LOCAL, DECIDE, r, r)
                 continue
@@ -782,6 +1048,7 @@ def ccm_lb_async(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
                  max_events: Optional[int] = None,
                  on_event=None,
                  fault: Optional[FaultSpec] = None,
+                 membership: tuple = (),
                  quiesce_after: Optional[int] = None,
                  profile: bool = False) -> CCMLBResult:
     """CCM-LB through the asynchronous event-loop driver.
@@ -810,9 +1077,25 @@ def ccm_lb_async(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
                         raises :class:`repro.runtime.fault.RankDeath`;
                         exceeding the event budget raises
                         :class:`LivelockError` carrying partial stats.
+    ``membership``      :class:`~repro.runtime.elastic.RankJoin` events
+                        (or plain ``(iteration, count)`` tuples): fresh
+                        ranks join the mesh at the start of the named
+                        iteration.  The phase is expanded in place
+                        (median-default capacities, rank-independent CSR
+                        carried over), the state/engine/tracker are
+                        re-grown on the wider rank set, and the joiners
+                        inherit gossip state through their first
+                        iteration's epidemic and attract transfers as
+                        ordinary underloaded ranks.  Joined rank ids land
+                        in ``CCMLBResult.joined_ranks``; ``CCMLBResult.
+                        state.phase`` is the final (expanded) phase.
     ``quiesce_after``   stop after this many consecutive zero-transfer
                         iterations (same early-termination knob as the
-                        sync driver; ``None`` runs all ``n_iter``).
+                        sync driver; ``None`` runs all ``n_iter``).  The
+                        quiet counter only advances while no fault
+                        window is open and no kill/join is still
+                        scheduled, so early exit never races a pending
+                        perturbation.
     ``profile``         record per-iteration host-side stage timings into
                         ``CCMLBResult.stage_timings`` (stage-2 scoring
                         and commit time accumulate under "score" /
@@ -836,8 +1119,16 @@ def ccm_lb_async(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
     """
     if quiesce_after is not None and quiesce_after < 1:
         raise ValueError("quiesce_after must be >= 1 (or None)")
+    joins: List[RankJoin] = [
+        j if isinstance(j, RankJoin) else RankJoin(*j) for j in membership]
+    for j in joins:
+        if not 0 <= j.iteration < n_iter:
+            raise ValueError(f"membership event {j!r}: iteration out of "
+                             f"range [0, {n_iter})")
     f: Optional[_FaultCtx] = None
     if fault is not None and fault.active():
+        # fault entries address the INITIAL rank set; ranks that only
+        # exist after a membership join cannot be named in a FaultSpec
         fault.validate(phase.num_ranks, n_iter)
         f = _FaultCtx(fault, phase.num_ranks)
     state = CCMState.build(phase, assignment, params, csr=csr)
@@ -849,10 +1140,13 @@ def ccm_lb_async(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
                              caching=incremental)
     transfer_log: list = []
     recovery_log: list = []
-    state.add_transfer_listener(
-        lambda t, a, b: transfer_log.append(
-            (tuple(int(x) for x in t), int(a), int(b))))
+
+    def _log_transfer(t, a, b):
+        transfer_log.append((tuple(int(x) for x in t), int(a), int(b)))
+
+    state.add_transfer_listener(_log_transfer)
     state.add_transfer_listener(tracker.note_transfer)
+    joined_ranks: List[int] = []
 
     latency_fn = make_latency(latency)
     rng_lat = np.random.default_rng([seed, 0x51D])   # latency-draw stream
@@ -885,6 +1179,25 @@ def ccm_lb_async(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
     it = 0
     try:
         for it in range(n_iter):
+            joins_now = [j for j in joins if j.iteration == it]
+            if joins_now:
+                old_n = phase.num_ranks
+                for j in joins_now:
+                    phase = expand_phase(phase, j.count,
+                                         mem_base=j.mem_base,
+                                         mem_cap=j.mem_cap, speed=j.speed)
+                joined_ranks.extend(range(old_n, phase.num_ranks))
+                # rebuild on the wider rank set; the CSR bundle is rank-
+                # independent so it carries over, and the assignment is
+                # already valid (joiners start empty by construction)
+                state = CCMState.build(phase, state.assignment, params,
+                                       csr=state.csr)
+                engine = (PhaseEngine(state, backend=backend,
+                                      incremental=incremental)
+                          if use_engine else None)
+                state.add_transfer_listener(_log_transfer)
+                tracker.regrow(state, engine)
+                state.add_transfer_listener(tracker.note_transfer)
             tm = None
             if profile:
                 tm = {"clusters": 0.0, "gossip": 0.0, "work_lists": 0.0,
@@ -899,12 +1212,15 @@ def ccm_lb_async(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
             info = {r: {r: summaries[r]} for r in range(phase.num_ranks)}
             deadline = (None if gossip_timeout is None
                         else sim.now + gossip_timeout)
+            if f is not None:
+                f.register_gossip(it, sim)
             dead_now = frozenset(f.dead) if f is not None else frozenset()
             gossip_dropped += _run_gossip(
                 sim, summaries, info, k_rounds=k_rounds, fanout=fanout,
                 root_seeds={r: tracker.root_key(r)
                             for r in range(phase.num_ranks)},
-                deadline=deadline, dead=dead_now, stats=tracker.counters)
+                deadline=deadline, dead=dead_now, stats=tracker.counters,
+                fault=f, it=it)
             if profile:
                 tm["gossip"] = perf_counter() - t0
                 t0 = perf_counter()
@@ -922,7 +1238,13 @@ def ccm_lb_async(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
                         max_retries=max_retries, on_event=on_event,
                         fault=f)
             if f is not None and f.dead - f.recovered:
+                newly_dead = sorted(f.dead - f.recovered)
                 _recover_survivors(phase, state, f, recovery_log)
+                # evict the dead ranks from every tracker cache family
+                # and force-dirty everything that knew them, so the
+                # epoch-keyed replay never serves their stale state and
+                # quiescence stays absorbing
+                tracker.purge_ranks(newly_dead)
             iter_transfers.append(stats.transfers - before)
             tracker.end_iteration()
             if profile:
@@ -932,7 +1254,10 @@ def ccm_lb_async(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
             trace_tot.append(state.total_work())
             trace_imb.append(state.imbalance())
             if quiesce_after is not None:
-                quiet = quiet + 1 if iter_transfers[-1] == 0 else 0
+                settled = ((f is None or not f.unsettled(it, sim.now))
+                           and not any(j.iteration > it for j in joins))
+                quiet = quiet + 1 if (iter_transfers[-1] == 0
+                                      and settled) else 0
                 if quiet >= quiesce_after:
                     break
     except LivelockError as e:
@@ -959,6 +1284,7 @@ def ccm_lb_async(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
                                      else None),
                        dead_ranks=(sorted(f.dead) if f is not None
                                    else None),
+                       joined_ranks=joined_ranks if joins else None,
                        iter_transfers=iter_transfers,
                        stage_timings=stage_timings if profile else None,
                        quiesce_counters=tracker.iter_counters,
@@ -971,7 +1297,8 @@ def ccm_lb_async(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
 def run_ccm_lb(phase, a0, params, *, async_mode: bool = False, latency=0.0,
                gossip_timeout=None, batch_lock_events: int = 1,
                spec_window: int = 1, spec_mode: str = "scan",
-               fault: Optional[FaultSpec] = None, **kw) -> CCMLBResult:
+               fault: Optional[FaultSpec] = None,
+               membership: tuple = (), **kw) -> CCMLBResult:
     """Dispatch one balancing run to the synchronous driver or — with
     ``async_mode=True`` — to this module's event-loop simulator, which
     models message latency and makes the §IV-B conflict/yield/chain
@@ -995,6 +1322,11 @@ def run_ccm_lb(phase, a0, params, *, async_mode: bool = False, latency=0.0,
             raise ValueError("fault is an async-driver knob (the sync "
                              "round-robin loop has no network to degrade); "
                              "pass async_mode=True")
+        if membership:
+            raise ValueError("membership is an async-driver knob (mid-run "
+                             "joins need the event loop; for inter-phase "
+                             "joins use ccm_lb_pipeline(membership=...)); "
+                             "pass async_mode=True")
         return ccm_lb(phase, a0, params, batch_lock_events=batch_lock_events,
                       spec_window=spec_window, spec_mode=spec_mode, **kw)
     if batch_lock_events != 1:
@@ -1005,4 +1337,5 @@ def run_ccm_lb(phase, a0, params, *, async_mode: bool = False, latency=0.0,
                          "async event sequence is not derivable up front); "
                          "unsupported with async_mode=True")
     return ccm_lb_async(phase, a0, params, latency=latency,
-                        gossip_timeout=gossip_timeout, fault=fault, **kw)
+                        gossip_timeout=gossip_timeout, fault=fault,
+                        membership=membership, **kw)

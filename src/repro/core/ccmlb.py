@@ -149,6 +149,8 @@ class CCMLBResult:
     fault_stats: Optional[object] = None    # FaultStats when fault active
     recovery_log: Optional[list] = None     # crash-recovery migrations
     dead_ranks: Optional[list] = None       # ranks killed mid-run
+    joined_ranks: Optional[list] = None     # ranks joined mid-run
+    # (membership events; ``state.phase`` is the final, expanded phase)
     # speculative-scan observability (zero/None off the spec driver)
     spec_rollbacks: int = 0        # window events rolled back + re-queued
     spec_windows: int = 0          # compiled window launches

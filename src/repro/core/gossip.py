@@ -64,6 +64,24 @@ def gossip_root_key(seed, root: int) -> list:
     return base + [int(root)]
 
 
+def summary_checksum(s: RankSummary) -> int:
+    """Deterministic integer checksum over a summary's numeric content.
+
+    Covers every field the work-list scorer reads (rank scalars plus the
+    per-cluster summary scalars), so any in-flight mutation the fault
+    harness can make (repro/core/async_sim.py, ``FaultSpec.corrupt``)
+    changes the value.  Built on ``hash()`` of int/float tuples, which is
+    deterministic across processes (only str/bytes hashing is seeded) —
+    the receiver recomputes it over the delivered payload and quarantines
+    on mismatch.
+    """
+    clusters = tuple(
+        (c.rank, c.local_id, c.load, c.mem, c.overhead, c.block_bytes,
+         c.vol_intra, c.vol_ext, c.size) for c in s.clusters)
+    return hash((s.rank, s.load, s.vol_on, s.vol_off, s.homing,
+                 s.mem_used, s.mem_cap, s.speed, clusters))
+
+
 def gossip_deliver(known: Dict[int, RankSummary],
                    payload: Dict[int, RankSummary],
                    stats: Optional[dict] = None) -> bool:

@@ -37,9 +37,11 @@ from repro.core.ccmlb import CCMLBResult, ccm_lb
 from repro.core.csr import PhaseCSR
 from repro.core.problem import (CCMParams, Phase, initial_assignment,
                                 same_topology)
+from repro.runtime.elastic import RankJoin, expand_phase
 
 __all__ = ["PipelinePhase", "PhaseRun", "PipelineResult",
-           "ccm_lb_pipeline", "same_topology", "warm_start_assignment"]
+           "ccm_lb_pipeline", "same_topology", "warm_start_assignment",
+           "RankJoin"]
 
 
 @dataclasses.dataclass
@@ -155,6 +157,7 @@ def ccm_lb_pipeline(phases: Sequence[Union[Phase, PipelinePhase]],
                     initial_mode: str = "home",
                     a0: Optional[np.ndarray] = None,
                     seed: int = 0,
+                    membership: tuple = (),
                     **lb_kwargs) -> PipelineResult:
     """Balance a sequence of phases with warm-started assignments and
     amortized CSR builds.
@@ -184,6 +187,17 @@ def ccm_lb_pipeline(phases: Sequence[Union[Phase, PipelinePhase]],
     engine_carried`` reports which happened per phase.  Requires
     ``warm_start`` (a cold start discards the assignment the carried
     state serves).
+    ``membership``: :class:`~repro.runtime.elastic.RankJoin` events (or
+    plain ``(iteration, count)`` tuples) whose ``iteration`` names the
+    PHASE index at which fresh ranks join the stream.  From that phase
+    onward every phase's rank set is expanded with the joined rows
+    (capacities/speed resolved once, at join time, against the
+    then-current mesh — median defaults), so a pod that joins mid-stream
+    persists; the warm start carries every task (old ranks all remain
+    valid) and the joiners fill through ordinary balancing.  Topology is
+    rank-independent, so CSR sharing across the join boundary is
+    unaffected; ``carry_engine`` falls back to a fresh build for exactly
+    the join phase (rank counts differ) and resumes after it.
     Remaining keyword arguments (``n_iter``, ``fanout``, ``use_engine``,
     ``backend`` — including the compiled ``"jit"`` scorer runtime, whose
     shape buckets persist across phases so a long stream compiles exactly
@@ -201,6 +215,13 @@ def ccm_lb_pipeline(phases: Sequence[Union[Phase, PipelinePhase]],
         params_seq = list(params)
         if len(params_seq) != len(phases):
             raise ValueError("params sequence must match the phase count")
+    joins = [j if isinstance(j, RankJoin) else RankJoin(*j)
+             for j in membership]
+    for j in joins:
+        if not 0 <= j.iteration < len(phases):
+            raise ValueError(f"membership event {j!r}: phase index out of "
+                             f"range [0, {len(phases)})")
+    joined_rows: List[Tuple[float, float, float]] = []
     runs: List[PhaseRun] = []
     prev: Optional[Tuple[Phase, np.ndarray, Optional[np.ndarray]]] = None
     csr: Optional[PhaseCSR] = None
@@ -208,6 +229,22 @@ def ccm_lb_pipeline(phases: Sequence[Union[Phase, PipelinePhase]],
     for k, item in enumerate(phases):
         pp = item if isinstance(item, PipelinePhase) else PipelinePhase(item)
         ph = pp.phase
+        # ranks joined at an earlier phase persist: re-apply their rows,
+        # then resolve this phase's joins against the expanded mesh
+        for mb, mc, sp in joined_rows:
+            ph = expand_phase(ph, 1, mem_base=mb, mem_cap=mc, speed=sp)
+        for j in joins:
+            if j.iteration != k:
+                continue
+            for _ in range(j.count):
+                mb = (float(np.median(ph.rank_mem_base))
+                      if j.mem_base is None else float(j.mem_base))
+                mc = (float(np.median(ph.rank_mem_cap))
+                      if j.mem_cap is None else float(j.mem_cap))
+                sp = (float(np.median(ph.rank_speed))
+                      if j.speed is None else float(j.speed))
+                joined_rows.append((mb, mc, sp))
+                ph = expand_phase(ph, 1, mem_base=mb, mem_cap=mc, speed=sp)
         carried = 0
         use_a0 = a0 is not None and (k == 0 or not warm_start) \
             and np.asarray(a0).shape[0] == ph.num_tasks

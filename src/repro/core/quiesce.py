@@ -108,6 +108,7 @@ class QuiesceTracker:
         self.n = int(state.phase.num_ranks)
         # caching needs the engine's incrementally-maintained rank
         # segments (cluster rebuild scope) and flat summary tables
+        self._want_caching = bool(caching)
         self.caching = bool(caching and engine is not None
                             and getattr(engine, "incremental", False))
         self.counters: Dict[str, int] = {}
@@ -134,6 +135,84 @@ class QuiesceTracker:
                 vd.add(int(x))
             for x in np.unique(a[ph.comm_dst[eids]]):
                 vd.add(int(x))
+
+    def force_dirty(self, ranks) -> None:
+        """Mark ``ranks`` cluster- AND value-dirty for the next epoch fold
+        regardless of transfer activity.  The fault/membership paths use
+        this for state changes that do not flow through a transfer —
+        deaths, partitions healing, joins — so quiescence stays absorbing:
+        an externally-perturbed rank re-keys its gossip epoch and re-scores
+        exactly once instead of replaying stale cached state forever."""
+        for r in ranks:
+            r = int(r)
+            self.cluster_dirty.add(r)
+            self.value_dirty.add(r)
+
+    def purge_ranks(self, ranks) -> None:
+        """Evict dead ranks from every cache family so no stale entry of
+        theirs can ever be served again:
+
+          * **clusters / summaries** — the dead ranks' cached cluster lists
+            are emptied (crash recovery just migrated their tasks away;
+            they are also force-marked dirty, so the next iteration
+            rebuilds them from the now-empty task sets);
+          * **gossip reach** — the dead roots' cached epidemics are
+            dropped and their summaries spliced out of every rank's info
+            map (a dead rank's summary must never re-enter a work list);
+          * **work-list score tables** — the dead ranks' own candidate
+            lists are cleared and they are removed from every other
+            rank's scored candidates;
+          * **commit memo** — every memoized failed evaluation touching a
+            dead rank is deleted.
+
+        Ranks that had heard a dead root are force-marked dirty too, so
+        their work lists re-score on the caching (sync-driver) path.
+        """
+        dead = {int(r) for r in ranks}
+        if not dead:
+            return
+        self.force_dirty(dead)
+        for k in [k for k in self.memo if k[0] in dead or k[1] in dead]:
+            del self.memo[k]
+        affected: Set[int] = set()
+        for d in dead:
+            old = self.reach.pop(d, ())
+            self.reach_key.pop(d, None)
+            if self.info is not None:
+                for dst in old:
+                    if dst in self.info and self.info[dst].pop(d, None) \
+                            is not None:
+                        affected.add(dst)
+                self.info[d] = {}
+        if self.clusters is not None:
+            for d in dead:
+                self.clusters[d] = []
+                self.csum[d] = []
+        if self.scores is not None:
+            for r in list(self.scores):
+                if r in dead:
+                    self.scores[r] = []
+                else:
+                    kept = [(s, p) for (s, p) in self.scores[r]
+                            if p not in dead]
+                    if len(kept) != len(self.scores[r]):
+                        self.scores[r] = kept
+        self.force_dirty(affected - dead)
+
+    def regrow(self, state, engine) -> None:
+        """Re-target the tracker at a WIDER mesh after a membership join
+        (``ccm_lb_async(membership=...)`` rebuilt the state/engine on the
+        expanded phase).  Every cache is dropped and every rank marked
+        dirty — peer candidate sets are a function of the rank count, so
+        no cached reach, score list or memo entry survives a join — but
+        the cumulative counters and per-iteration snapshots are kept, so
+        accounting stays continuous across the membership change."""
+        self.state = state
+        self.engine = engine
+        self.n = int(state.phase.num_ranks)
+        self.caching = bool(self._want_caching and engine is not None
+                            and getattr(engine, "incremental", False))
+        self.reset()
 
     # ---- lifecycle --------------------------------------------------------
 

@@ -14,16 +14,22 @@ mid-run (the async fault harness, repro/core/async_sim.py), the survivor
 set is renumbered contiguously so the CCM-LB problem can be restated at
 the smaller rank count and warm-started via
 ``repro.core.pipeline.warm_start_assignment`` — same framing as a mesh
-shrink, one level down.  It is pure numpy on purpose: the async simulator
-imports it without pulling jax (the jax-heavy checkpoint/model imports
-below are deferred into :func:`resume_on_mesh`).
+shrink, one level down.  :func:`expand_phase` / :class:`RankJoin` are the
+join/expand counterpart: fresh ranks appended to a phase's rank set
+mid-stream (a pod joins), defaulting to the median capacity/speed of the
+existing ranks so a join never manufactures an outlier.  Both are pure
+numpy on purpose: the async simulator imports them without pulling jax
+(the jax-heavy checkpoint/model imports below are deferred into
+:func:`resume_on_mesh`).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Tuple
+from typing import Iterable, Optional, Tuple
 
 import numpy as np
+
+from repro.core.problem import Phase
 
 
 def resume_on_mesh(cfg, mesh, ckpt_dir: str, with_opt: bool = True) -> Tuple:
@@ -77,3 +83,64 @@ def survivor_resize(n_ranks: int, dead: Iterable[int]) -> SurvivorResize:
     old_to_new = np.full(n_ranks, survivors.size, np.int64)
     old_to_new[survivors] = np.arange(survivors.size, dtype=np.int64)
     return SurvivorResize(survivors, old_to_new)
+
+
+@dataclasses.dataclass(frozen=True)
+class RankJoin:
+    """A membership event: ``count`` fresh ranks join before iteration
+    ``iteration`` of a balancing run (async driver) or before phase
+    ``iteration`` of a pipeline (``ccm_lb_pipeline(membership=...)``).
+
+    ``mem_base`` / ``mem_cap`` / ``speed`` override the new ranks' rows;
+    left ``None`` they default to the median of the phase they join
+    (:func:`expand_phase`).  Joined ranks take the next ids past the
+    current rank count, start empty, participate in gossip from their
+    first iteration — inheriting peer state through the ordinary epidemic
+    flood — and attract transfers like any underloaded rank: the
+    rebalance IS the protocol, no side channel.
+    """
+
+    iteration: int
+    count: int = 1
+    mem_base: Optional[float] = None
+    mem_cap: Optional[float] = None
+    speed: Optional[float] = None
+
+    def __post_init__(self):
+        if self.iteration < 0:
+            raise ValueError("RankJoin.iteration must be >= 0")
+        if self.count < 1:
+            raise ValueError("RankJoin.count must be >= 1")
+
+
+def expand_phase(phase: Phase, count: int = 1, *,
+                 mem_base: Optional[float] = None,
+                 mem_cap: Optional[float] = None,
+                 speed: Optional[float] = None) -> Phase:
+    """Append ``count`` fresh ranks to a phase's rank set (the join/expand
+    counterpart of :func:`survivor_resize`).
+
+    Only the rank-indexed arrays grow; the task/block/comm structure is
+    shared by object, so ``same_topology(phase, expanded)`` holds and a
+    prebuilt :class:`~repro.core.csr.PhaseCSR` (task/block adjacency —
+    rank-independent by construction) stays valid.  Unspecified
+    capacities/speeds default to the median of the existing ranks.
+    """
+    if count < 1:
+        raise ValueError("expand_phase needs count >= 1")
+    mb = float(np.median(phase.rank_mem_base)) if mem_base is None \
+        else float(mem_base)
+    mc = float(np.median(phase.rank_mem_cap)) if mem_cap is None \
+        else float(mem_cap)
+    new_mb = np.concatenate([phase.rank_mem_base, np.full(count, mb)])
+    new_mc = np.concatenate([phase.rank_mem_cap, np.full(count, mc)])
+    sp = float(np.median(phase.rank_speed)) if speed is None \
+        else float(speed)
+    new_speed = np.concatenate([phase.rank_speed, np.full(count, sp)])
+    return Phase(
+        task_load=phase.task_load, task_mem=phase.task_mem,
+        task_overhead=phase.task_overhead, task_block=phase.task_block,
+        block_size=phase.block_size, block_home=phase.block_home,
+        comm_src=phase.comm_src, comm_dst=phase.comm_dst,
+        comm_vol=phase.comm_vol,
+        rank_mem_base=new_mb, rank_mem_cap=new_mc, rank_speed=new_speed)

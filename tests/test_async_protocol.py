@@ -33,10 +33,10 @@ from collections import Counter
 import numpy as np
 import pytest
 
-from repro.core import (CCMParams, FaultSpec, LivelockError, ccm_lb,
-                        ccm_lb_async, random_phase)
+from repro.core import (CCMParams, FaultSpec, LivelockError, RankJoin,
+                        ccm_lb, ccm_lb_async, random_phase, run_ccm_lb)
 from repro.core.async_sim import FAIL, GRANT, RELEASE, TIMEOUT
-from repro.core.problem import initial_assignment
+from repro.core.problem import initial_assignment, scaling_phase
 from repro.runtime.fault import NodeFailure, RankDeath
 
 PARAMS = CCMParams(delta=1e-9)
@@ -387,6 +387,197 @@ def test_livelock_error_is_structured():
     assert e.stats is not None          # partial ProtocolStats attached
     assert e.fault_stats is not None
     assert e.iteration == 0
+
+
+# ------------------------------------------- chaos suite: split brains,
+# corruption, stage-1 deaths, elastic joins
+
+def test_faultspec_validation_messages():
+    """Stricter validate() (satellite): duplicate kills, overlapping pause
+    windows, malformed partitions — each rejected with an actionable
+    message, not a downstream KeyError."""
+    with pytest.raises(ValueError, match="a rank dies once"):
+        FaultSpec(kill=((3, 0, 0.5), (3, 1, 0.5))).validate(16, 4)
+    with pytest.raises(ValueError, match="merge them into one window"):
+        FaultSpec(pause=((2, 1, 0.0, 5.0), (2, 1, 4.0, 9.0))).validate(16, 4)
+    # disjoint windows on the same rank/iteration are fine
+    FaultSpec(pause=((2, 1, 0.0, 4.0), (2, 1, 4.0, 9.0))).validate(16, 4)
+    with pytest.raises(ValueError, match="stage must be 1"):
+        FaultSpec(kill=((3, 0, 0.5, 7),)).validate(16, 4)
+    with pytest.raises(ValueError, match=r"expected \(rank, iteration"):
+        FaultSpec(kill=((3, 0),)).validate(16, 4)
+    with pytest.raises(ValueError, match="both sides of a split"):
+        FaultSpec(partition=(((0, 1, 2), (2, 3), 0, 0.0, 5.0),)) \
+            .validate(16, 4)
+    with pytest.raises(ValueError, match=r"out of range \[0, 16\)"):
+        FaultSpec(partition=(((0, 1), (2, 99), 0, 0.0, 5.0),)) \
+            .validate(16, 4)
+    with pytest.raises(ValueError, match="must be non-empty"):
+        FaultSpec(partition=(((), (2, 3), 0, 0.0, 5.0),)).validate(16, 4)
+    with pytest.raises(ValueError, match="0 <= start <= end"):
+        FaultSpec(partition=(((0, 1), (2, 3), 0, 5.0, 1.0),)).validate(16, 4)
+    with pytest.raises(ValueError, match="not in"):
+        FaultSpec(corrupt=1.5).validate(16, 4)
+    assert FaultSpec(partition=(((0,), (1,), 0, 0.0, 1.0),)).active()
+    assert FaultSpec(corrupt=0.01).active()
+
+
+def test_partition_healed_invariants():
+    """A split-brain window over the gossip stage: cross-island messages
+    are destroyed (counted), each island keeps making local progress, and
+    after the heal the run re-merges with the replay/mutex invariants
+    intact (the probe inside _run_faulted)."""
+    half = tuple(range(8))
+    other = tuple(range(8, 16))
+    spec = FaultSpec(partition=((half, other, 0, 0.0, 15.0),), seed=41)
+    res = _run_faulted(spec)
+    fs = res.fault_stats
+    assert fs.partitioned_dropped > 0, "the split never severed a message"
+    assert res.transfers > 0           # islands still balanced locally
+
+
+def test_partition_stage2_skip_accounting():
+    """A split that opens only AFTER gossip drains: the work lists are
+    global, so the DECIDE-time partition check must fire (skips counted,
+    retry budget consumed) instead of burning the full timeout on every
+    severed peer."""
+    phase, a0 = _contended_instance()
+    kw = dict(n_iter=2, seed=3, fanout=6, latency=FAULT_LAT)
+    ref = ccm_lb_async(phase, a0, PARAMS, collect_trace=True, **kw)
+    t_open = min(t for t, _, k, _, _ in ref.events if k == "DECIDE") - 1e-3
+    spec = FaultSpec(partition=((tuple(range(8)), tuple(range(8, 16)),
+                                 0, t_open, 1e9),), seed=42)
+    res = ccm_lb_async(phase, a0, PARAMS, fault=spec, **kw)
+    fs = res.fault_stats
+    assert fs.partition_skips > 0
+    np.testing.assert_array_equal(_replay(a0, res.transfer_log),
+                                  res.assignment)
+
+
+def test_partition_livelock_payload():
+    """Satellite: when a never-healing split plus an unbounded retry
+    budget overflows the event budget, the LivelockError must carry the
+    full post-mortem — iteration, processed/queued, partial stats and the
+    partition_skips that explain WHY it ran hot."""
+    phase = scaling_phase(16)
+    a0 = initial_assignment(phase)
+    kw = dict(n_iter=4, k_rounds=2, fanout=4, seed=0,
+              latency=("uniform", 0.5, 1.5))
+    ref = ccm_lb_async(phase, a0, PARAMS, collect_trace=True, **kw)
+    t_open = min(t for t, _, k, _, _ in ref.events if k == "DECIDE") - 0.01
+    spec = FaultSpec(partition=((tuple(range(8)), tuple(range(8, 16)),
+                                 0, t_open, 1e9),), seed=5)
+    with pytest.raises(LivelockError) as ei:
+        ccm_lb_async(phase, a0, PARAMS, fault=spec, max_retries=200,
+                     max_events=len(ref.events) + 500, **kw)
+    e = ei.value
+    assert e.processed == e.max_events + 1
+    assert e.queued >= 0 and e.sim_time > 0.0
+    assert e.iteration >= 0
+    assert e.stats is not None
+    assert e.fault_stats is not None
+    assert e.fault_stats.partition_skips > 0, \
+        "the post-mortem must show the partition churn that caused it"
+
+
+def test_gossip_corruption_is_quarantined():
+    """Every mutated payload must be caught by the checksum/stamp check:
+    corrupted == corrupt_quarantined (nothing merged, nothing forwarded),
+    and the balancer still converges off clean copies."""
+    res = _run_faulted(FaultSpec(corrupt=0.15, seed=43))
+    fs = res.fault_stats
+    assert fs.corrupted > 0, "the corruption injector never fired"
+    assert fs.corrupted == fs.corrupt_quarantined, \
+        f"{fs.corrupted} corrupted but {fs.corrupt_quarantined} quarantined"
+    assert res.transfers > 0
+
+
+def test_stage1_kill_does_not_wedge_gossip():
+    """A root dying MID-EPIDEMIC: the flood must drain without it, the
+    survivors finish the iteration, and recovery strands nothing on the
+    dead rank."""
+    spec = FaultSpec(kill=((3, 1, 0.5, 1),), seed=44)
+    res = _run_faulted(spec, n_iter=4)
+    fs = res.fault_stats
+    assert res.dead_ranks == [3]
+    assert fs.killed == 1
+    assert not (res.assignment == 3).any()
+    assert fs.recovered_tasks > 0
+    assert res.transfers > 0
+
+
+def test_stage1_kill_all_ranks_raises_rank_death():
+    """Killing every rank during the flood is unrecoverable and must
+    surface as RankDeath from inside _run_gossip, not a hang."""
+    phase, a0 = _contended_instance()
+    kill = tuple((r, 0, 0.1, 1) for r in range(phase.num_ranks))
+    with pytest.raises(RankDeath):
+        ccm_lb_async(phase, a0, PARAMS, n_iter=2, seed=3,
+                     latency=FAULT_LAT, fault=FaultSpec(kill=kill, seed=45))
+
+
+def test_mid_stream_join_attracts_work():
+    """Elastic growth: ranks joining at iteration 1 are folded into the
+    mesh, inherit gossip state through the ordinary flood, and end the
+    run owning real work — with the transfer log replaying cleanly across
+    the membership change."""
+    phase, a0 = _contended_instance()
+    res = ccm_lb_async(phase, a0, PARAMS, n_iter=3, seed=3, fanout=6,
+                       latency=FAULT_LAT,
+                       membership=(RankJoin(iteration=1, count=2),))
+    assert res.joined_ranks == [16, 17]
+    assert res.state.phase.num_ranks == 18
+    on_joined = int(np.isin(res.assignment, res.joined_ranks).sum())
+    assert on_joined > 0, "joiners attracted no work"
+    np.testing.assert_array_equal(_replay(a0, res.transfer_log),
+                                  res.assignment)
+    # joins without faults leave fault accounting untouched
+    assert res.fault_stats is None and res.dead_ranks is None
+
+
+def test_crash_then_join_recovers():
+    """Shrink then re-grow in one run: rank 3 dies at iteration 1, a
+    replacement joins at iteration 2 — the dead rank stays empty, the
+    joiner picks up work, and the log replays end to end."""
+    phase, a0 = _contended_instance()
+    spec = FaultSpec(kill=((3, 1, 0.5),), seed=46)
+    res = ccm_lb_async(phase, a0, PARAMS, n_iter=4, seed=3, fanout=6,
+                       latency=FAULT_LAT, fault=spec,
+                       membership=(RankJoin(iteration=2, count=1),))
+    assert res.dead_ranks == [3]
+    assert res.joined_ranks == [16]
+    assert not (res.assignment == 3).any()
+    assert res.fault_stats.recovered_tasks > 0
+    np.testing.assert_array_equal(_replay(a0, res.transfer_log),
+                                  res.assignment)
+
+
+def test_membership_validation():
+    """Join events are validated up front with actionable errors."""
+    phase, a0 = _contended_instance()
+    with pytest.raises(ValueError, match="iteration out of range"):
+        ccm_lb_async(phase, a0, PARAMS, n_iter=2,
+                     membership=(RankJoin(iteration=5),))
+    with pytest.raises(ValueError, match="iteration"):
+        RankJoin(iteration=-1)
+    with pytest.raises(ValueError, match="count"):
+        RankJoin(iteration=0, count=0)
+    with pytest.raises(ValueError, match="async-driver knob"):
+        run_ccm_lb(phase, a0, PARAMS, async_mode=False,
+                   membership=(RankJoin(iteration=0),))
+
+
+def test_join_with_zero_latency_matches_rebuilt_baseline():
+    """Determinism across the membership path: the same join schedule run
+    twice is bitwise-identical (joins draw nothing from the fault rng)."""
+    phase, a0 = _contended_instance()
+    kw = dict(n_iter=3, seed=3, fanout=6, latency=FAULT_LAT,
+              membership=(RankJoin(iteration=1, count=1),))
+    r1 = ccm_lb_async(phase, a0, PARAMS, **kw)
+    r2 = ccm_lb_async(phase, a0, PARAMS, **kw)
+    np.testing.assert_array_equal(r1.assignment, r2.assignment)
+    assert r1.transfer_log == r2.transfer_log
+    assert r1.joined_ranks == r2.joined_ranks
 
 
 def test_fault_runs_are_deterministic():

@@ -204,3 +204,27 @@ def test_plan_pipeline_stages_schedule_smoke():
     for p in plans:
         assert p.assignment.shape[0] == len(cfg.layer_kinds())
         assert np.bincount(p.assignment, minlength=4).min() >= 1
+
+
+# ------------------------------------------------------------- membership
+def test_pipeline_membership_joins_expand_later_phases():
+    """Inter-phase elasticity: a RankJoin at phase index 1 expands that
+    phase and every later one (the joined rows are resolved once and
+    re-applied), the joiners end up owning work, warm-starting keeps
+    working across the membership change, and the pre-join phase is
+    untouched bitwise."""
+    from repro.core import RankJoin
+
+    phases = _drifting_phases(0, n_phases=3)
+    pipe = ccm_lb_pipeline(phases, PARAMS, n_iter=2, seed=0,
+                           membership=(RankJoin(iteration=1, count=2),))
+    assert [r.result.state.phase.num_ranks for r in pipe.runs] == [10, 12, 12]
+    final = pipe.runs[-1].result.assignment
+    assert np.isin(final, [10, 11]).sum() > 0, "joiners attracted no work"
+    assert [r.warm_started for r in pipe.runs] == [False, True, True]
+    ref = ccm_lb_pipeline(phases, PARAMS, n_iter=2, seed=0)
+    np.testing.assert_array_equal(pipe.runs[0].result.assignment,
+                                  ref.runs[0].result.assignment)
+    with pytest.raises(ValueError, match="iteration"):
+        ccm_lb_pipeline(phases, PARAMS, n_iter=2, seed=0,
+                        membership=(RankJoin(iteration=5),))

@@ -239,3 +239,68 @@ def test_gossip_deliver_dedupe_counts():
     assert gossip_deliver(known, {0: s0, 1: s1}, st)
     assert known[1] is s1
     assert st["gossip_noop_merges"] == 1
+
+
+# ------------------------------------------------- death / membership purge
+
+def test_purge_ranks_clears_all_cache_families():
+    """Regression (robustness satellite): after a rank dies, purge_ranks
+    must scrub it from ALL FOUR cache families — cluster/summary caches,
+    gossip reach + per-rank views, work-list score tables, and the
+    commit memo — and force-dirty every survivor whose gossip view
+    contained it.  A stale entry in any family would let a later
+    incremental fold score transfers toward a dead rank."""
+    phase = _phase(0)
+    a0 = initial_assignment(phase)
+    res = ccm_lb(phase, a0, PARAMS, n_iter=3, seed=0, incremental=True)
+    tr = res.tracker
+    assert tr is not None and tr.caching
+    dead = 3
+    # preconditions: the caches are warm and the rank is visible in them
+    assert dead in tr.reach
+    assert any(dead in view for dst, view in tr.info.items() if dst != dead)
+    assert tr.scores is not None and tr.clusters is not None
+
+    tr.purge_ranks([dead])
+
+    # family 1: cluster/summary caches emptied for the dead rank
+    assert tr.clusters[dead] == [] and tr.csum[dead] == []
+    # family 2: gossip — no reach entry, empty own view, gone from every
+    # survivor's view
+    assert dead not in tr.reach and dead not in tr.reach_key
+    assert tr.info[dead] == {}
+    for dst, view in tr.info.items():
+        assert dead not in view or dst == dead
+    # family 3: work-list score tables — own list cleared, never listed
+    # as a peer elsewhere
+    for r, lst in tr.scores.items():
+        if r == dead:
+            assert lst == []
+        else:
+            assert all(p != dead for (_, p) in lst)
+    # family 4: commit memo — no key touching the dead rank survives
+    for k in tr.memo:
+        assert dead not in (k[0], k[1])
+    # dirty propagation: the dead rank and every affected survivor must
+    # re-enter the next fold dirty
+    assert dead in tr.cluster_dirty and dead in tr.value_dirty
+
+
+def test_async_kill_run_leaves_no_dead_rank_in_tracker():
+    """Integration: the async driver purges the tracker when a rank dies
+    mid-run — the carried tracker ends the run with no trace of it."""
+    from repro.core import FaultSpec
+
+    phase = _phase(0)
+    a0 = initial_assignment(phase)
+    res = run_ccm_lb(phase, a0, PARAMS, n_iter=4, k_rounds=2, fanout=3,
+                     seed=0, incremental=True, async_mode=True,
+                     latency=("uniform", 0.5, 1.5),
+                     fault=FaultSpec(kill=((3, 1, 0.5),), seed=9))
+    assert res.dead_ranks == [3]
+    tr = res.tracker
+    assert tr is not None
+    for k in tr.memo:
+        assert 3 not in (k[0], k[1])
+    if tr.scores is not None:
+        assert all(p != 3 for lst in tr.scores.values() for (_, p) in lst)
