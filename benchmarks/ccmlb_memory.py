@@ -1,0 +1,365 @@
+"""Memory-pressure sweep: balance quality vs headroom, replication margin.
+
+The memory-bind counterpart of ``ccmlb_fault``: every record passes a
+post-hoc gate — the transfer/replication log replays from the initial
+assignment to the final one, and a from-scratch :class:`CCMState` rebuild
+of the final assignment satisfies eq. 7 against ``effective_mem_cap`` on
+EVERY rank (zero cap violations, asserted, per config).
+
+Configs, per pair count of the constructed hot-block instance (each pair
+of ranks shares one replicable weight block whose cluster is atomic for
+the replication-free balancer):
+
+  * ``headroom_*`` — ``mem_headroom`` sweep with the replication move
+    vocabulary enabled: at low headroom the block-split replication fires
+    and max-work drops; past the pressure knee the replica no longer
+    fits under ``cap * (1 - headroom)`` and the balancer must degrade
+    gracefully to the replication-free plateau instead of violating a
+    cap.  Quality (Wmax/mean), peak memory utilisation, replica counts
+    and transfers are recorded at every point.
+  * ``replication_margin`` — replicate=True vs replicate=False at zero
+    headroom, same seed: the enabled run must beat the free run on
+    max-work (the measured margin lands in the JSON and is asserted
+    positive).
+  * ``async_replicate`` — the event-loop driver at zero latency must be
+    bitwise the sync driver (assignment + transfer log + work trace),
+    and a latency run is recorded under the same replay gate.
+  * ``pipeline_replicate`` — ``replicate`` threaded through the
+    multi-phase driver's lb kwargs; per-phase feasibility gated.
+  * ``crash_spill`` — a rank dies while the warm-start target has no
+    memory room: recovery must spill to a feasible survivor
+    (``recovery_spills`` counted) and end feasible.
+  * ``join_relief`` — ranks inside the headroom band shed onto a
+    mid-stream joiner with fresh capacity until every rank clears the
+    soft cap.
+
+Results land in ``BENCH_ccmlb_memory.json``.
+
+Standalone:  PYTHONPATH=src python benchmarks/ccmlb_memory.py [--quick]
+(--quick runs the 2-pair configs for CI; also wired into
+benchmarks/run.py as ``ccmlb_memory``.)
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.core import CCMParams, CCMState, ccm_lb
+from repro.core.async_sim import FaultSpec, ccm_lb_async
+from repro.core.ccm import effective_mem_cap
+from repro.core.pipeline import ccm_lb_pipeline
+from repro.core.problem import Phase
+from repro.runtime.elastic import RankJoin
+
+JSON_PATH = os.environ.get("BENCH_CCMLB_MEMORY_JSON",
+                           "BENCH_ccmlb_memory.json")
+N_ITER = 6
+HEADROOM_SWEEP = (0.0, 0.1, 0.4)    # past 0.1 the replica no longer fits
+MEM_CAP = 50.0
+
+
+def _pressure_phase(pairs: int, mem_cap: float = MEM_CAP) -> Phase:
+    """``pairs`` independent rank pairs (2p, 2p+1).  Even ranks hold one
+    4-task cluster of block p (load 6.0 — exactly the cluster splitter's
+    load cap, so the replication-free balancer cannot break it), three
+    heavy singletons, and a tiny stage-1 trigger; odd ranks hold three
+    heavy, memory-fat singletons plus their own tiny trigger.  Swapping
+    heavies exactly cancels (6.0 both ways, no strict gain), so the
+    replication-free balancer plateaus at ~24 while the block split
+    reaches ~21.  Replicating block p onto the odd rank (mem after:
+    21.2 + 6 + 10 = 37.2) fits under cap 50 at headroom <= 0.1 (soft
+    cap 45) but not at 0.4 (soft cap 30).
+
+    ``mem_cap``: at the default 50 memory binds once the fat heavies
+    concentrate (at many pairs the underloaded ranks reach ~34.8 used, so
+    a half-split landing — 6 task mem + a 10-byte block copy — is
+    correctly refused); the margin config passes a roomy cap so it
+    measures the pure move-vocabulary gain instead of the refusal."""
+    load, mem, blk, a0 = [], [], [], []
+    for p in range(pairs):
+        load += [1.5] * 4 + [6.0] * 3 + [0.01] * 4 + [6.0] * 3 + [0.01] * 4
+        mem += [3.0] * 4 + [0.1] * 3 + [0.1] * 4 + [7.0] * 3 + [0.1] * 4
+        blk += [p] * 4 + [-1] * 14
+        a0 += [2 * p] * 11 + [2 * p + 1] * 7
+    k = len(load)
+    ph = Phase(task_load=load, task_mem=mem,
+               task_overhead=np.zeros(k), task_block=blk,
+               block_size=np.full(pairs, 10.0),
+               block_home=np.arange(pairs, dtype=np.int64) * 2,
+               comm_src=[], comm_dst=[], comm_vol=[],
+               rank_mem_base=np.zeros(2 * pairs),
+               rank_mem_cap=np.full(2 * pairs, mem_cap))
+    return ph, np.asarray(a0, np.int64)
+
+
+def _check_zero_violations(phase, a0, res, params, tag) -> int:
+    """Replay the transfer/replication log onto ``a0`` and rebuild: the
+    final state must satisfy eq. 7 on every rank.  Returns the violation
+    count (always 0 — asserted) so it can land in the record."""
+    replay = np.asarray(a0, np.int64).copy()
+    for tasks, r_from, r_to in res.transfer_log:
+        idx = np.asarray(tasks, np.int64)
+        assert (replay[idx] == r_from).all(), f"{tag}: replay diverged"
+        replay[idx] = r_to
+    assert np.array_equal(replay, res.assignment), f"{tag}: log incomplete"
+    fphase = res.state.phase
+    final = CCMState.build(fphase, res.assignment, params)
+    bad = [r for r in range(fphase.num_ranks)
+           if not final.memory_feasible(r)]
+    assert not bad, f"{tag}: ranks {bad} over their memory cap"
+    return 0
+
+
+def _quality(res, phase):
+    return float(res.max_work[-1] / (phase.task_load.sum() / phase.num_ranks))
+
+
+def _mem_util(res, params):
+    """Peak M_max(r) / effective cap over ranks, on the final state."""
+    fphase = res.state.phase
+    final = CCMState.build(fphase, res.assignment, params)
+    caps = effective_mem_cap(fphase.rank_mem_cap, params)
+    return float(max(final.max_memory(r) / caps[r]
+                     for r in range(fphase.num_ranks)))
+
+
+def _replicas(res):
+    """Extra block copies beyond one residency per block."""
+    present = (res.state.block_count > 0).sum(axis=0)
+    return int(np.maximum(present - 1, 0).sum())
+
+
+def _record(records, tag, pairs, phase, res, params, seconds, **extra):
+    records.append({
+        "config": tag,
+        "pairs": pairs,
+        "ranks": phase.num_ranks,
+        "n_iter": N_ITER,
+        "seconds": seconds,
+        "max_work": float(res.max_work[-1]),
+        "max_work_over_mean": _quality(res, phase),
+        "imbalance_after": float(res.imbalance[-1]),
+        "transfers": int(res.transfers),
+        "replicas": _replicas(res),
+        "peak_mem_utilization": _mem_util(res, params),
+        "cap_violations": 0,
+        **extra,
+    })
+
+
+def _headroom_sweep(report, records, pairs: int):
+    phase, a0 = _pressure_phase(pairs)
+    qualities = {}
+    for h in HEADROOM_SWEEP:
+        params = CCMParams(alpha=1.0, beta=0.0, gamma=0.0, delta=0.0,
+                           mem_headroom=h)
+        t0 = time.perf_counter()
+        res = ccm_lb(phase, a0, params, n_iter=N_ITER, seed=0,
+                     replicate=True)
+        dt = time.perf_counter() - t0
+        _check_zero_violations(phase, a0, res, params,
+                               f"headroom_{h}@{pairs}")
+        _record(records, f"headroom_{h:g}", pairs, phase, res, params, dt,
+                mem_headroom=h)
+        qualities[h] = float(res.max_work[-1])
+        report(f"ccmlb_memory_pairs_{pairs}_headroom_{h:g}", dt * 1e6,
+               f"wmax={res.max_work[-1]:.2f} replicas={_replicas(res)} "
+               f"util={_mem_util(res, params):.3f}")
+    # the knee: tight headroom must refuse the replica, not violate caps
+    assert qualities[HEADROOM_SWEEP[0]] <= qualities[HEADROOM_SWEEP[-1]], \
+        f"@{pairs}: loose headroom lost to tight"
+    low = next(r for r in records
+               if r["config"] == f"headroom_{HEADROOM_SWEEP[0]:g}"
+               and r["pairs"] == pairs)
+    high = next(r for r in records
+                if r["config"] == f"headroom_{HEADROOM_SWEEP[-1]:g}"
+                and r["pairs"] == pairs)
+    assert low["replicas"] > 0, f"@{pairs}: replication never fired"
+    assert high["replicas"] == 0, \
+        f"@{pairs}: a replica slipped past the headroom band"
+
+
+def _replication_margin(report, records, pairs: int):
+    # roomy cap: memory must not bind here — the config measures what the
+    # replication vocabulary alone buys on max-work (the sweep above is
+    # where the caps bite)
+    phase, a0 = _pressure_phase(pairs, mem_cap=200.0)
+    params = CCMParams(alpha=1.0, beta=0.0, gamma=0.0, delta=0.0)
+    t0 = time.perf_counter()
+    base = ccm_lb(phase, a0, params, n_iter=N_ITER, seed=0)
+    rep = ccm_lb(phase, a0, params, n_iter=N_ITER, seed=0, replicate=True)
+    dt = time.perf_counter() - t0
+    for tag, res in (("replication_free", base), ("replication_margin", rep)):
+        _check_zero_violations(phase, a0, res, params, f"{tag}@{pairs}")
+    margin = float((base.max_work[-1] - rep.max_work[-1])
+                   / base.max_work[-1])
+    assert margin > 0, \
+        f"@{pairs}: replication did not beat the free run " \
+        f"({rep.max_work[-1]} vs {base.max_work[-1]})"
+    _record(records, "replication_free", pairs, phase, base, params, dt)
+    _record(records, "replication_margin", pairs, phase, rep, params, dt,
+            margin_vs_free=margin)
+    report(f"ccmlb_memory_pairs_{pairs}_replication_margin", dt * 1e6,
+           f"wmax {base.max_work[-1]:.2f} -> {rep.max_work[-1]:.2f} "
+           f"(margin {margin:.1%})")
+    return margin
+
+
+def _async_and_pipeline(report, records, pairs: int):
+    phase, a0 = _pressure_phase(pairs)
+    params = CCMParams(alpha=1.0, beta=0.0, gamma=0.0, delta=0.0)
+    sync = ccm_lb(phase, a0, params, n_iter=N_ITER, seed=0, replicate=True)
+
+    t0 = time.perf_counter()
+    res = ccm_lb_async(phase, a0, params, n_iter=N_ITER, seed=0,
+                       replicate=True)
+    dt = time.perf_counter() - t0
+    bitwise = bool(np.array_equal(res.assignment, sync.assignment)
+                   and res.transfer_log == sync.transfer_log
+                   and res.max_work == sync.max_work)
+    assert bitwise, f"async@{pairs}: zero-latency run diverged from sync"
+    _check_zero_violations(phase, a0, res, params, f"async@{pairs}")
+    _record(records, "async_replicate", pairs, phase, res, params, dt,
+            bitwise_identical_to_sync=True)
+    report(f"ccmlb_memory_pairs_{pairs}_async", dt * 1e6, "bitwise==sync")
+
+    lat = ("uniform", 0.5, 1.5)
+    t0 = time.perf_counter()
+    res = ccm_lb_async(phase, a0, params, n_iter=N_ITER, seed=0,
+                       replicate=True, latency=lat)
+    dt = time.perf_counter() - t0
+    _check_zero_violations(phase, a0, res, params, f"async_lat@{pairs}")
+    _record(records, "async_replicate_latency", pairs, phase, res, params,
+            dt)
+
+    t0 = time.perf_counter()
+    pipe = ccm_lb_pipeline([phase, phase], params, a0=a0, seed=0,
+                           n_iter=N_ITER, replicate=True)
+    dt = time.perf_counter() - t0
+    start = a0
+    for i, run_ in enumerate(pipe.runs):
+        # identical topologies warm-start from the previous phase's final
+        # assignment, so each phase's log replays from it
+        _check_zero_violations(phase, start, run_.result, params,
+                               f"pipeline_{i}@{pairs}")
+        start = run_.result.assignment
+    _record(records, "pipeline_replicate", pairs, phase,
+            pipe.runs[-1].result, params, dt, phases=len(pipe.runs))
+    report(f"ccmlb_memory_pairs_{pairs}_pipeline", dt * 1e6,
+           f"phases={len(pipe.runs)} "
+           f"wmax={pipe.runs[-1].result.max_work[-1]:.2f}")
+
+
+def _crash_spill(report, records):
+    """Rank 2 dies; the warm-start target (rank 0) has no memory room, so
+    recovery must spill the stranded groups to rank 1 and stay feasible."""
+    phase = Phase(task_load=[0.1, 1.0, 1.0, 1.0, 1.0],
+                  task_mem=[0.05, 1.0, 1.0, 1.0, 1.0],
+                  task_overhead=np.zeros(5), task_block=[-1] * 5,
+                  block_size=[], block_home=[],
+                  comm_src=[], comm_dst=[], comm_vol=[],
+                  rank_mem_base=np.zeros(3),
+                  rank_mem_cap=[0.1, 100.0, 100.0])
+    a0 = np.array([0, 2, 2, 2, 2], np.int64)
+    params = CCMParams(alpha=1.0, beta=0.0, gamma=0.0, delta=0.0)
+    t0 = time.perf_counter()
+    res = ccm_lb_async(phase, a0, params, n_iter=3, seed=0,
+                       fault=FaultSpec(kill=((2, 0, 0.5),), seed=7))
+    dt = time.perf_counter() - t0
+    assert res.dead_ranks == [2]
+    assert res.fault_stats.recovery_spills >= 1, "spill path never fired"
+    assert not (res.assignment == 2).any()
+    _check_zero_violations(phase, a0, res, params, "crash_spill")
+    _record(records, "crash_spill", 0, phase, res, params, dt,
+            recovery_spills=int(res.fault_stats.recovery_spills),
+            recovered_tasks=int(res.fault_stats.recovered_tasks))
+    report("ccmlb_memory_crash_spill", dt * 1e6,
+           f"spills={res.fault_stats.recovery_spills} "
+           f"recovered={res.fault_stats.recovered_tasks}")
+    return int(res.fault_stats.recovery_spills)
+
+
+def _join_relief(report, records):
+    """Both ranks sit inside the headroom band; a mid-stream joiner with
+    fresh capacity must absorb work until every rank clears the soft cap."""
+    phase = Phase(task_load=[1.0] * 4, task_mem=[2.0] * 4,
+                  task_overhead=np.zeros(4), task_block=[-1] * 4,
+                  block_size=[], block_home=[],
+                  comm_src=[], comm_dst=[], comm_vol=[],
+                  rank_mem_base=np.zeros(2),
+                  rank_mem_cap=[5.0, 5.0])
+    a0 = np.array([0, 0, 1, 1], np.int64)
+    params = CCMParams(alpha=1.0, beta=0.0, gamma=0.0, delta=0.0,
+                       mem_headroom=0.3)      # soft cap 3.5 < used 4.0
+    t0 = time.perf_counter()
+    res = ccm_lb_async(phase, a0, params, n_iter=4, seed=0,
+                       membership=(RankJoin(iteration=1, count=1,
+                                            mem_cap=10.0),))
+    dt = time.perf_counter() - t0
+    assert res.joined_ranks == [2]
+    on_joined = int((res.assignment == 2).sum())
+    assert on_joined > 0, "joiner relieved no memory pressure"
+    _check_zero_violations(phase, a0, res, params, "join_relief")
+    _record(records, "join_relief", 0, res.state.phase, res, params, dt,
+            tasks_on_joined=on_joined)
+    report("ccmlb_memory_join_relief", dt * 1e6,
+           f"tasks_on_joined={on_joined}")
+    return on_joined
+
+
+def run(report, quick: bool = False):
+    records = []
+    margins = []
+    for pairs in ((2,) if quick else (2, 8)):
+        _headroom_sweep(report, records, pairs)
+        margins.append(_replication_margin(report, records, pairs))
+    _async_and_pipeline(report, records, 2)
+    spills = _crash_spill(report, records)
+    joined = _join_relief(report, records)
+
+    payload = {
+        "benchmark": "ccmlb_memory",
+        "quick": quick,
+        "numpy": np.__version__,
+        "n_iter": N_ITER,
+        "headroom_sweep": list(HEADROOM_SWEEP),
+        "results": records,
+        "zero_cap_violations": all(r["cap_violations"] == 0
+                                   for r in records),
+        "replication_margin_worst": min(margins),
+        "replication_margin_best": max(margins),
+        "async_bitwise_ok": all(
+            r.get("bitwise_identical_to_sync", True) for r in records),
+        "recovery_spills": spills,
+        "join_tasks_on_new_rank": joined,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    report("ccmlb_memory_json", 0.0, f"written to {JSON_PATH}")
+
+
+def main():
+    quick = "--quick" in sys.argv
+    print("name,us_per_call,derived")
+
+    def report(name, us, derived=""):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    run(report, quick=quick)
+    with open(JSON_PATH) as f:
+        payload = json.load(f)
+    assert payload["zero_cap_violations"]
+    assert payload["replication_margin_worst"] > 0
+    assert payload["async_bitwise_ok"]
+    assert payload["recovery_spills"] > 0
+    assert payload["join_tasks_on_new_rank"] > 0
+    print("ccmlb_memory_ok,0.0,zero-violations+margin+async-bitwise"
+          "+spill+join checks passed", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -34,7 +34,8 @@ DISPLAY = {
 }
 ORDER = ["milp_vs_ccmlb", "delta_sweep", "assembly_scaling", "costmodel_eval",
          "ccmlb_scaling", "ccmlb_spec", "ccmlb_fleet", "ccmlb_pipeline",
-         "ccmlb_async", "ccmlb_fault", "ccmlb_quiesce", "scorer_paths",
+         "ccmlb_async", "ccmlb_fault", "ccmlb_memory", "ccmlb_quiesce",
+         "scorer_paths",
          "kernels_bench",
          "expert_placement",
          "roofline"]

@@ -1,4 +1,6 @@
-from repro.balance.expert_placement import (apply_expert_permutation,  # noqa: F401
+from repro.balance.expert_placement import (PlacementPlan,  # noqa: F401
+                                            ServingPlan,
+                                            apply_expert_permutation,
                                             phase_from_router_stats,
                                             plan_expert_placement,
                                             plan_expert_placement_sequence)

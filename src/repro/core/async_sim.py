@@ -182,7 +182,7 @@ from typing import Callable, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
-from repro.core.ccm import CCMState
+from repro.core.ccm import CCMState, effective_mem_cap
 from repro.core.ccmlb import (CCMLBResult, ProtocolStats, build_work_lists,
                               ccm_lb, execute_transfer, lock_release,
                               lock_request, note_yield)
@@ -197,7 +197,8 @@ from repro.runtime.elastic import RankJoin, expand_phase, survivor_resize
 from repro.runtime.fault import RankDeath
 
 __all__ = ["ccm_lb_async", "run_ccm_lb", "make_latency", "EVENT_KINDS",
-           "FaultSpec", "FaultStats", "LivelockError", "RankJoin"]
+           "FaultSpec", "FaultStats", "LivelockError", "RankJoin",
+           "RecoveryOOMError"]
 
 # event kinds (values appear in traces; names in EVENT_KINDS).  TIMEOUT
 # and FAIL only ever fire under an active FaultSpec — the first five
@@ -238,6 +239,30 @@ class LivelockError(RuntimeError):
         self.stats: Optional[ProtocolStats] = None
         self.fault_stats: Optional["FaultStats"] = None
         self.iteration: Optional[int] = None
+
+
+class RecoveryOOMError(RuntimeError):
+    """Crash recovery found no survivor with memory room for a stranded
+    task group.
+
+    Raised by :func:`_recover_survivors` under an active memory
+    constraint when every survivor's post-placement M_max (eq. 7) would
+    exceed its (headroom-scaled) cap — the cluster genuinely cannot
+    absorb the dead rank's working set and must shed load or restart
+    from a checkpoint on more ranks.  Carries the stranded ``tasks``
+    (tuple of task ids), the ``dead_rank`` they were on, and
+    ``overflow_bytes``: the smallest cap excess across survivors, i.e.
+    how much memory the least-bad placement still lacked.
+    """
+
+    def __init__(self, tasks, dead_rank: int, overflow_bytes: float):
+        super().__init__(
+            f"crash recovery OOM: no survivor can hold {len(tasks)} "
+            f"task(s) stranded on dead rank {dead_rank} — best placement "
+            f"still {overflow_bytes:.3e} bytes over its memory cap")
+        self.tasks = tuple(int(t) for t in tasks)
+        self.dead_rank = int(dead_rank)
+        self.overflow_bytes = float(overflow_bytes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -394,6 +419,8 @@ class FaultStats:
     recovered_tasks: int = 0    # tasks migrated off dead ranks at recovery
     partition_skips: int = 0    # decisions skipped on unreachable peers
     corrupt_quarantined: int = 0  # corrupted gossip payloads caught + dropped
+    recovery_spills: int = 0    # stranded groups redirected off an over-cap
+                                # warm-start target at recovery
 
 
 class _FaultCtx:
@@ -757,7 +784,8 @@ def _run_stage2(sim: _Sim, phase, state, clusters, work_lists, engine,
                 locks: LockManager, stats: ProtocolStats, *,
                 max_candidates: int, max_clusters_per_rank,
                 max_retries: int, on_event,
-                fault: Optional[_FaultCtx] = None) -> None:
+                fault: Optional[_FaultCtx] = None,
+                replicate: bool = False) -> None:
     """Stage 2: the lock/transfer protocol as mailbox events (see the
     module docstring for the event <-> Fig. 1 mapping, and the "Fault
     injection" section for the TIMEOUT/FAIL hardening paths — none of
@@ -894,7 +922,8 @@ def _run_stage2(sim: _Sim, phase, state, clusters, work_lists, engine,
                 # (instantaneous) evaluation
                 assert locks.holds_grant(r, p, rid)
                 execute_transfer(state, clusters, engine, stats, r, p,
-                                 max_candidates, max_clusters_per_rank)
+                                 max_candidates, max_clusters_per_rank,
+                                 replicate=replicate)
             sim.send(RELEASE, r, p, rid)
             if work_lists[r]:
                 sim.push(sim.now, _LOCAL, DECIDE, r, r)
@@ -990,6 +1019,28 @@ def _run_stage2(sim: _Sim, phase, state, clusters, work_lists, engine,
             "locks/queues not drained after stage-end reclamation"
 
 
+def _mem_after_add(state: CCMState, tasks: np.ndarray, r: int) -> float:
+    """M_max(r) (eq. 7) after hypothetically adding ``tasks`` to rank r.
+
+    Pure read — mirrors the accounting ``apply_transfer`` maintains
+    incrementally (task-memory sum, running overhead max, shared bytes of
+    blocks the rank does not already hold) without mutating the state, so
+    recovery can test a placement before committing it.
+    """
+    ph = state.phase
+    add_mem = float(ph.task_mem[tasks].sum())
+    over = float(state.mem_overhead_max[r])
+    if tasks.size:
+        over = max(over, float(ph.task_overhead[tasks].max()))
+    blocks = ph.task_block[tasks]
+    blocks = np.unique(blocks[blocks >= 0])
+    new_blocks = blocks[state.block_count[r, blocks] == 0]
+    shared = float(state.shared_cache[r]) + float(
+        ph.block_size[new_blocks].sum())
+    return (float(ph.rank_mem_base[r]) + float(state.mem_task[r])
+            + add_mem + over + shared)
+
+
 def _recover_survivors(phase, state: CCMState, f: _FaultCtx,
                        recovery_log: list) -> None:
     """Post-crash warm start of the survivor set (elastic resize framing).
@@ -1002,6 +1053,16 @@ def _recover_survivors(phase, state: CCMState, f: _FaultCtx,
     ``state.apply_transfer`` in the ORIGINAL rank numbering, so they flow
     through the transfer listener like protocol transfers and the
     transfer-log replay invariant keeps covering crash recovery.
+
+    Under an active memory constraint each stranded group's warm-start
+    target is checked against its (headroom-scaled) cap BEFORE the
+    transfer commits; an over-cap target spills the group to the
+    least-loaded survivor with room (ties broken by rank id, counted in
+    ``FaultStats.recovery_spills``), and if no survivor has room the
+    recovery raises :class:`RecoveryOOMError` instead of silently
+    landing tasks over the cap.  With the constraint off, or when every
+    warm-start target fits, the migration sequence is bitwise-identical
+    to the unchecked path.
     """
     newly = sorted(f.dead - f.recovered)
     if not newly:
@@ -1026,12 +1087,34 @@ def _recover_survivors(phase, state: CCMState, f: _FaultCtx,
     warm, _ = warm_start_assignment(phase, prev, surv_phase,
                                     mode="round_robin")
     target = rs.survivors[warm]             # back to original numbering
+    p = state.params
     for d in newly:
         stranded = np.nonzero(state.assignment == d)[0]
         for s in np.unique(target[stranded]):
             tasks = stranded[target[stranded] == s]
-            state.apply_transfer(tasks, d, int(s))
-            recovery_log.append((tuple(int(x) for x in tasks), d, int(s)))
+            dest = int(s)
+            if p.memory_constraint:
+                caps = effective_mem_cap(phase.rank_mem_cap, p)
+                if _mem_after_add(state, tasks, dest) > caps[dest]:
+                    # over-cap warm-start target: spill to the least-
+                    # loaded survivor with room (the checks run against
+                    # the live state, so earlier recovery transfers in
+                    # this same pass are already accounted for)
+                    spill_to = None
+                    best_over = float("inf")
+                    for _, c in sorted((float(state.load[c]), int(c))
+                                       for c in rs.survivors):
+                        m = _mem_after_add(state, tasks, c)
+                        if m <= caps[c]:
+                            spill_to = c
+                            break
+                        best_over = min(best_over, m - caps[c])
+                    if spill_to is None:
+                        raise RecoveryOOMError(tasks, d, best_over)
+                    dest = spill_to
+                    f.stats.recovery_spills += 1
+            state.apply_transfer(tasks, d, dest)
+            recovery_log.append((tuple(int(x) for x in tasks), d, dest))
             f.stats.recovered_tasks += int(tasks.size)
     f.recovered |= set(newly)
 
@@ -1050,7 +1133,8 @@ def ccm_lb_async(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
                  fault: Optional[FaultSpec] = None,
                  membership: tuple = (),
                  quiesce_after: Optional[int] = None,
-                 profile: bool = False) -> CCMLBResult:
+                 profile: bool = False,
+                 replicate: bool = False) -> CCMLBResult:
     """CCM-LB through the asynchronous event-loop driver.
 
     Same optimization knobs as :func:`repro.core.ccmlb.ccm_lb` (engine /
@@ -1100,6 +1184,14 @@ def ccm_lb_async(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
                         ``CCMLBResult.stage_timings`` (stage-2 scoring
                         and commit time accumulate under "score" /
                         "commit" as grants execute).
+    ``replicate``       enable the memory-pressure move vocabulary
+                        (block replication splits and de-replication
+                        consolidations) in every grant's exchange search
+                        — same semantics as the sync driver's knob (see
+                        :func:`repro.core.ccmlb.ccm_lb`).  Extra
+                        candidates only win on strictly better eq. 4
+                        scores, so runs where they never win are
+                        bitwise-identical to ``replicate=False``.
 
     The same :class:`~repro.core.quiesce.QuiesceTracker` that amortizes
     the sync driver runs here too: summaries are patched for dirty ranks
@@ -1137,7 +1229,7 @@ def ccm_lb_async(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
     tracker = QuiesceTracker(state, engine, params, seed=seed,
                              k_rounds=k_rounds, fanout=fanout,
                              max_clusters_per_rank=max_clusters_per_rank,
-                             caching=incremental)
+                             caching=incremental, replicate=replicate)
     transfer_log: list = []
     recovery_log: list = []
 
@@ -1236,7 +1328,7 @@ def ccm_lb_async(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
                         locks, stats, max_candidates=max_candidates,
                         max_clusters_per_rank=max_clusters_per_rank,
                         max_retries=max_retries, on_event=on_event,
-                        fault=f)
+                        fault=f, replicate=replicate)
             if f is not None and f.dead - f.recovered:
                 newly_dead = sorted(f.dead - f.recovered)
                 _recover_survivors(phase, state, f, recovery_log)

@@ -33,6 +33,34 @@ TransferListener = Callable[[np.ndarray, int, int], None]
 
 INF = float("inf")
 
+# Relative memory-feasibility tolerance.  The old absolute ``+ 1e-6``
+# slack was calibrated for nothing: on byte-scale phases (HBM budgets,
+# ``balance/expert_placement``) it is immeasurable noise, while on
+# normalized-unit phases it can admit placements a full 1e-6 units over
+# the cap.  Scaling the slack by |cap| keeps it meaning "float
+# accumulation noise" at every unit scale.
+MEM_REL_TOL = 1e-9
+
+
+def effective_mem_cap(cap, params: Optional[CCMParams] = None):
+    """THE soft memory cap every feasibility comparison tests against.
+
+    Single definition shared by the scalar reference (``memory_feasible``,
+    ``exchange_eval``), the vectorized engine (``batch_peer_diffs`` and the
+    SC scalar planes — caps are packed pre-scaled so the compiled combines
+    compare plain ``<=``), and the stage-1 summary approximations — the
+    paths cannot disagree about what "fits" means.
+
+    ``params.mem_headroom`` (fraction in [0, 1)) shrinks the cap below the
+    hard ``rank_mem_cap`` so the pressure policy starts migrating/evicting
+    BEFORE the hard ceiling is touched; the default 0.0 skips the multiply
+    entirely, keeping legacy configs bitwise-identical.  Works elementwise
+    on arrays; ``inf`` caps stay ``inf``.
+    """
+    if params is not None and params.mem_headroom:
+        cap = cap * (1.0 - params.mem_headroom)
+    return cap + MEM_REL_TOL * np.abs(cap)
+
 
 @dataclasses.dataclass
 class CCMState:
@@ -223,7 +251,8 @@ class CCMState:
                 + self.mem_overhead_max[r] + self.rank_shared_mem(r))
 
     def memory_feasible(self, r: int) -> bool:
-        return self.max_memory(r) <= self.phase.rank_mem_cap[r] + 1e-6
+        return self.max_memory(r) <= effective_mem_cap(
+            self.phase.rank_mem_cap[r], self.params)
 
     def work(self, r: int) -> float:
         """W(r) (eq. 13).  Cached per state version: the hot path asks for
@@ -438,8 +467,8 @@ def exchange_eval(state: CCMState, tasks_ab: Sequence[int],
              + shared[r_b] + max(state.mem_overhead_max[r_b], over_ab))
     feasible = True
     if p.memory_constraint:
-        feasible = (mem_a <= ph.rank_mem_cap[r_a] + 1e-6
-                    and mem_b <= ph.rank_mem_cap[r_b] + 1e-6)
+        feasible = (mem_a <= effective_mem_cap(ph.rank_mem_cap[r_a], p)
+                    and mem_b <= effective_mem_cap(ph.rank_mem_cap[r_b], p))
 
     def w(load, off, on, h, r):
         return (p.alpha * load / ph.rank_speed[r] + p.beta * off

@@ -264,7 +264,7 @@ def lock_release(locks: LockManager, stats: ProtocolStats, holder: int,
 
 def execute_transfer(state, clusters, engine, stats: ProtocolStats, r: int,
                      p: int, max_candidates: int,
-                     max_clusters_per_rank) -> bool:
+                     max_clusters_per_rank, replicate: bool = False) -> bool:
     """Fig. 1 lines 46–48 (recvUpdate / TryTransfer / sendUpdate): exact
     evaluation with fresh info, execute the best positive exchange, rebuild
     the two touched ranks' clusters.  Returns True iff a transfer ran.
@@ -272,7 +272,10 @@ def execute_transfer(state, clusters, engine, stats: ProtocolStats, r: int,
     ``stats.memo`` (when enabled) short-circuits a pair whose exact
     evaluation already failed at the current ``state.version`` — the
     dominant cost of a converged iteration, where every candidate scores
-    positive on stale info and fails the fresh-info evaluation again."""
+    positive on stale info and fails the fresh-info evaluation again.
+    (The memo stays valid with ``replicate``: the extra candidates are a
+    pure function of the state, so a failed evaluation at a version fails
+    again at the same version.)"""
     memo = stats.memo
     if memo is not None and memo.get((r, p)) == state.version:
         stats.memo_hits += 1
@@ -280,7 +283,7 @@ def execute_transfer(state, clusters, engine, stats: ProtocolStats, r: int,
     tm = stats.timings
     t0 = perf_counter() if tm is not None else 0.0
     best = try_transfer(state, clusters[r], clusters[p], r, p,
-                        max_candidates, engine=engine)
+                        max_candidates, engine=engine, replicate=replicate)
     if tm is not None:
         tm["score"] += perf_counter() - t0
     if best is None:
@@ -295,13 +298,15 @@ def execute_transfer(state, clusters, engine, stats: ProtocolStats, r: int,
     return True
 
 
-def iteration_summaries(state, phase, max_clusters_per_rank):
+def iteration_summaries(state, phase, max_clusters_per_rank,
+                        replicate=False):
     """Per-iteration prologue shared by both drivers: cluster every rank
     and summarize (rank + cluster summaries are this iteration's gossip
-    payloads)."""
+    payloads).  With ``replicate`` the cluster summaries carry virtual
+    half-split entries so stage 1 can score replication moves."""
     clusters = build_clusters(state,
                               max_clusters_per_rank=max_clusters_per_rank)
-    csum = summarize_clusters(state, clusters)
+    csum = summarize_clusters(state, clusters, replicate=replicate)
     summaries = {r: summarize_rank(state, r, csum[r])
                  for r in range(phase.num_ranks)}
     return clusters, summaries
@@ -356,7 +361,7 @@ def ccm_lb(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
            csr=None, spec_window: int = 1, spec_mode: str = "scan",
            spec_fill: str = "disjoint", spec_trace: bool = False,
            carry=None, quiesce_after: Optional[int] = None,
-           profile: bool = False) -> CCMLBResult:
+           profile: bool = False, replicate: bool = False) -> CCMLBResult:
     """``incremental`` keeps the engine's per-rank segments current via the
     transfer hook (default; ``False`` re-gathers per event — the rebuild
     reference).  ``csr`` is an optional prebuilt ``PhaseCSR`` for this
@@ -389,6 +394,17 @@ def ccm_lb(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
     (see ``repro.core.spec.run_spec``).  ``spec_trace=True`` records the
     per-event commit/rollback trace in ``CCMLBResult.spec_trace``.
 
+    ``replicate=True`` extends every lock event's candidate set with block
+    replication splits and de-replication consolidations
+    (``repro.core.transfer.memory_move_candidates``) — the paper's
+    parallelism-for-memory trade as first-class moves.  Scored through the
+    scalar reference evaluator after the base vocabulary, accepted only on
+    a strictly greater work diff, so instances where the extras never win
+    stay bitwise-identical to ``replicate=False``.  Incompatible with the
+    deferred/speculative stage-2 drivers (``batch_lock_events > 1``,
+    ``spec_window > 1``), which can only score the engine's cluster
+    vocabulary.
+
     ``carry``: a previous phase's ``CCMLBResult`` whose state/engine should
     be reused.  Accepted only when the phases share topology
     (``same_topology``), rank count, backend/incremental knobs AND the
@@ -411,6 +427,12 @@ def ccm_lb(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
                          "exclusive stage-2 drivers")
     if quiesce_after is not None and quiesce_after < 1:
         raise ValueError("quiesce_after must be >= 1 (or None)")
+    if replicate and batch_lock_events > 1:
+        raise ValueError("replicate requires the scalar stage-2 loop — "
+                         "incompatible with batch_lock_events > 1")
+    if replicate and spec_window > 1:
+        raise ValueError("replicate requires the scalar stage-2 loop — "
+                         "incompatible with spec_window > 1")
     state = engine = tracker = None
     engine_carried = False
     if carry is not None:
@@ -453,7 +475,7 @@ def ccm_lb(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
         tracker = QuiesceTracker(state, engine, params, seed=seed,
                                  k_rounds=k_rounds, fanout=fanout,
                                  max_clusters_per_rank=max_clusters_per_rank,
-                                 caching=incremental)
+                                 caching=incremental, replicate=replicate)
     transfer_log: list = []
 
     def _log_cb(t, a, b):
@@ -509,7 +531,8 @@ def ccm_lb(phase: Phase, assignment: np.ndarray, params: CCMParams, *,
                                 batch_lock_events, stats)
             else:
                 _stage2(phase, state, clusters, work_lists, engine,
-                        max_candidates, max_clusters_per_rank, stats)
+                        max_candidates, max_clusters_per_rank, stats,
+                        replicate=replicate)
 
             delta = stats.transfers - before
             iter_transfers.append(delta)
@@ -580,7 +603,8 @@ def _rebuild_local(state, clusters, engine, max_clusters_per_rank, r, p):
 
 
 def _stage2(phase, state, clusters, work_lists, engine, max_candidates,
-            max_clusters_per_rank, stats: ProtocolStats) -> None:
+            max_clusters_per_rank, stats: ProtocolStats,
+            replicate: bool = False) -> None:
     """One-event-at-a-time lock/transfer loop (the reference event order).
 
     Every lock taken here is released before the turn ends and queued
@@ -618,16 +642,17 @@ def _stage2(phase, state, clusters, work_lists, engine, max_candidates,
             if nxt is not None:
                 _handle_grant(nxt, p, state, clusters, locks, work_lists,
                               active, max_candidates, max_clusters_per_rank,
-                              engine, stats)
+                              engine, stats, replicate=replicate)
             continue
         # fresh info exchange + exact transfer (recvUpdate/TryTransfer)
         execute_transfer(state, clusters, engine, stats, r, p,
-                         max_candidates, max_clusters_per_rank)
+                         max_candidates, max_clusters_per_rank,
+                         replicate=replicate)
         nxt = lock_release(locks, stats, r, p)
         if nxt is not None:
             _handle_grant(nxt, p, state, clusters, locks, work_lists, active,
                           max_candidates, max_clusters_per_rank, engine,
-                          stats)
+                          stats, replicate=replicate)
         if work_lists[r]:
             active.append(r)
 
@@ -805,7 +830,7 @@ def _handle_grant_deferred(r: int, p: int, state, locks, work_lists, active,
 
 def _handle_grant(r: int, p: int, state, clusters, locks, work_lists, active,
                   max_candidates, max_clusters_per_rank, engine,
-                  stats: ProtocolStats) -> int:
+                  stats: ProtocolStats, replicate: bool = False) -> int:
     """Drain the lock-release handoff chain on ``p`` starting at requester
     ``r``.  Iterative (a long chain of queued requesters must not hit the
     Python recursion limit at large rank counts); the re-activation order
@@ -824,7 +849,8 @@ def _handle_grant(r: int, p: int, state, clusters, locks, work_lists, active,
             cur = nxt
             continue
         execute_transfer(state, clusters, engine, stats, cur, p,
-                         max_candidates, max_clusters_per_rank)
+                         max_candidates, max_clusters_per_rank,
+                         replicate=replicate)
         nxt = lock_release(locks, stats, cur, p)
         post.append(cur)
         cur = nxt

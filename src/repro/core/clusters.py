@@ -307,9 +307,29 @@ def _split_by_load(tasks: np.ndarray, loads: np.ndarray,
     return [np.array(b, np.int64) for b in bins]
 
 
+def _half_split(task_load: np.ndarray, cluster: np.ndarray) -> np.ndarray:
+    """Deterministic near-balanced bipartition of a cluster's tasks:
+    greedy descending-load placement into two bins (stable sort, so equal
+    loads keep ascending task-id order), returning the LIGHTER bin — the
+    travelling half of a replication split.  For ``len(cluster) >= 2``
+    both bins are non-empty, so the split is always a strict sub-cluster
+    move."""
+    cluster = np.asarray(cluster, np.int64)
+    order = np.argsort(-task_load[cluster], kind="stable")
+    bins: Tuple[List[int], List[int]] = ([], [])
+    tot = [0.0, 0.0]
+    for t in cluster[order]:
+        j = 0 if tot[0] <= tot[1] else 1
+        bins[j].append(int(t))
+        tot[j] += float(task_load[t])
+    move = bins[0] if tot[0] <= tot[1] else bins[1]
+    return np.asarray(sorted(move), np.int64)
+
+
 def summarize_clusters(state: CCMState,
                        clusters: Dict[int, List[np.ndarray]],
-                       eids: Optional[np.ndarray] = None
+                       eids: Optional[np.ndarray] = None,
+                       replicate: bool = False
                        ) -> Dict[int, List[ClusterSummary]]:
     """Cluster inform payloads, with the intra/external comm volumes of ALL
     clusters computed in one labelled pass over the edge list (the seed
@@ -321,7 +341,19 @@ def summarize_clusters(state: CCMState,
     for any ``clusters`` whose member tasks' incident edges are all in
     ``eids``: every edge contributing to a given cluster's bucket appears
     in the same relative order as in the full pass, so the bincount
-    partial sums accumulate identically."""
+    partial sums accumulate identically.
+
+    ``replicate``: append one VIRTUAL summary per block-affine cluster
+    (>= 2 tasks, all one block — the replication-split eligibility of
+    ``memory_move_candidates``) describing its :func:`_half_split`
+    travelling half, marked ``local_id=-1``.  Stage 1 scores whole
+    clusters from these summaries, so without the virtual entries a rank
+    whose only surplus is expressible as a half-split can never initiate
+    a lock event and replication starves; with them, both the scalar
+    ``approx_best_diff`` and the batched ``batch_peer_diffs`` see
+    half-split granularity (identically — they read the same objects).
+    Stage 2 re-derives the real candidates and evaluates them exactly,
+    so the entries only ever gate WHICH events fire."""
     ph = state.phase
     flat: List[Tuple[int, int, np.ndarray]] = [
         (r, ci, tasks) for r, cls in clusters.items()
@@ -365,6 +397,55 @@ def summarize_clusters(state: CCMState,
             vol_intra=float(vol_intra[gid]),
             vol_ext=float(vol_ext[gid]),
             size=int(tasks.size),
+        ))
+    if not replicate:
+        return out
+    # virtual half-split entries: a second labelled pass over the same
+    # edge (sub)sequence, labelling only each travelling half — an edge
+    # from the half to its kept sibling tasks correctly counts as
+    # EXTERNAL (that is what it becomes once the split lands)
+    vflat: List[Tuple[int, np.ndarray, int]] = []
+    for r, cls in clusters.items():
+        for tasks in cls:
+            tasks = np.asarray(tasks, np.int64)
+            if tasks.shape[0] < 2:
+                continue
+            blocks = ph.task_block[tasks]
+            if blocks[0] < 0 or not (blocks == blocks[0]).all():
+                continue
+            vflat.append((r, _half_split(ph.task_load, tasks),
+                          int(blocks[0])))
+    if not vflat:
+        return out
+    vn = len(vflat)
+    vgids = np.full(ph.num_tasks, -1, np.int64)
+    for gid, (_, half, _) in enumerate(vflat):
+        vgids[half] = gid
+    v_intra = np.zeros(vn)
+    v_ext = np.zeros(vn)
+    if n_edges:
+        ls, ld = vgids[e_src], vgids[e_dst]
+        intra = (ls == ld) & (ls >= 0)
+        v_intra = np.bincount(ls[intra], weights=e_vol[intra],
+                              minlength=vn)
+        cut = ls != ld
+        m = cut & (ls >= 0)
+        v_ext = np.bincount(ls[m], weights=e_vol[m], minlength=vn)
+        m = cut & (ld >= 0)
+        v_ext = v_ext + np.bincount(ld[m], weights=e_vol[m],
+                                    minlength=vn)
+    for gid, (r, half, b) in enumerate(vflat):
+        out[r].append(ClusterSummary(
+            rank=r,
+            local_id=-1,            # virtual: stage-1 scoring only
+            load=float(ph.task_load[half].sum()),
+            mem=float(ph.task_mem[half].sum()),
+            overhead=float(ph.task_overhead[half].max()),
+            block_ids=np.array([b], np.int64),
+            block_bytes=float(ph.block_size[b]),
+            vol_intra=float(v_intra[gid]),
+            vol_ext=float(v_ext[gid]),
+            size=int(half.shape[0]),
         ))
     return out
 

@@ -117,7 +117,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.ccm import CCMState, INF
+from repro.core.ccm import CCMState, INF, effective_mem_cap
 from repro.core.csr import CSR, PhaseCSR, rank_segments
 from repro.kernels.ccm_scorer import jit as scorer_jit
 from repro.kernels.ccm_scorer import layout as L
@@ -599,8 +599,11 @@ class PhaseEngine:
             float(nb),                             # nb
             ph.rank_speed[r_a],                    # speed_a
             ph.rank_speed[r_b],                    # speed_b
-            ph.rank_mem_cap[r_a],                  # mem_cap_a
-            ph.rank_mem_cap[r_b],                  # mem_cap_b
+            # caps packed pre-scaled through the soft-cap helper: the
+            # compiled combines compare plain <=, so the feasibility bit
+            # matches the scalar exchange_eval exactly
+            effective_mem_cap(ph.rank_mem_cap[r_a], st.params),  # mem_cap_a
+            effective_mem_cap(ph.rank_mem_cap[r_b], st.params),  # mem_cap_b
         ])
         assert sc.shape[0] == L.N_SC
         return av, bv, pm, sc
@@ -744,8 +747,10 @@ class PhaseEngine:
             st.mem_overhead_max[r_b],
             float(na), float(nb),
             ph.rank_speed[r_a], ph.rank_speed[r_b],
-            ph.rank_mem_cap[r_a] if mc else np.inf,    # mem_cap_a
-            ph.rank_mem_cap[r_b] if mc else np.inf,    # mem_cap_b
+            effective_mem_cap(ph.rank_mem_cap[r_a], params)
+            if mc else np.inf,                         # mem_cap_a
+            effective_mem_cap(ph.rank_mem_cap[r_b], params)
+            if mc else np.inf,                         # mem_cap_b
         )
         row[o_ia:o_ia + p] = ia             # pad pair slots read pair
         row[o_ib:o_ib + p] = ib             # (0, 0); p_count masks them
@@ -844,14 +849,22 @@ def build_summary_tables(summaries: Dict, params) -> SummaryTables:
     speed = np.array([s.speed for s in ranks])
     work = (params.alpha * load / speed + params.beta * vol_off
             + params.gamma * vol_on + params.delta * homing)
+    mem_used = np.array([s.mem_used for s in ranks])
+    mem_cap = np.array([s.mem_cap for s in ranks])
+    if params.memory_constraint:
+        # eq. 9 barrier, mirrored bitwise with the scalar ``_w_of`` and the
+        # quiesce work-list patch: a rank over its soft cap carries
+        # infinite work, so stage 1 ranks feasibility-restoring peers first
+        # (the np.where is the identity when every rank fits)
+        work = np.where(mem_used <= effective_mem_cap(mem_cap, params),
+                        work, INF)
     c_indptr = np.zeros(n + 1, np.int64)
     np.cumsum([len(s.clusters) for s in ranks], out=c_indptr[1:])
     flat = [c for s in ranks for c in s.clusters]
     c_ids = CSR(c_indptr, np.arange(len(flat), dtype=np.int64))
     return SummaryTables(
         load=load, vol_on=vol_on, vol_off=vol_off, homing=homing,
-        mem_used=np.array([s.mem_used for s in ranks]),
-        mem_cap=np.array([s.mem_cap for s in ranks]),
+        mem_used=mem_used, mem_cap=mem_cap,
         speed=speed, work=work, c_ids=c_ids,
         c_load=np.array([c.load for c in flat]),
         c_mem=np.array([c.mem for c in flat]),
@@ -904,7 +917,7 @@ def batch_peer_diffs(t: SummaryTables, r: int, peers: np.ndarray,
     after_give = np.full(n_p, np.inf)
     if cl.shape[0]:
         feas = ~((t.mem_used[peers][None, :] + cm[:, None] + cbb[:, None])
-                 > t.mem_cap[peers][None, :])
+                 > effective_mem_cap(t.mem_cap[peers], params)[None, :])
         w_me = (a * (t.load[r] - cl) / t.speed[r]
                 + b * np.maximum(t.vol_off[r] - cve, 0.0)
                 + g * np.maximum(t.vol_on[r] - cvi, 0.0)
@@ -925,7 +938,8 @@ def batch_peer_diffs(t: SummaryTables, r: int, peers: np.ndarray,
         pl, pm = t.c_load[idx], t.c_mem[idx]
         pbb, pvi, pve = (t.c_block_bytes[idx], t.c_vol_intra[idx],
                          t.c_vol_ext[idx])
-        feas = ~((t.mem_used[r] + pm + pbb) > t.mem_cap[r])
+        feas = ~((t.mem_used[r] + pm + pbb)
+                 > effective_mem_cap(t.mem_cap[r], params))
         w_src = (a * (t.load[own] - pl) / t.speed[own]
                  + b * np.maximum(t.vol_off[own] - pve, 0.0)
                  + g * np.maximum(t.vol_on[own] - pvi, 0.0)
@@ -937,4 +951,7 @@ def batch_peer_diffs(t: SummaryTables, r: int, peers: np.ndarray,
         after = np.where(feas, np.maximum(w_src, w_me), np.inf)
         np.minimum.at(after_pull, owner, after)
 
-    return max_before - np.minimum(after_give, after_pull)
+    with np.errstate(invalid="ignore"):
+        # inf - inf (both sides pressure-barriered) -> nan, dropped by
+        # the caller's d > 0 filter
+        return max_before - np.minimum(after_give, after_pull)

@@ -9,6 +9,7 @@ from typing import List
 
 import numpy as np
 
+from repro.core.ccm import effective_mem_cap
 from repro.core.milp.fwmp import MILP
 from repro.core.problem import CCMParams, Phase
 
@@ -61,9 +62,10 @@ def build_comcp(phase: Phase, params: CCMParams = None) -> MILP:
                 row[chi(i, k)] = -1.0
             add(row, 0.0)
 
-    if params.memory_constraint:     # (19)
-        for i in range(I):
-            cap = phase.rank_mem_cap[i] - phase.rank_mem_base[i]
+    if params.memory_constraint:     # (19), RHS on the heuristic's
+        for i in range(I):           # effective_mem_cap soft cap
+            cap = (effective_mem_cap(phase.rank_mem_cap[i], params)
+                   - phase.rank_mem_base[i])
             for k in range(K):
                 row = np.zeros(n)
                 for l in range(K):

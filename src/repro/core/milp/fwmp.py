@@ -15,6 +15,7 @@ from typing import List, Optional
 
 import numpy as np
 
+from repro.core.ccm import effective_mem_cap
 from repro.core.problem import CCMParams, Phase
 
 
@@ -92,10 +93,15 @@ def build_fwmp(phase: Phase, params: CCMParams) -> MILP:
                 row[chi(i, k)] = -1.0
             add(row, 0.0)
 
-    # (19) memory, per (i, k)
+    # (19) memory, per (i, k).  The RHS goes through the same
+    # effective_mem_cap soft cap the heuristic feasibility layer tests
+    # against (relative tolerance + optional pressure headroom), so
+    # MILP-feasible chi always decode to CCMState.memory_feasible
+    # assignments and the two sides agree on eq. 7 to the bit.
     if params.memory_constraint:
         for i in range(I):
-            cap = phase.rank_mem_cap[i] - phase.rank_mem_base[i]
+            cap = (effective_mem_cap(phase.rank_mem_cap[i], params)
+                   - phase.rank_mem_base[i])
             for k in range(K):
                 row = np.zeros(n)
                 for l in range(K):

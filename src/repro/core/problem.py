@@ -93,6 +93,14 @@ class CCMParams:
     gamma: float = 1e-11  # s/B on-rank communication
     delta: float = 1e-9   # s/B homing cost
     memory_constraint: bool = True  # epsilon in {0, +inf}
+    # pressure policy: fraction of rank_mem_cap held back as headroom.
+    # Every feasibility comparison (scalar, engine, compiled scorer) tests
+    # against cap*(1-mem_headroom) — see repro.core.ccm.effective_mem_cap —
+    # so a rank drifting into the headroom band gets the eq. 9 barrier
+    # (work = inf) and the stage-2 optimizer trades migration against
+    # de-replication to restore feasibility.  0.0 (default) is bitwise
+    # the legacy behavior.
+    mem_headroom: float = 0.0
 
 
 def same_topology(a: Phase, b: Phase) -> bool:

@@ -56,6 +56,7 @@ import numpy as np
 
 from repro.core.clusters import (build_clusters, summarize_clusters,
                                  summarize_rank)
+from repro.core.ccm import INF, effective_mem_cap
 from repro.core.engine import batch_peer_diffs, build_summary_tables
 from repro.core.gossip import (build_peer_networks, gossip_root_key,
                                gossip_seed, update_peer_networks)
@@ -97,7 +98,7 @@ class QuiesceTracker:
 
     def __init__(self, state, engine, params, *, seed: int, k_rounds: int,
                  fanout: int, max_clusters_per_rank: Optional[int] = None,
-                 caching: bool = True):
+                 caching: bool = True, replicate: bool = False):
         self.state = state
         self.engine = engine
         self.params = params
@@ -105,6 +106,10 @@ class QuiesceTracker:
         self.k_rounds = int(k_rounds)
         self.fanout = int(fanout)
         self.mcpr = max_clusters_per_rank
+        # thread the replication vocabulary into the summary prologue:
+        # stage 1 needs the virtual half-split entries (summarize_clusters)
+        # or replication-shaped surplus can never initiate a lock event
+        self.replicate = bool(replicate)
         self.n = int(state.phase.num_ranks)
         # caching needs the engine's incrementally-maintained rank
         # segments (cluster rebuild scope) and flat summary tables
@@ -279,7 +284,7 @@ class QuiesceTracker:
     def _full_summaries(self):
         st = self.state
         clusters = build_clusters(st, max_clusters_per_rank=self.mcpr)
-        csum = summarize_clusters(st, clusters)
+        csum = summarize_clusters(st, clusters, replicate=self.replicate)
         summaries = {r: summarize_rank(st, r, csum[r]) for r in range(self.n)}
         self._count("cluster_rank_builds", self.n)
         return clusters, csum, summaries
@@ -320,7 +325,7 @@ class QuiesceTracker:
                 np.concatenate(tasks) if tasks else
                 np.zeros(0, np.int64)))
             csl = summarize_clusters(st, {r: sub[r] for r in self._cd},
-                                     eids=eids)
+                                     eids=eids, replicate=self.replicate)
             for r in self._cd:
                 self.csum[r] = csl[r]
         for r in self._vd:
@@ -397,11 +402,16 @@ class QuiesceTracker:
                 t.homing[r] = s.homing
                 t.mem_used[r] = s.mem_used
                 # elementwise re-evaluation of the vectorized work
-                # expression: same IEEE ops on the same float64 scalars
-                t.work[r] = (params.alpha * t.load[r] / t.speed[r]
-                             + params.beta * t.vol_off[r]
-                             + params.gamma * t.vol_on[r]
-                             + params.delta * t.homing[r])
+                # expression: same IEEE ops on the same float64 scalars,
+                # including build_summary_tables' eq. 9 soft-cap barrier
+                if (params.memory_constraint and t.mem_used[r]
+                        > effective_mem_cap(t.mem_cap[r], params)):
+                    t.work[r] = INF
+                else:
+                    t.work[r] = (params.alpha * t.load[r] / t.speed[r]
+                                 + params.beta * t.vol_off[r]
+                                 + params.gamma * t.vol_on[r]
+                                 + params.delta * t.homing[r])
             ip = t.c_ids.indptr
             for r in self._cd:
                 cl = self.csum[r]

@@ -22,11 +22,22 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.ccm import CCMState, ExchangeEval, exchange_eval
-from repro.core.clusters import ClusterSummary, RankSummary
+from repro.core.ccm import (INF, CCMState, ExchangeEval, effective_mem_cap,
+                            exchange_eval)
+from repro.core.clusters import (ClusterSummary, RankSummary,  # noqa: F401
+                                 _half_split)
 
 
 def _w_of(summary: RankSummary, params) -> float:
+    # eq. 9 barrier against the soft cap (effective_mem_cap): a rank over
+    # its (headroom-shrunk) capacity carries infinite work, so stage 1
+    # ranks any feasibility-restoring peer ahead of every balance move.
+    # Mirrored bitwise by engine.build_summary_tables' work column and the
+    # QuiesceTracker work-list patch.
+    if (params.memory_constraint
+            and summary.mem_used > effective_mem_cap(summary.mem_cap,
+                                                     params)):
+        return INF
     return (params.alpha * summary.load / summary.speed
             + params.beta * summary.vol_off
             + params.gamma * summary.vol_on
@@ -45,8 +56,10 @@ def approx_transfer(me: RankSummary, peer: RankSummary, c: ClusterSummary,
     """
     if me.rank == peer.rank:
         return None
-    # memory feasibility on the receiving side
-    if peer.mem_used + c.mem + c.block_bytes > peer.mem_cap:
+    # memory feasibility on the receiving side (soft cap, matched with
+    # engine.batch_peer_diffs)
+    if peer.mem_used + c.mem + c.block_bytes > effective_mem_cap(
+            peer.mem_cap, params):
         return None
     w_me = (params.alpha * (me.load - c.load) / me.speed
             + params.beta * max(me.vol_off - c.vol_ext, 0.0)
@@ -86,6 +99,58 @@ class BestExchange:
     tasks_ba: np.ndarray   # move b -> a
     work_diff: float
     eval: ExchangeEval
+
+
+_EMPTY = np.zeros(0, np.int64)
+
+
+def memory_move_candidates(state: CCMState, r_from: int, r_to: int,
+                           clusters_from: Sequence[np.ndarray],
+                           max_candidates: int = 12) -> List[np.ndarray]:
+    """Extra one-sided move candidates (r_from -> r_to) that trade memory
+    against parallelism — the paper's replication trade-off (§III-A4) made
+    an explicit part of the move vocabulary:
+
+      * **replication splits** — a block-affine cluster (>= 2 tasks, all
+        sharing one block) is bipartitioned by :func:`_half_split`; moving
+        the lighter half materializes the block on ``r_to`` while the
+        heavier half keeps it live on ``r_from``, i.e. deliberate
+        replication buying load parallelism for block bytes;
+      * **de-replication consolidations** — for each block replicated on
+        BOTH ranks, ALL of ``r_from``'s tasks of that block move to
+        ``r_to``: the move evicts ``r_from``'s copy (frees its bytes)
+        without adding block bytes on ``r_to``, the eviction half of the
+        pressure policy.
+
+    Both shapes are plain task-set transfers, so they ride
+    ``apply_transfer`` unchanged — transfer log, listeners, quiesce
+    dirty-marking and the replay invariant all cover them for free — and
+    they are scored through the same eq. 4 work model as every other
+    candidate (``exchange_eval``), so the optimizer, not a rule, decides
+    between migration, replication, eviction, or refusal.  Deterministic
+    order: splits in cluster order, then consolidations in ascending block
+    id, each capped at ``max_candidates``.
+    """
+    ph = state.phase
+    out: List[np.ndarray] = []
+    for c in clusters_from[:max_candidates]:
+        c = np.asarray(c, np.int64)
+        if c.shape[0] < 2:
+            continue
+        blocks = ph.task_block[c]
+        if blocks[0] < 0 or not (blocks == blocks[0]).all():
+            continue
+        out.append(_half_split(ph.task_load, c))
+    both = np.flatnonzero((state.block_count[r_from] > 0)
+                          & (state.block_count[r_to] > 0))
+    if both.size:
+        mine = np.flatnonzero(state.assignment == r_from)
+        tb = ph.task_block[mine]
+        for b in both[:max_candidates]:
+            cand = mine[tb == b]
+            if cand.size:
+                out.append(cand)
+    return out
 
 
 _PAIRS_CACHE: dict = {}
@@ -186,7 +251,8 @@ def find_best_exchange(state: CCMState, clusters_a: List[np.ndarray],
                        clusters_b: List[np.ndarray], r_a: int, r_b: int,
                        max_candidates: int = 12,
                        shortlist: int = 32,
-                       engine=None) -> Optional[BestExchange]:
+                       engine=None,
+                       replicate: bool = False) -> Optional[BestExchange]:
     """Exact FindBestCCM: best give/swap among cluster pairs (incl. one-sided
     gives via the empty cluster).  ``max_candidates`` bounds each side
     (clusters come sorted by load) — the paper's quality/cost tunable.
@@ -194,6 +260,15 @@ def find_best_exchange(state: CCMState, clusters_a: List[np.ndarray],
     ``engine``: a :class:`~repro.core.engine.PhaseEngine` scores every
     shortlisted pair in one batched pass; ``None`` falls back to one
     ``exchange_eval`` call per pair (reference path).
+
+    ``replicate`` extends the candidate set with
+    :func:`memory_move_candidates` (replication splits + de-replication
+    consolidations, both directions).  The extras are scored through the
+    scalar ``exchange_eval`` — even on the engine path — because they are
+    one-sided gives outside the engine's cached cluster-aggregate space;
+    an extra wins only on a STRICTLY greater work diff, so a run where no
+    extra ever beats the base vocabulary is bitwise-identical to
+    ``replicate=False``.
     """
     cand_a, cand_b, pairs, agg_a, agg_b = shortlist_pairs(
         state, clusters_a, clusters_b, r_a, r_b, max_candidates, shortlist,
@@ -203,11 +278,24 @@ def find_best_exchange(state: CCMState, clusters_a: List[np.ndarray],
     if engine is not None:
         wa, wb, feas = engine.batch_exchange_eval(r_a, r_b, cand_a, cand_b,
                                                   pairs, agg_a, agg_b)
-        return select_best(cand_a, cand_b, pairs, wa, wb, feas, w_before)
-
-    best: Optional[BestExchange] = None
-    for ia, ib in pairs:
-        ca, cb = cand_a[ia], cand_b[ib]
+        best = select_best(cand_a, cand_b, pairs, wa, wb, feas, w_before)
+    else:
+        best = None
+        for ia, ib in pairs:
+            ca, cb = cand_a[ia], cand_b[ib]
+            ev = exchange_eval(state, ca, cb, r_a, r_b)
+            if not ev.feasible:
+                continue
+            diff = w_before - ev.max_after
+            if diff > 1e-12 and (best is None or diff > best.work_diff):
+                best = BestExchange(ca, cb, float(diff), ev)
+    if not replicate:
+        return best
+    extras = [(c, _EMPTY) for c in memory_move_candidates(
+        state, r_a, r_b, clusters_a, max_candidates)]
+    extras += [(_EMPTY, c) for c in memory_move_candidates(
+        state, r_b, r_a, clusters_b, max_candidates)]
+    for ca, cb in extras:
         ev = exchange_eval(state, ca, cb, r_a, r_b)
         if not ev.feasible:
             continue
@@ -219,10 +307,12 @@ def find_best_exchange(state: CCMState, clusters_a: List[np.ndarray],
 
 def try_transfer(state: CCMState, clusters_a, clusters_b, r_a: int, r_b: int,
                  max_candidates: int = 12,
-                 engine=None) -> Optional[BestExchange]:
+                 engine=None, replicate: bool = False
+                 ) -> Optional[BestExchange]:
     """TryTransfer: execute the best positive exchange, if any (mutates)."""
     best = find_best_exchange(state, clusters_a, clusters_b, r_a, r_b,
-                              max_candidates, engine=engine)
+                              max_candidates, engine=engine,
+                              replicate=replicate)
     if best is None:
         return None
     state.swap(best.tasks_ab, r_a, best.tasks_ba, r_b)

@@ -343,8 +343,10 @@ def _get_fn(key):
                 w_b = (al * planes[OUT.load_b] / sc[SC.speed_b]
                        + be * planes[OUT.off_b] + ga * planes[OUT.on_b]
                        + de * planes[OUT.hom_b])
-                feas = ((planes[OUT.mem_a] <= sc[SC.mem_cap_a] + 1e-6)
-                        & (planes[OUT.mem_b] <= sc[SC.mem_cap_b] + 1e-6))
+                # spec_raw packs the caps pre-scaled by effective_mem_cap
+                # (inf when the constraint is off), so compare plain <=
+                feas = ((planes[OUT.mem_a] <= sc[SC.mem_cap_a])
+                        & (planes[OUT.mem_b] <= sc[SC.mem_cap_b]))
                 valid = jnp.arange(p_n) < p_cnt
                 diff = w_before - jnp.maximum(w_a, w_b)
                 # argmax picks the FIRST max over the same candidate order

@@ -82,8 +82,8 @@ class SC:
     nb = 27          # true candidate count on b
     speed_a = 28     # host combine only
     speed_b = 29
-    mem_cap_a = 30
-    mem_cap_b = 31
+    mem_cap_a = 30   # packed pre-scaled via repro.core.ccm.effective_mem_cap
+    mem_cap_b = 31   # (relative tolerance + pressure headroom baked in)
 
 
 N_SC = 32

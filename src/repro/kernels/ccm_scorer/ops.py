@@ -106,10 +106,12 @@ def combine_work(out: np.ndarray, sc: np.ndarray, params,
     """
     speed_a = sc[:, SC.speed_a, None, None]
     speed_b = sc[:, SC.speed_b, None, None]
+    # the SC cap slots are packed pre-scaled through
+    # repro.core.ccm.effective_mem_cap (relative tolerance + optional
+    # pressure headroom), so the combines compare plain <=
     if params.memory_constraint:
-        feas = ((out[:, OUT.mem_a] <= sc[:, SC.mem_cap_a, None, None] + 1e-6)
-                & (out[:, OUT.mem_b] <= sc[:, SC.mem_cap_b, None, None]
-                   + 1e-6))
+        feas = ((out[:, OUT.mem_a] <= sc[:, SC.mem_cap_a, None, None])
+                & (out[:, OUT.mem_b] <= sc[:, SC.mem_cap_b, None, None]))
     else:
         feas = np.ones(out.shape[0:1] + out.shape[2:], bool)
     w_a = (params.alpha * out[:, OUT.load_a] / speed_a
@@ -135,8 +137,8 @@ def combine_terms(terms: np.ndarray, sc_row: np.ndarray, params,
     exact association order of ``combine_work``, so the results are
     bitwise-identical to the all-host combine."""
     if params.memory_constraint:
-        feas = ((terms[8] <= sc_row[SC.mem_cap_a] + 1e-6)
-                & (terms[9] <= sc_row[SC.mem_cap_b] + 1e-6))
+        feas = ((terms[8] <= sc_row[SC.mem_cap_a])
+                & (terms[9] <= sc_row[SC.mem_cap_b]))
     else:
         feas = np.ones(terms.shape[1], bool)
     w_a = terms[0] + terms[1] + terms[2] + terms[3]
@@ -154,8 +156,8 @@ def combine_work_pairs(outp: np.ndarray, sc_row: np.ndarray, params,
     by the gather — the hot path just skips combining lanes it will never
     read.  ``sc_row`` is the event's (N_SC,) scalar row."""
     if params.memory_constraint:
-        feas = ((outp[OUT.mem_a] <= sc_row[SC.mem_cap_a] + 1e-6)
-                & (outp[OUT.mem_b] <= sc_row[SC.mem_cap_b] + 1e-6))
+        feas = ((outp[OUT.mem_a] <= sc_row[SC.mem_cap_a])
+                & (outp[OUT.mem_b] <= sc_row[SC.mem_cap_b]))
     else:
         feas = np.ones(outp.shape[1], bool)
     w_a = (params.alpha * outp[OUT.load_a] / sc_row[SC.speed_a]

@@ -117,6 +117,69 @@ def test_cluster_aggregates_limit_serves_prefixes():
     np.testing.assert_array_equal(full2.loads, full.loads)
 
 
+# ------------------------------------------------- mem_overhead_max upkeep
+def _assert_overhead_bitwise(state):
+    """Incrementally-maintained overhead maxima (and the task counts that
+    guard the rescan) vs a from-scratch ``assignment == r`` rebuild."""
+    ref = CCMState.build(state.phase, state.assignment, state.params)
+    np.testing.assert_array_equal(state.mem_overhead_max,
+                                  ref.mem_overhead_max)
+    np.testing.assert_array_equal(
+        state.task_count,
+        np.bincount(state.assignment, minlength=state.phase.num_ranks))
+
+
+def test_mem_overhead_max_incremental_paths():
+    """apply_transfer's O(1)/rescan-on-demand mem_overhead_max upkeep is
+    bitwise the full scan on every structural path: receiver grows toward
+    the moved max, sender loses its maximum (rescan), sender empties
+    (pinned to 0.0), and a previously-empty receiver repopulates."""
+    phase = random_phase(21, num_ranks=4, num_tasks=24, num_blocks=4,
+                         num_comms=30, mem_cap=1e12)
+    state = CCMState.build(phase, initial_assignment(phase, "round_robin"),
+                           PARAMS)
+
+    # sender rescan: move rank 0's max-overhead task away (receiver grows)
+    r0 = np.nonzero(state.assignment == 0)[0]
+    top = r0[np.argmax(phase.task_overhead[r0])]
+    state.apply_transfer(np.array([top], np.int64), 0, 1)
+    _assert_overhead_bitwise(state)
+
+    # sender empties (elastic-shrink path): overhead pinned to 0.0
+    r2 = np.nonzero(state.assignment == 2)[0]
+    assert r2.size
+    state.apply_transfer(r2, 2, 3)
+    assert state.mem_overhead_max[2] == 0.0
+    _assert_overhead_bitwise(state)
+
+    # empty receiver repopulates: arriving max is taken outright
+    r3 = np.nonzero(state.assignment == 3)[0][:2]
+    state.apply_transfer(r3, 3, 2)
+    _assert_overhead_bitwise(state)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_mem_overhead_max_random_sweep_bitwise(seed):
+    """Random multi-task transfer/swap sequences, ending in a full rank
+    drain: incremental mem_overhead_max stays bitwise-equal to a
+    from-scratch rescan after every mutation."""
+    rng = np.random.default_rng(seed)
+    phase = random_phase(seed, num_ranks=5, num_tasks=40, num_blocks=6,
+                         num_comms=80, mem_cap=1e12)
+    state = CCMState.build(phase, initial_assignment(
+        phase, "home" if seed % 2 else "round_robin"), PARAMS)
+    engine = PhaseEngine(state)
+    for _ in range(8):
+        _random_transfer_sequence(state, engine, rng, n_moves=2)
+        _assert_overhead_bitwise(state)
+    occupied = np.unique(state.assignment)
+    r = int(occupied[0])
+    dest = int(occupied[-1]) if occupied.size > 1 else (r + 1) % 5
+    state.apply_transfer(np.nonzero(state.assignment == r)[0], r, dest)
+    assert state.mem_overhead_max[r] == 0.0
+    _assert_overhead_bitwise(state)
+
+
 # -------------------------------------------------------------- end to end
 @pytest.mark.parametrize("seed", range(4))
 def test_ccmlb_incremental_matches_rebuild_end_to_end(seed):

@@ -1,0 +1,363 @@
+"""Memory as a live, binding constraint (PR 10 OOM scenario suite).
+
+The pressure policy (repro/core/problem.py ``mem_headroom`` + the eq. 9
+barrier in the stage-1/stage-2 scoring) and the replication move
+vocabulary (repro/core/transfer.py ``memory_move_candidates``) must:
+
+  - resolve over-cap ranks by migration, de-replication (copy eviction)
+    or replication splits, never by silently landing tasks over a cap;
+  - refuse cleanly (zero transfers) when no feasible candidate exists;
+  - keep zero-pressure configs bitwise-identical to the legacy drivers;
+  - hold the memory-feasibility invariant through the transfer-log
+    replay gate in every driver (sync / async / pipeline) and through
+    crash recovery (spill-aware ``_recover_survivors``).
+"""
+import numpy as np
+import pytest
+
+from repro.core import CCMParams, CCMState, ccm_lb, random_phase
+from repro.core.async_sim import (FaultSpec, RankJoin, RecoveryOOMError,
+                                  ccm_lb_async)
+from repro.core.ccm import MEM_REL_TOL, effective_mem_cap
+from repro.core.pipeline import ccm_lb_pipeline
+from repro.core.problem import Phase, initial_assignment
+
+
+def _phase(task_load, task_mem, task_block, block_size, block_home,
+           mem_cap, n_ranks, task_overhead=None, mem_base=None):
+    k = len(task_load)
+    return Phase(
+        task_load=np.asarray(task_load, np.float64),
+        task_mem=np.asarray(task_mem, np.float64),
+        task_overhead=(np.zeros(k) if task_overhead is None
+                       else np.asarray(task_overhead, np.float64)),
+        task_block=np.asarray(task_block, np.int64),
+        block_size=np.asarray(block_size, np.float64),
+        block_home=np.asarray(block_home, np.int64),
+        comm_src=np.zeros(0, np.int64),
+        comm_dst=np.zeros(0, np.int64),
+        comm_vol=np.zeros(0),
+        rank_mem_base=(np.zeros(n_ranks) if mem_base is None
+                       else np.asarray(mem_base, np.float64)),
+        rank_mem_cap=(np.asarray(mem_cap, np.float64)
+                      if np.ndim(mem_cap) else
+                      np.full(n_ranks, float(mem_cap))),
+    )
+
+
+def _assert_replay_and_feasible(phase, a0, res, params):
+    """The OOM-suite invariant gate: the transfer log replays onto the
+    initial assignment to the final one, and the final state satisfies
+    every rank's (headroom-scaled) memory cap."""
+    replay = a0.copy()
+    for tasks, r_from, r_to in res.transfer_log:
+        idx = np.array(tasks, np.int64)
+        assert (replay[idx] == r_from).all(), "replay diverged"
+        replay[idx] = r_to
+    np.testing.assert_array_equal(replay, res.assignment)
+    final = CCMState.build(phase, res.assignment, params)
+    for r in range(phase.num_ranks):
+        assert final.memory_feasible(r), f"rank {r} over its memory cap"
+
+
+# ------------------------------------------------ relative tolerance (sat 1)
+@pytest.mark.parametrize("scale", [1e-3, 1.0, 1e18])
+def test_feasibility_tolerance_is_relative(scale):
+    """The soft cap scales WITH the cap: half-a-relative-ulp over stays
+    feasible at every magnitude (the old absolute +1e-6 epsilon rejected
+    that at 1e18 bytes), and 1e-4 relative over is infeasible at every
+    magnitude (the old epsilon accepted it below ~1e-2 bytes)."""
+    cap = scale
+    assert effective_mem_cap(cap) == cap + MEM_REL_TOL * cap
+    params = CCMParams(memory_constraint=True)
+
+    within = _phase([1.0], [cap * (1.0 + 0.5 * MEM_REL_TOL)], [-1],
+                    [], [], cap, 1)
+    st = CCMState.build(within, np.zeros(1, np.int64), params)
+    assert st.memory_feasible(0)
+
+    over = _phase([1.0], [cap * (1.0 + 1e-4)], [-1], [], [], cap, 1)
+    st = CCMState.build(over, np.zeros(1, np.int64), params)
+    assert not st.memory_feasible(0)
+
+
+def test_effective_mem_cap_elementwise_and_inf():
+    caps = np.array([1.0, 1e18, np.inf])
+    eff = effective_mem_cap(caps)
+    assert eff[0] == 1.0 + MEM_REL_TOL
+    assert eff[1] == 1e18 + MEM_REL_TOL * 1e18
+    assert eff[2] == np.inf
+    p = CCMParams(mem_headroom=0.25)
+    assert effective_mem_cap(8.0, p) == 6.0 + MEM_REL_TOL * 6.0
+
+
+# -------------------------------------------------- replication splits wins
+def _hot_block_phase():
+    """A block-bound instance: rank 0 carries a 4-task shared-block
+    cluster (load 6.0 — exactly at the ``_split_by_load`` cap, so the
+    baseline clustering keeps it ATOMIC) plus three heavy singletons and
+    a light mover; rank 1 carries three heavy singletons.  Every
+    replication-free move is a wash (moving the block whole or swapping
+    heavies just trades 24 for 24), so the baseline is stuck; splitting
+    the block across both ranks — a replication move — is the only way
+    down."""
+    return _phase(
+        task_load=[1.5] * 4 + [6.0] * 6 + [0.5],
+        task_mem=[1.0] * 11,
+        task_block=[0] * 4 + [-1] * 7,
+        block_size=[10.0],
+        block_home=[0],
+        mem_cap=1e6, n_ranks=2)
+
+
+def _hot_block_a0():
+    return np.array([0] * 4 + [0] * 3 + [1] * 3 + [0], np.int64)
+
+
+def test_replication_split_beats_replication_free():
+    ph = _hot_block_phase()
+    params = CCMParams(alpha=1.0, beta=0.0, gamma=0.0, delta=0.0)
+    a0 = _hot_block_a0()
+    base = ccm_lb(ph, a0, params, n_iter=4, seed=0)
+    rep = ccm_lb(ph, a0, params, n_iter=4, seed=0, replicate=True)
+    # replication-free is stuck at the atomic-cluster bound (24 = the
+    # block riding whole with three heavies on one rank)
+    assert base.max_work[-1] >= 24.0 - 1e-9
+    assert rep.max_work[-1] <= base.max_work[-1] - 2.0
+    # the hot block is genuinely materialized on both ranks
+    assert int((rep.state.block_count[:, 0] > 0).sum()) == 2
+    _assert_replay_and_feasible(ph, a0, rep, params)
+    _assert_replay_and_feasible(ph, a0, base, params)
+
+
+def test_replicate_noop_is_bitwise_identical():
+    """No block has two tasks on one rank -> no replication candidates ->
+    replicate=True must reproduce replicate=False bit for bit."""
+    phase = random_phase(3, num_ranks=6, num_tasks=60, num_blocks=0,
+                         num_comms=120, mem_cap=1e12)
+    params = CCMParams(delta=1e-9)
+    a0 = initial_assignment(phase, "home")
+    ref = ccm_lb(phase, a0, params, n_iter=3, seed=1)
+    got = ccm_lb(phase, a0, params, n_iter=3, seed=1, replicate=True)
+    np.testing.assert_array_equal(got.assignment, ref.assignment)
+    assert got.transfers == ref.transfers
+    assert got.max_work == ref.max_work
+    assert got.transfer_log == ref.transfer_log
+
+
+def test_replicate_rejects_batched_and_spec_drivers():
+    ph = _hot_block_phase()
+    a0 = _hot_block_a0()
+    params = CCMParams()
+    with pytest.raises(ValueError, match="batch_lock_events"):
+        ccm_lb(ph, a0, params, replicate=True, batch_lock_events=8)
+    with pytest.raises(ValueError, match="spec_window"):
+        ccm_lb(ph, a0, params, replicate=True, spec_window=4)
+
+
+# ------------------------------------------------- eviction under pressure
+def test_dereplication_relieves_overloaded_rank():
+    """Rank 0 holds copies of blocks 0 and 1 and sits over its cap; block
+    1 also lives on rank 1.  The pressure barrier (work = inf) drives an
+    eviction: rank 0's block-1 tasks consolidate onto rank 1, the copy is
+    dropped, and rank 0 comes back under its cap."""
+    ph = _phase(task_load=[1.0, 1.0, 1.0, 1.0],
+                task_mem=[0.5, 0.5, 0.5, 0.5],
+                task_block=[0, 0, 1, 1],
+                block_size=[4.0, 4.0],
+                block_home=[0, 1],
+                mem_cap=[8.0, 20.0], n_ranks=2)
+    # tasks 0-2 on rank 0 (blocks 0 and 1 resident: 1.5 + 8 = 9.5 > 8),
+    # task 3 on rank 1 (block 1 resident there too).  Cap 8 makes the
+    # block-1 eviction (1.0 + 4 = 5.0) the ONLY feasibility-restoring
+    # move: shedding a single block-0 task leaves 1.0 + 8 = 9.0 > 8.
+    a0 = np.array([0, 0, 0, 1], np.int64)
+    params = CCMParams(alpha=1e-3, beta=0.0, gamma=0.0, delta=0.0)
+    st0 = CCMState.build(ph, a0, params)
+    assert not st0.memory_feasible(0)
+
+    res = ccm_lb(ph, a0, params, n_iter=4, seed=0, replicate=True)
+    assert res.state.block_count[0, 1] == 0     # copy evicted
+    _assert_replay_and_feasible(ph, a0, res, params)
+
+
+def test_refusal_when_no_feasible_candidate():
+    """Every rank over cap and no move can help: the balancer must refuse
+    (zero transfers), not thrash or land tasks over a cap."""
+    ph = _phase(task_load=[1.0, 1.0], task_mem=[5.0, 5.0],
+                task_block=[-1, -1], block_size=[], block_home=[],
+                mem_cap=2.0, n_ranks=2)
+    a0 = np.array([0, 1], np.int64)
+    params = CCMParams(alpha=1.0, beta=0.0, gamma=0.0, delta=0.0)
+    res = ccm_lb(ph, a0, params, n_iter=3, seed=0, replicate=True)
+    assert res.transfers == 0
+    np.testing.assert_array_equal(res.assignment, a0)
+    # still infeasible — reported, not hidden
+    assert not res.state.memory_feasible(0)
+
+
+# ---------------------------------------------------------- headroom policy
+def test_mem_headroom_forces_spread():
+    """Within the hard cap but inside the headroom band: the pressure
+    policy must migrate until every rank clears cap*(1-headroom)."""
+    ph = _phase(task_load=[0.0, 0.0], task_mem=[0.4, 0.4],
+                task_block=[-1, -1], block_size=[], block_home=[],
+                mem_cap=1.0, n_ranks=2)
+    a0 = np.zeros(2, np.int64)
+    soft = CCMParams(alpha=1.0, beta=0.0, gamma=0.0, delta=0.0,
+                     mem_headroom=0.3)
+    st0 = CCMState.build(ph, a0, soft)
+    assert not st0.memory_feasible(0)           # 0.8 > 0.7 soft cap
+    res = ccm_lb(ph, a0, soft, n_iter=3, seed=0)
+    assert res.transfers >= 1
+    _assert_replay_and_feasible(ph, a0, res, soft)
+
+    # headroom off: same config is feasible and must not move at all
+    hard = CCMParams(alpha=1.0, beta=0.0, gamma=0.0, delta=0.0)
+    quiet = ccm_lb(ph, a0, hard, n_iter=3, seed=0)
+    assert quiet.transfers == 0
+    np.testing.assert_array_equal(quiet.assignment, a0)
+
+
+# -------------------------------------------------------- async + pipeline
+def test_async_replicate_matches_sync_at_zero_latency():
+    ph = _hot_block_phase()
+    params = CCMParams(alpha=1.0, beta=0.0, gamma=0.0, delta=0.0)
+    a0 = _hot_block_a0()
+    ref = ccm_lb(ph, a0, params, n_iter=4, seed=0, replicate=True)
+    got = ccm_lb_async(ph, a0, params, n_iter=4, seed=0, replicate=True)
+    np.testing.assert_array_equal(got.assignment, ref.assignment)
+    assert got.transfer_log == ref.transfer_log
+    assert got.max_work == ref.max_work
+    _assert_replay_and_feasible(ph, a0, got, params)
+
+
+def test_pipeline_threads_replicate_through_lb_kwargs():
+    ph = _hot_block_phase()
+    params = CCMParams(alpha=1.0, beta=0.0, gamma=0.0, delta=0.0)
+    a0 = _hot_block_a0()
+    pipe = ccm_lb_pipeline([ph, ph], params, a0=a0, seed=0, n_iter=4,
+                           replicate=True)
+    for run in pipe.runs:
+        assert run.result.max_work[-1] <= 22.0
+        final = CCMState.build(ph, run.result.assignment, params)
+        for r in range(ph.num_ranks):
+            assert final.memory_feasible(r)
+
+
+# --------------------------------------------------- elastic shrink / join
+def test_recovery_spills_to_feasible_survivor():
+    """Rank 2 dies; rank 0 has no memory room, rank 1 plenty.  Stranded
+    groups warm-started onto rank 0 must spill to rank 1 (counted), and
+    the final state must satisfy every cap."""
+    ph = _phase(task_load=[0.1, 1.0, 1.0, 1.0, 1.0],
+                task_mem=[0.05, 1.0, 1.0, 1.0, 1.0],
+                task_block=[-1] * 5, block_size=[], block_home=[],
+                mem_cap=[0.1, 100.0, 100.0], n_ranks=3)
+    a0 = np.array([0, 2, 2, 2, 2], np.int64)
+    params = CCMParams(alpha=1.0, beta=0.0, gamma=0.0, delta=0.0)
+    res = ccm_lb_async(ph, a0, params, n_iter=3, seed=0,
+                       fault=FaultSpec(kill=((2, 0, 0.5),), seed=7))
+    assert res.dead_ranks == [2]
+    # the kill lands mid-iteration, so stage 2 may legitimately drain
+    # some of rank 2's tasks before death — only the remainder strands
+    assert res.fault_stats.recovered_tasks >= 1
+    assert res.fault_stats.recovery_spills >= 1
+    assert not (res.assignment == 2).any()
+    final = CCMState.build(ph, res.assignment, params)
+    for r in (0, 1):
+        assert final.memory_feasible(r)
+    _assert_replay_and_feasible(ph, a0, res, params)
+
+
+def test_recovery_raises_structured_oom_when_no_survivor_fits():
+    ph = _phase(task_load=[0.1, 1.0, 1.0],
+                task_mem=[0.05, 5.0, 5.0],
+                task_block=[-1] * 3, block_size=[], block_home=[],
+                mem_cap=[1.0, 100.0], n_ranks=2)
+    a0 = np.array([0, 1, 1], np.int64)
+    params = CCMParams(alpha=1.0, beta=0.0, gamma=0.0, delta=0.0)
+    with pytest.raises(RecoveryOOMError) as ei:
+        ccm_lb_async(ph, a0, params, n_iter=3, seed=0,
+                     fault=FaultSpec(kill=((1, 0, 0.5),), seed=7))
+    assert ei.value.dead_rank == 1
+    assert ei.value.overflow_bytes > 0
+    assert len(ei.value.tasks) >= 1
+
+
+def test_recovery_without_pressure_is_unchanged():
+    """All survivors feasible -> the spill path must not fire and the
+    migration sequence equals the unchecked warm start."""
+    phase = random_phase(5, num_ranks=6, num_tasks=48, num_blocks=6,
+                         num_comms=90, mem_cap=1e12)
+    params = CCMParams(delta=1e-9)
+    a0 = initial_assignment(phase, "home")
+    kw = dict(n_iter=3, seed=0, fault=FaultSpec(kill=((4, 1, 0.5),),
+                                                seed=3))
+    res = ccm_lb_async(phase, a0, params, **kw)
+    off = ccm_lb_async(phase, a0,
+                       CCMParams(delta=1e-9, memory_constraint=False),
+                       **kw)
+    assert res.fault_stats.recovery_spills == 0
+    assert res.recovery_log == off.recovery_log
+    np.testing.assert_array_equal(res.assignment, off.assignment)
+
+
+def test_join_relieves_memory_pressure():
+    """Both initial ranks sit over the soft cap with nowhere to go; a
+    mid-stream join brings capacity and the barrier drains tasks onto
+    the fresh rank until everyone fits."""
+    ph = _phase(task_load=[0.0] * 4, task_mem=[0.4] * 4,
+                task_block=[-1] * 4, block_size=[], block_home=[],
+                mem_cap=1.0, n_ranks=2)
+    a0 = np.array([0, 0, 1, 1], np.int64)
+    params = CCMParams(alpha=1.0, beta=0.0, gamma=0.0, delta=0.0,
+                       mem_headroom=0.3)
+    st0 = CCMState.build(ph, a0, params)
+    assert not st0.memory_feasible(0) and not st0.memory_feasible(1)
+
+    res = ccm_lb_async(ph, a0, params, n_iter=4, seed=0,
+                       membership=(RankJoin(1, 1, mem_cap=10.0),))
+    assert res.joined_ranks == [2]
+    assert (res.assignment == 2).any()
+    final = CCMState.build(res.state.phase, res.assignment, params)
+    for r in range(3):
+        assert final.memory_feasible(r)
+
+
+# -------------------------------------------------- expert serving plans
+def test_expert_placement_replication_becomes_real():
+    from repro import configs
+    from repro.balance import plan_expert_placement
+
+    cfg = configs.get_config("qwen3-moe-30b-a3b")
+    counts = np.full((2, 4), 50.0)
+    counts[:, 0] = 2000.0                       # one hot expert per layer
+    plan = plan_expert_placement(counts, cfg, 2, hbm_budget_bytes=1e12,
+                                 shards_per_expert=4, replicate=True,
+                                 quiesce_after=2)
+    sp = plan.serving
+    assert plan.replicated_blocks >= 1
+    assert sp.within_budget()
+    assert len(sp.replicated_experts) == plan.replicated_blocks
+    # routing shares: one row per (layer, expert), massed on the replicas
+    routed = sp.routing_shares.sum(axis=2)
+    np.testing.assert_allclose(routed, 1.0)
+    assert ((sp.routing_shares > 0) <= sp.replicas).all()
+    # the hot expert's copies actually split its traffic
+    l, e = sp.replicated_experts[0]
+    assert (sp.routing_shares[l, e] > 0).sum() > 1
+
+
+def test_expert_placement_unsharded_serving_is_single_copy():
+    from repro import configs
+    from repro.balance import plan_expert_placement
+
+    cfg = configs.get_config("qwen3-moe-30b-a3b")
+    rng = np.random.default_rng(0)
+    counts = rng.uniform(10.0, 100.0, size=(2, 4))
+    plan = plan_expert_placement(counts, cfg, 2, hbm_budget_bytes=1e12)
+    sp = plan.serving
+    assert plan.replicated_blocks == 0
+    assert (sp.replicas.sum(axis=2) == 1).all()
+    np.testing.assert_allclose(sp.routing_shares.sum(axis=2), 1.0)

@@ -97,6 +97,35 @@ def test_memory_constraint_changes_optimum():
     assert tight.objective >= loose.objective - 1e-9
 
 
+def test_constraint19_alignment_with_heuristic_gate():
+    """(19) RHS alignment: the MILP charges memory against the SAME
+    effective_mem_cap soft cap as the heuristic's feasibility gate
+    (headroom shaving + relative tolerance), so a MILP-feasible decode
+    always passes ``memory_feasible``.  The instance is built so the
+    unconstrained load optimum ({0} | {1,2,3}, W=3) carries 7 bytes on
+    one rank and violates the shaved cap of 6 — a looser RHS (the raw
+    hardware cap of 12) would return it and fail the gate."""
+    from repro.core.problem import Phase
+    phase = Phase(task_load=[3.0, 1.0, 1.0, 1.0],
+                  task_mem=[1.0, 3.0, 3.0, 1.0],
+                  task_overhead=[0.0] * 4,
+                  task_block=[-1] * 4,
+                  block_size=[], block_home=[],
+                  comm_src=[], comm_dst=[], comm_vol=[],
+                  rank_mem_base=[0.0, 0.0],
+                  rank_mem_cap=[12.0, 12.0])
+    params = CCMParams(alpha=1.0, beta=0., gamma=0., delta=0.,
+                       memory_constraint=True, mem_headroom=0.5)
+    # soft cap = 6: the memory-feasible optimum is {0,3} | {1,2} at W=4
+    for build in (build_comcp, build_fwmp_reduced):
+        res = solve_milp(build(phase, params), max_nodes=500)
+        assert res.status == "optimal"
+        assert res.objective == pytest.approx(4.0, abs=1e-8)
+        a = res.x[: 2 * 4].reshape(2, 4).argmax(0)
+        st = CCMState.build(phase, a, params)
+        assert all(st.memory_feasible(r) for r in range(2))
+
+
 def test_ccmlb_gap_vs_optimal_paper_style():
     """Paper Fig 4a: CCM-LB within a few percent of the certified optimum."""
     phase = random_phase(7, num_ranks=4, num_tasks=14, num_blocks=4,
